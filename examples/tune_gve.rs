@@ -1,0 +1,74 @@
+//! Tuning explorer: reproduce the *direction* of every §4.1 ablation on
+//! a chosen graph — the interactive companion to `bench fig2_optimizations`.
+//!
+//! ```bash
+//! cargo run --release --example tune_gve [-- --family web --scale 12]
+//! ```
+
+use gve_louvain::coordinator::metrics::fmt_ns;
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::params::{AggregationKind, TableKind};
+use gve_louvain::louvain::{gve::GveLouvain, LouvainParams};
+use gve_louvain::parallel::schedule::Schedule;
+
+fn arg(key: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() {
+    let family = GraphFamily::parse(&arg("--family", "web")).expect("bad family");
+    let scale: u32 = arg("--scale", "12").parse().expect("bad scale");
+    let g = generate(family, scale, 42);
+    println!("tuning on {}-s{scale}: {} vertices, {} edges\n", family.name(), g.num_vertices(), g.num_edges());
+
+    let base = LouvainParams::default();
+    let variants: Vec<(&str, LouvainParams)> = vec![
+        ("adopted (dynamic/20/0.01/drop10/τagg0.8/prune/FarKV/CSR)", base.clone()),
+        ("schedule=static", LouvainParams { schedule: Schedule::Static, ..base.clone() }),
+        ("schedule=guided", LouvainParams { schedule: Schedule::Guided, ..base.clone() }),
+        ("schedule=auto", LouvainParams { schedule: Schedule::Auto, ..base.clone() }),
+        ("max-iterations=100", LouvainParams { max_iterations: 100, ..base.clone() }),
+        ("tolerance-drop=1 (no scaling)", LouvainParams { tolerance_drop: 1.0, ..base.clone() }),
+        ("initial-tolerance=1e-6", LouvainParams { tolerance: 1e-6, ..base.clone() }),
+        ("aggregation-tolerance=1 (off)", LouvainParams { aggregation_tolerance: 1.0, ..base.clone() }),
+        ("pruning=off", LouvainParams { pruning: false, ..base.clone() }),
+        ("table=map", LouvainParams { table: TableKind::Map, ..base.clone() }),
+        ("table=close-kv", LouvainParams { table: TableKind::CloseKv, ..base.clone() }),
+        ("aggregation=2d-arrays", LouvainParams { aggregation: AggregationKind::TwoDim, ..base.clone() }),
+    ];
+
+    let mut table = Table::new("GVE-Louvain ablations (Fig 2 direction check)", &["variant", "time", "rel", "Q", "passes"]);
+    let mut base_ns = 0u64;
+    for (name, params) in variants {
+        // Median of 3 runs.
+        let mut times: Vec<u64> = (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                let _ = GveLouvain::new(params.clone()).run(&g);
+                t0.elapsed().as_nanos() as u64
+            })
+            .collect();
+        times.sort_unstable();
+        let med = times[1];
+        let out = GveLouvain::new(params).run(&g);
+        if base_ns == 0 {
+            base_ns = med;
+        }
+        table.row(vec![
+            name.into(),
+            fmt_ns(med),
+            format!("{:.2}", med as f64 / base_ns as f64),
+            format!("{:.4}", out.modularity),
+            format!("{}", out.passes),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\nrel > 1.0 means the variant is slower than the adopted config;");
+    println!("the paper's Fig 2 directions: map/2d/close-kv/no-pruning slower,");
+    println!("strict tolerances slower, schedules roughly comparable (1 core).");
+}

@@ -1,0 +1,87 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, one per tile class plus the modularity evaluator:
+
+  artifacts/louvain_scan_tv{TV}_md{MD}.hlo.txt
+  artifacts/modularity_c{C}.hlo.txt
+  artifacts/manifest.txt      name<TAB>kind<TAB>shape-params per line
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.louvain_scan import TILE_CLASSES
+
+MODULARITY_CHUNK = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the Rust
+    side unwraps with to_tuple{N}())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_move_step(tv: int, md: int) -> str:
+    specs = model.move_step_specs(tv, md)
+    return to_hlo_text(jax.jit(model.move_step).lower(*specs))
+
+
+def lower_modularity(c: int) -> str:
+    specs = model.modularity_specs(c)
+    return to_hlo_text(jax.jit(model.modularity_chunk).lower(*specs))
+
+
+def build_all(out_dir: str) -> list[tuple[str, str, str]]:
+    """Lower every artifact; returns manifest rows (file, kind, params)."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows: list[tuple[str, str, str]] = []
+    for tv, md in TILE_CLASSES:
+        name = f"louvain_scan_tv{tv}_md{md}.hlo.txt"
+        text = lower_move_step(tv, md)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        rows.append((name, "move_step", f"tv={tv} md={md}"))
+        print(f"wrote {name} ({len(text)} chars)")
+    name = f"modularity_c{MODULARITY_CHUNK}.hlo.txt"
+    text = lower_modularity(MODULARITY_CHUNK)
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(text)
+    rows.append((name, "modularity", f"c={MODULARITY_CHUNK}"))
+    print(f"wrote {name} ({len(text)} chars)")
+    return rows
+
+
+def write_manifest(out_dir: str, rows) -> None:
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, kind, params in rows:
+            f.write(f"{name}\t{kind}\t{params}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    rows = build_all(args.out_dir)
+    write_manifest(args.out_dir, rows)
+    print(f"manifest: {len(rows)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

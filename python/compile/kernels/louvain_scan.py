@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: the Louvain community-scan tile.
+
+This is the TPU re-expression of nu-Louvain's ``scanCommunities`` +
+best-community selection (paper Algorithm 5 lines 16-22, Algorithm 7).
+The CUDA version accumulates (community -> weight) in a per-vertex
+open-addressing hashtable probed by 32-thread warps.  TPUs have no
+per-lane scatter into scratchpad, so the scan is made *dense*
+(DESIGN.md §Hardware-Adaptation):
+
+  * one grid step processes one vertex row of the (TV, MD) tile;
+  * the hashtable accumulation becomes a compare one-hot matrix
+    ``C[l, k] = (comm_l == comm_k)`` contracted against the weight row —
+    an (1, MD) x (MD, MD) matmul, i.e. MXU work instead of irregular
+    probing;
+  * padding masks, self-community exclusion, delta-modularity and the
+    Pick-Less constraint are lane-wise VPU ops;
+  * the thread- vs block-per-vertex switch degree of the paper becomes
+    tile-class selection (MD in {32, 128, 512}) on the Rust side.
+
+VMEM footprint per grid step: 2*MD*4 B inputs + MD*MD*4 B compare matrix
+(1 MiB at MD=512), well inside a TPU core's ~16 MiB VMEM for all classes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO which both jax-CPU and
+the Rust PJRT client execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, PAD
+
+# Tile classes: (TV, MD) — mirrors the paper's two-kernel partitioning
+# (Figs 9-10).  Vertices are routed by degree to the smallest class that
+# fits; MD=32 plays the "thread-per-vertex" role, MD>=128 the
+# "block-per-vertex" role.
+TILE_CLASSES = ((256, 32), (64, 128), (16, 512))
+
+
+def _scan_kernel(nbr_comm_ref, nbr_wt_ref, self_comm_ref, ktot_ref,
+                 sigma_nbr_ref, sigma_self_ref, params_ref,
+                 best_comm_ref, best_dq_ref):
+    """One vertex row: dense community scan + masked argmax.
+
+    params_ref: f32[1, 2] = [m, pick_less_flag] (broadcast to every step).
+    """
+    comm = nbr_comm_ref[0, :]          # i32[MD]
+    wt = nbr_wt_ref[0, :]              # f32[MD]
+    self_comm = self_comm_ref[0]       # i32
+    ktot = ktot_ref[0]                 # f32
+    sigma_nbr = sigma_nbr_ref[0, :]    # f32[MD]
+    sigma_self = sigma_self_ref[0]     # f32
+    m = params_ref[0, 0]
+    pick_less = params_ref[0, 1] > 0.5
+
+    valid = comm != PAD
+    # Dense "hashtable": C[l, k] = slot l and slot k share a community.
+    same = (comm[:, None] == comm[None, :]) & valid[:, None]
+    # K_{i->c_k} = w . C  — the MXU contraction.
+    k_cand = jnp.dot((wt * valid).astype(jnp.float32),
+                     same.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)  # f32[MD]
+    k_self = jnp.sum(jnp.where(comm == self_comm, wt, 0.0) * valid)
+
+    dq = (k_cand - k_self) / m - ktot * (ktot + sigma_nbr - sigma_self) / (
+        2.0 * m * m)
+
+    admissible = valid & (comm != self_comm)
+    admissible = jnp.where(pick_less, admissible & (comm < self_comm),
+                           admissible)
+    masked = jnp.where(admissible, dq, NEG_INF)
+
+    best_idx = jnp.argmax(masked)
+    best_dq = masked[best_idx]
+    best_comm = jnp.where(best_dq <= NEG_INF / 2, self_comm, comm[best_idx])
+    best_comm_ref[0] = best_comm.astype(jnp.int32)
+    best_dq_ref[0] = best_dq.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self,
+                 params, interpret=True):
+    """Run the community-scan Pallas kernel over a (TV, MD) tile.
+
+    ``params`` is f32[1, 2] = [[m, pick_less_flag]].  Returns
+    (best_comm i32[TV], best_dq f32[TV]).
+    """
+    tv, md = nbr_comm.shape
+    grid = (tv,)
+    row2 = pl.BlockSpec((1, md), lambda v: (v, 0))
+    row1 = pl.BlockSpec((1,), lambda v: (v,))
+    scalar = pl.BlockSpec((1, 2), lambda v: (0, 0))
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[row2, row2, row1, row1, row2, row1, scalar],
+        out_specs=[row1, row1],
+        out_shape=[
+            jax.ShapeDtypeStruct((tv,), jnp.int32),
+            jax.ShapeDtypeStruct((tv,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self, params)
+
+
+def pack_params(m, pick_less):
+    """Host helper: pack (m, pick_less) into the kernel's params array."""
+    return jnp.asarray([[float(m), 1.0 if pick_less else 0.0]], jnp.float32)

@@ -1,0 +1,142 @@
+"""Pure-jnp oracle for the Louvain community-scan tile.
+
+This is the CORRECTNESS reference for the Pallas kernel in
+``louvain_scan.py``.  It implements the same tile contract with plain
+vectorized jax.numpy (no pallas), using the delta-modularity formula of
+the paper (Eq. 2):
+
+    dQ_{i: d->c} = (1/m) (K_{i->c} - K_{i->d})
+                 - K_i / (2 m^2) (K_i + Sigma_c - Sigma_d)
+
+Tile contract (one tile = TV vertices, degree padded to MD slots):
+
+  nbr_comm   i32[TV, MD]  community id of each neighbour slot (-1 = padding)
+  nbr_wt     f32[TV, MD]  edge weight of each slot (0 for padding; the host
+                          zeroes self-loops when building local-moving tiles)
+  self_comm  i32[TV]      current community of the tile vertex
+  ktot       f32[TV]      weighted degree K_i of the tile vertex
+  sigma_nbr  f32[TV, MD]  Sigma_c of each candidate slot's community,
+                          gathered host-side before the call
+  sigma_self f32[TV]      Sigma_d of the vertex's current community
+  m          f32          total edge weight of the graph
+  pick_less  bool         Pick-Less mode: only allow moves to a community
+                          with a *smaller* id than the current one
+
+Returns:
+
+  best_comm  i32[TV]  the community maximizing dQ (current community when no
+                      admissible candidate exists)
+  best_dq    f32[TV]  the corresponding dQ (NEG_INF when no candidate)
+
+Tie-break: the first maximal slot in neighbour order (argmax semantics);
+the Rust tile builders use the same slot order so results round-trip.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel for "no admissible candidate".  Finite so it survives f32
+# round-trips through HLO literals.
+NEG_INF = np.float32(-3.0e38)
+
+PAD = -1  # padding community id
+
+
+def scan_tile_ref(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self,
+                  m, pick_less):
+    """Vectorized reference scan over a whole tile. Returns (best_comm, best_dq)."""
+    nbr_comm = jnp.asarray(nbr_comm, jnp.int32)
+    nbr_wt = jnp.asarray(nbr_wt, jnp.float32)
+    self_comm = jnp.asarray(self_comm, jnp.int32)
+    ktot = jnp.asarray(ktot, jnp.float32)
+    sigma_nbr = jnp.asarray(sigma_nbr, jnp.float32)
+    sigma_self = jnp.asarray(sigma_self, jnp.float32)
+    m = jnp.float32(m)
+
+    valid = nbr_comm != PAD  # [TV, MD]
+    # K_{i->c_k}: total weight of slots sharing slot k's community.
+    same = (nbr_comm[:, :, None] == nbr_comm[:, None, :]) & valid[:, :, None]
+    k_cand = jnp.einsum("vl,vlk->vk",
+                        nbr_wt * valid, same.astype(jnp.float32))
+    # K_{i->d}: weight to the current community.
+    to_self = (nbr_comm == self_comm[:, None]) & valid
+    k_self = jnp.sum(nbr_wt * to_self, axis=1)  # [TV]
+
+    dq = (k_cand - k_self[:, None]) / m - (
+        ktot[:, None]
+        * (ktot[:, None] + sigma_nbr - sigma_self[:, None])
+        / (2.0 * m * m)
+    )
+
+    admissible = valid & (nbr_comm != self_comm[:, None])
+    admissible = jnp.where(pick_less,
+                           admissible & (nbr_comm < self_comm[:, None]),
+                           admissible)
+
+    masked = jnp.where(admissible, dq, NEG_INF)
+    best_idx = jnp.argmax(masked, axis=1)  # first max in slot order
+    best_dq = jnp.take_along_axis(masked, best_idx[:, None], axis=1)[:, 0]
+    best_comm = jnp.take_along_axis(nbr_comm, best_idx[:, None], axis=1)[:, 0]
+    # No admissible candidate -> stay put.
+    none = best_dq <= NEG_INF / 2
+    best_comm = jnp.where(none, self_comm, best_comm)
+    return best_comm.astype(jnp.int32), best_dq.astype(jnp.float32)
+
+
+def scan_tile_ref_loop(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                       sigma_self, m, pick_less):
+    """Scalar-loop numpy reference (slow, maximally independent).
+
+    Used by tests to cross-check both the vectorized reference and the
+    Pallas kernel; mirrors the per-thread hashtable scan of GVE-Louvain.
+    """
+    nbr_comm = np.asarray(nbr_comm, np.int32)
+    nbr_wt = np.asarray(nbr_wt, np.float32)
+    self_comm = np.asarray(self_comm, np.int32)
+    ktot = np.asarray(ktot, np.float32)
+    sigma_nbr = np.asarray(sigma_nbr, np.float32)
+    sigma_self = np.asarray(sigma_self, np.float32)
+    tv, md = nbr_comm.shape
+    out_c = np.empty(tv, np.int32)
+    out_q = np.empty(tv, np.float32)
+    m = np.float32(m)
+    for v in range(tv):
+        # Accumulate K_{i->c} per distinct community (the "hashtable").
+        acc: dict = {}
+        for l in range(md):
+            c = int(nbr_comm[v, l])
+            if c == PAD:
+                continue
+            acc[c] = np.float32(acc.get(c, np.float32(0.0)) + nbr_wt[v, l])
+        k_self = acc.get(int(self_comm[v]), np.float32(0.0))
+        best_q = NEG_INF
+        best_c = int(self_comm[v])
+        for l in range(md):  # slot order defines the tie-break
+            c = int(nbr_comm[v, l])
+            if c == PAD or c == int(self_comm[v]):
+                continue
+            if pick_less and c >= int(self_comm[v]):
+                continue
+            dq = np.float32(
+                np.float32(acc[c] - k_self) / m
+                - ktot[v] * (ktot[v] + sigma_nbr[v, l] - sigma_self[v])
+                / np.float32(2.0 * m * m)
+            )
+            if dq > best_q:
+                best_q, best_c = dq, c
+        out_c[v], out_q[v] = best_c, best_q
+    return out_c, out_q
+
+
+def modularity_ref(sigma, big_sigma, m):
+    """Partial modularity over a chunk of communities (Eq. 1).
+
+    Q_chunk = sum_c [ sigma_c / (2m) - (Sigma_c / (2m))^2 ]; the host sums
+    chunks. Zero-padded entries contribute 0.
+    """
+    sigma = np.asarray(sigma, np.float64)
+    big_sigma = np.asarray(big_sigma, np.float64)
+    m = float(m)
+    return float(np.sum(sigma / (2 * m) - (big_sigma / (2 * m)) ** 2))

@@ -1,0 +1,83 @@
+"""L2: the jax compute graph around the Pallas community-scan kernel.
+
+Two AOT-exported entry points (both pure functions, fixed shapes so the
+Rust PJRT client compiles one executable per tile class):
+
+  * ``move_step`` — one lock-step local-moving step over a tile: the
+    Pallas scan picks each vertex's best community, then the step is
+    post-processed *in-graph*: moves with non-positive dQ are rejected
+    and the total accepted delta-modularity of the tile is reduced.
+    Outputs: (best_comm i32[TV], best_dq f32[TV], accept i32[TV],
+    dq_total f32[1]).
+  * ``modularity_chunk`` — partial modularity over a zero-padded chunk
+    of communities (Eq. 1), reduced in f32 on-device, summed on host.
+
+The Rust coordinator owns everything else (tiles, Sigma bookkeeping,
+convergence, aggregation): Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.louvain_scan import louvain_scan, pack_params  # noqa: F401
+from .kernels.ref import NEG_INF
+
+
+def move_step(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self,
+              params):
+    """One lock-step tile move step. See module docstring for the contract."""
+    best_comm, best_dq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot,
+                                      sigma_nbr, sigma_self, params)
+    # Accept only strictly-improving moves to a different community
+    # (Algorithm 2 line 10 / Algorithm 5 line 23).
+    accept = (best_dq > 0.0) & (best_comm != self_comm)
+    dq_total = jnp.sum(jnp.where(accept, best_dq, 0.0), dtype=jnp.float32)
+    out_comm = jnp.where(accept, best_comm, self_comm).astype(jnp.int32)
+    return (out_comm,
+            best_dq.astype(jnp.float32),
+            accept.astype(jnp.int32),
+            dq_total.reshape((1,)))
+
+
+def modularity_chunk(sigma, big_sigma, minv):
+    """Partial modularity of a community chunk.
+
+    sigma:    f32[C] total intra-community edge weight (sigma_c)
+    big_sigma:f32[C] total edge weight associated with c (Sigma_c)
+    minv:     f32[1] = [1 / (2m)]
+    Returns f32[1]: sum_c sigma_c/(2m) - (Sigma_c/(2m))^2.
+    """
+    s = sigma * minv[0]
+    t = big_sigma * minv[0]
+    return jnp.sum(s - t * t, dtype=jnp.float32).reshape((1,))
+
+
+def move_step_specs(tv, md):
+    """ShapeDtypeStructs for jit-lowering move_step at a tile class."""
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((tv, md), i32),   # nbr_comm
+        jax.ShapeDtypeStruct((tv, md), f32),   # nbr_wt
+        jax.ShapeDtypeStruct((tv,), i32),      # self_comm
+        jax.ShapeDtypeStruct((tv,), f32),      # ktot
+        jax.ShapeDtypeStruct((tv, md), f32),   # sigma_nbr
+        jax.ShapeDtypeStruct((tv,), f32),      # sigma_self
+        jax.ShapeDtypeStruct((1, 2), f32),     # params [m, pick_less]
+    )
+
+
+def modularity_specs(c):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((c,), f32),
+        jax.ShapeDtypeStruct((c,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+__all__ = [
+    "move_step", "modularity_chunk", "move_step_specs", "modularity_specs",
+    "pack_params", "NEG_INF",
+]

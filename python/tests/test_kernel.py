@@ -1,0 +1,217 @@
+"""Kernel vs reference: the CORE correctness signal of the L1 layer.
+
+The Pallas kernel (interpret=True) must agree with BOTH references:
+the vectorized jnp oracle and the scalar hashtable-style loop.
+Hypothesis sweeps shapes, degrees, community layouts and the pick-less
+flag; fixed edge cases pin the padding / tie / no-candidate semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.louvain_scan import TILE_CLASSES, louvain_scan, pack_params
+from compile.kernels.ref import (NEG_INF, PAD, scan_tile_ref,
+                                 scan_tile_ref_loop)
+
+RNG = np.random.default_rng(42)
+
+
+def random_tile(tv, md, ncomm, m=64.0, density=0.7, rng=RNG,
+                weights="uniform"):
+    """Random tile with PAD-terminated rows and community-consistent sigma."""
+    deg = rng.integers(0, int(md * density) + 1, size=tv)
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    sigma = (rng.uniform(1.0, 2 * m, size=ncomm)).astype(np.float32)
+    sigma_nbr = np.zeros((tv, md), np.float32)
+    for v in range(tv):
+        d = int(deg[v])
+        cs = rng.integers(0, ncomm, size=d).astype(np.int32)
+        nbr_comm[v, :d] = cs
+        if weights == "uniform":
+            nbr_wt[v, :d] = 1.0
+        else:
+            nbr_wt[v, :d] = rng.uniform(0.25, 4.0, size=d).astype(np.float32)
+        sigma_nbr[v, :d] = sigma[cs]
+    self_comm = rng.integers(0, ncomm, size=tv).astype(np.int32)
+    ktot = nbr_wt.sum(axis=1).astype(np.float32)
+    sigma_self = sigma[self_comm]
+    return (nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self)
+
+
+def run_all(tile, m, pick_less):
+    nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self = tile
+    params = pack_params(m, pick_less)
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                          sigma_self, params)
+    rc, rq = scan_tile_ref(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                           sigma_self, m, pick_less)
+    return (np.asarray(kc), np.asarray(kq)), (np.asarray(rc), np.asarray(rq))
+
+
+def assert_matches(k, r, tile, m, pick_less, loop_check=False):
+    (kc, kq), (rc, rq) = k, r
+    np.testing.assert_allclose(kq, rq, rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(kc, rc)
+    if loop_check:
+        lc, lq = scan_tile_ref_loop(*tile, m, pick_less)
+        # dq values must match; community choice may differ only on exact
+        # f32 ties, which the constructions here avoid.
+        np.testing.assert_allclose(kq, lq, rtol=2e-4, atol=2e-5)
+        np.testing.assert_array_equal(kc, lc)
+
+
+@pytest.mark.parametrize("tv,md", TILE_CLASSES)
+@pytest.mark.parametrize("pick_less", [False, True])
+def test_kernel_matches_ref_all_classes(tv, md, pick_less):
+    tile = random_tile(tv, md, ncomm=max(4, tv // 4))
+    k, r = run_all(tile, 64.0, pick_less)
+    assert_matches(k, r, tile, 64.0, pick_less, loop_check=(md <= 128))
+
+
+@pytest.mark.parametrize("weights", ["uniform", "random"])
+def test_kernel_weighted_edges(weights):
+    tile = random_tile(64, 32, ncomm=8, weights=weights)
+    k, r = run_all(tile, 32.0, False)
+    assert_matches(k, r, tile, 32.0, False, loop_check=True)
+
+
+def test_all_padding_rows_stay_put():
+    tv, md = 16, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    self_comm = np.arange(tv, dtype=np.int32)
+    ktot = np.zeros(tv, np.float32)
+    sigma = np.zeros((tv, md), np.float32)
+    sigma_self = np.zeros(tv, np.float32)
+    params = pack_params(10.0, False)
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma, sigma_self,
+                          params)
+    np.testing.assert_array_equal(np.asarray(kc), self_comm)
+    assert np.all(np.asarray(kq) <= NEG_INF / 2)
+
+
+def test_all_neighbours_in_own_community_stay_put():
+    tv, md = 8, 32
+    nbr_comm = np.zeros((tv, md), np.int32)  # everyone in community 0
+    nbr_wt = np.ones((tv, md), np.float32)
+    self_comm = np.zeros(tv, np.int32)
+    ktot = nbr_wt.sum(axis=1)
+    sigma = np.full((tv, md), 40.0, np.float32)
+    sigma_self = np.full(tv, 40.0, np.float32)
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma, sigma_self,
+                          pack_params(100.0, False))
+    np.testing.assert_array_equal(np.asarray(kc), self_comm)
+    assert np.all(np.asarray(kq) <= NEG_INF / 2)
+
+
+def test_pick_less_only_moves_down():
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        tile = random_tile(64, 32, ncomm=16, rng=rng)
+        (kc, kq), _ = run_all(tile, 48.0, True)
+        self_comm = tile[2]
+        moved = kc != self_comm
+        assert np.all(kc[moved] < self_comm[moved])
+
+
+def test_pick_less_false_allows_up_moves():
+    # Construct a vertex whose only improving move is to a *larger* id.
+    tv, md = 4, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    nbr_comm[:, :4] = 7  # strong pull to community 7
+    nbr_wt[:, :4] = 2.0
+    self_comm = np.zeros(tv, np.int32)
+    ktot = nbr_wt.sum(axis=1)
+    sigma_nbr = np.where(nbr_comm == 7, 4.0, 0.0).astype(np.float32)
+    sigma_self = np.full(tv, 1.0, np.float32)
+    m = 50.0
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                          sigma_self, pack_params(m, False))
+    assert np.all(np.asarray(kc) == 7)
+    assert np.all(np.asarray(kq) > 0)
+    kc2, _ = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                          sigma_self, pack_params(m, True))
+    np.testing.assert_array_equal(np.asarray(kc2), self_comm)  # blocked
+
+
+def test_self_community_excluded_from_candidates():
+    tv, md = 4, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    nbr_comm[:, :8] = 3
+    nbr_wt[:, :8] = 1.0
+    self_comm = np.full(tv, 3, np.int32)  # already in community 3
+    ktot = nbr_wt.sum(axis=1)
+    sigma_nbr = np.full((tv, md), 16.0, np.float32)
+    sigma_self = np.full(tv, 16.0, np.float32)
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                          sigma_self, pack_params(20.0, False))
+    np.testing.assert_array_equal(np.asarray(kc), self_comm)
+
+
+def test_tie_break_first_slot():
+    # Two equally-good candidate communities; argmax must take the first.
+    tv, md = 1, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    nbr_comm[0, 0], nbr_comm[0, 1] = 5, 9
+    nbr_wt[0, 0] = nbr_wt[0, 1] = 1.0
+    self_comm = np.zeros(tv, np.int32)
+    ktot = nbr_wt.sum(axis=1)
+    sigma_nbr = np.full((tv, md), 3.0, np.float32)
+    sigma_self = np.zeros(tv, np.float32)
+    kc, _ = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                         sigma_self, pack_params(10.0, False))
+    assert int(kc[0]) == 5
+
+
+def test_duplicate_community_slots_accumulate():
+    # K_{i->c} must sum across *all* slots of community c (the dense
+    # hashtable semantics), not just the argmax slot.
+    tv, md = 1, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    nbr_comm[0, :3] = 2          # community 2 via three slots, total w=3
+    nbr_wt[0, :3] = 1.0
+    nbr_comm[0, 3] = 4           # community 4 via one slot, w=2
+    nbr_wt[0, 3] = 2.0
+    self_comm = np.zeros(tv, np.int32)
+    ktot = nbr_wt.sum(axis=1)
+    sigma_nbr = np.full((tv, md), 1.0, np.float32)
+    sigma_self = np.zeros(tv, np.float32)
+    kc, kq = louvain_scan(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                          sigma_self, pack_params(10.0, False))
+    assert int(kc[0]) == 2  # 3.0 accumulated beats 2.0
+    lc, lq = scan_tile_ref_loop(nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr,
+                                sigma_self, 10.0, False)
+    np.testing.assert_allclose(np.asarray(kq), lq, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tv=st.integers(1, 24),
+    md=st.sampled_from([8, 16, 32, 64]),
+    ncomm=st.integers(1, 12),
+    pick_less=st.booleans(),
+    m=st.floats(4.0, 512.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(tv, md, ncomm, pick_less, m, seed):
+    rng = np.random.default_rng(seed)
+    tile = random_tile(tv, md, ncomm, m=m, rng=rng, weights="random")
+    k, r = run_all(tile, m, pick_less)
+    assert_matches(k, r, tile, m, pick_less, loop_check=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.0, 1.0))
+def test_kernel_density_sweep(seed, density):
+    rng = np.random.default_rng(seed)
+    tile = random_tile(32, 32, 8, density=density, rng=rng)
+    k, r = run_all(tile, 64.0, False)
+    assert_matches(k, r, tile, 64.0, False)

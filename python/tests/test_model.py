@@ -1,0 +1,113 @@
+"""L2 model semantics: move_step acceptance logic + modularity evaluator."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import PAD, modularity_ref
+from tests.test_kernel import random_tile
+
+
+def test_move_step_accepts_only_positive_dq():
+    tile = random_tile(64, 32, ncomm=8)
+    params = model.pack_params(64.0, False)
+    out_comm, dq, accept, dq_total = model.move_step(*tile, params)
+    out_comm, dq, accept = map(np.asarray, (out_comm, dq, accept))
+    self_comm = tile[2]
+    moved = out_comm != self_comm
+    assert np.array_equal(moved, np.asarray(accept, bool))
+    assert np.all(dq[moved] > 0)
+    np.testing.assert_allclose(
+        float(np.asarray(dq_total)[0]), dq[moved].sum(), rtol=1e-4)
+
+
+def test_move_step_rejects_keeps_membership():
+    # A tile where every vertex is best off staying: singleton communities
+    # with huge Sigma penalty for any move.
+    tv, md = 16, 32
+    nbr_comm = np.full((tv, md), PAD, np.int32)
+    nbr_wt = np.zeros((tv, md), np.float32)
+    nbr_comm[:, 0] = 1
+    nbr_wt[:, 0] = 0.001
+    self_comm = np.zeros(tv, np.int32)
+    ktot = np.full(tv, 10.0, np.float32)
+    sigma_nbr = np.full((tv, md), 1e6, np.float32)  # huge target community
+    sigma_self = np.zeros(tv, np.float32)
+    params = model.pack_params(100.0, False)
+    out_comm, _, accept, dq_total = model.move_step(
+        nbr_comm, nbr_wt, self_comm, ktot, sigma_nbr, sigma_self, params)
+    np.testing.assert_array_equal(np.asarray(out_comm), self_comm)
+    assert np.asarray(accept).sum() == 0
+    assert float(np.asarray(dq_total)[0]) == 0.0
+
+
+def test_move_step_pick_less_respected():
+    tile = random_tile(128, 32, ncomm=32)
+    params = model.pack_params(64.0, True)
+    out_comm, _, accept, _ = model.move_step(*tile, params)
+    out_comm = np.asarray(out_comm)
+    self_comm = tile[2]
+    moved = out_comm != self_comm
+    assert np.all(out_comm[moved] < self_comm[moved])
+
+
+def test_modularity_chunk_matches_ref():
+    rng = np.random.default_rng(7)
+    c, m = 256, 500.0
+    sigma = rng.uniform(0, 50, c).astype(np.float32)
+    big = (sigma + rng.uniform(0, 50, c)).astype(np.float32)
+    minv = np.asarray([1.0 / (2 * m)], np.float32)
+    got = float(np.asarray(model.modularity_chunk(sigma, big, minv))[0])
+    want = modularity_ref(sigma, big, m)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_modularity_zero_padding_is_noop():
+    sigma = np.zeros(64, np.float32)
+    big = np.zeros(64, np.float32)
+    sigma[:4] = [4, 3, 2, 1]
+    big[:4] = [8, 6, 4, 2]
+    minv = np.asarray([1.0 / 40.0], np.float32)
+    full = float(np.asarray(model.modularity_chunk(sigma, big, minv))[0])
+    short = float(np.asarray(
+        model.modularity_chunk(sigma[:4], big[:4], minv))[0])
+    np.testing.assert_allclose(full, short, rtol=1e-6)
+
+
+def test_modularity_perfect_partition_bounds():
+    # One community holding all edges: Q = 1/2 - 1/4 = 0.25 for
+    # sigma = m, Sigma = 2m... sanity of sign and range.
+    m = 100.0
+    sigma = np.asarray([m], np.float32)         # all weight internal
+    big = np.asarray([2 * m], np.float32)
+    minv = np.asarray([1.0 / (2 * m)], np.float32)
+    q = float(np.asarray(model.modularity_chunk(sigma, big, minv))[0])
+    assert -0.5 <= q <= 1.0
+    np.testing.assert_allclose(q, 0.5 - 1.0, rtol=1e-6)  # single community
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), c=st.integers(1, 512),
+       m=st.floats(1.0, 1e4))
+def test_modularity_chunk_hypothesis(seed, c, m):
+    rng = np.random.default_rng(seed)
+    sigma = rng.uniform(0, m, c).astype(np.float32)
+    big = (sigma + rng.uniform(0, m, c)).astype(np.float32)
+    minv = np.asarray([1.0 / (2 * m)], np.float32)
+    got = float(np.asarray(model.modularity_chunk(sigma, big, minv))[0])
+    want = modularity_ref(sigma, big, m)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_move_step_dq_total_consistent(seed):
+    rng = np.random.default_rng(seed)
+    tile = random_tile(32, 16, ncomm=6, rng=rng, weights="random")
+    params = model.pack_params(32.0, False)
+    _, dq, accept, dq_total = model.move_step(*tile, params)
+    dq, accept = np.asarray(dq), np.asarray(accept, bool)
+    np.testing.assert_allclose(float(np.asarray(dq_total)[0]),
+                               dq[accept].sum(), rtol=1e-4, atol=1e-6)

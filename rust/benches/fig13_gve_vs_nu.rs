@@ -1,0 +1,68 @@
+//! Fig 13 a/b/c: ν-Louvain vs GVE-Louvain — the paper's headline.
+//!
+//! Paper: ν achieves only ~1.03× average speedup over GVE (and is
+//! *faster on road networks*), with 0.5% lower modularity; sk-2005
+//! OOMs. The occupancy column shows why: later passes starve the GPU.
+
+use gve_louvain::baselines::System;
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::{fmt_ns, geomean};
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::runner::compare_on_entry;
+use gve_louvain::coordinator::suite::SUITE;
+use gve_louvain::gpusim::{NuLouvain, NuParams};
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let mut t = Table::new(
+        "Fig 13: GVE-Louvain vs ν-Louvain per graph",
+        &["graph", "family", "gve (modeled)", "nu (modeled)", "nu/gve speedup", "Q(gve)", "Q(nu)", "nu last-pass occ"],
+    );
+    let mut ratios = Vec::new();
+    let mut per_family: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    let mut qd = Vec::new();
+    for entry in &SUITE {
+        let cells = compare_on_entry(entry, offset, &[System::GveLouvain, System::NuLouvain], 1, 1, seed);
+        let gve = cells.iter().find(|c| c.system == System::GveLouvain).unwrap();
+        let nu = cells.iter().find(|c| c.system == System::NuLouvain).unwrap();
+        let speedup = match (gve.modeled_ns, nu.modeled_ns) {
+            (Some(a), Some(b)) if b > 0.0 => {
+                let r = a / b;
+                ratios.push(r);
+                per_family.entry(entry.family.name()).or_default().push(r);
+                format!("{r:.2}x")
+            }
+            _ => "OOM".into(),
+        };
+        qd.push((gve.modularity - nu.modularity) / gve.modularity.max(1e-9));
+        // Occupancy of the final pass from a direct simulator run.
+        let occ = {
+            let g = entry.graph(offset, seed);
+            let out = NuLouvain::new(NuParams::default()).run(&g);
+            out.pass_stats.last().map(|p| p.occupancy).unwrap_or(0.0)
+        };
+        t.row(vec![
+            entry.name.into(),
+            entry.family.name().into(),
+            gve.modeled_ns.map(|x| fmt_ns(x as u64)).unwrap_or_else(|| "OOM".into()),
+            nu.modeled_ns.map(|x| fmt_ns(x as u64)).unwrap_or_else(|| "OOM".into()),
+            speedup,
+            format!("{:.4}", gve.modularity),
+            format!("{:.4}", nu.modularity),
+            format!("{:.3}", occ),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nFig 13b summary:");
+    println!("  geomean nu/gve speedup: {:.2}x (paper: 1.03x)", geomean(&ratios));
+    for (fam, rs) in &per_family {
+        println!("    {fam:<7}: {:.2}x", geomean(rs));
+    }
+    println!(
+        "  mean modularity gap (gve - nu)/gve: {:.2}% (paper: 0.5%)",
+        100.0 * qd.iter().sum::<f64>() / qd.len() as f64
+    );
+    println!("\nPaper shapes: parity on average, ν best on road networks,");
+    println!("ν OOM on sk-2005, occupancy collapse in late passes.");
+}

@@ -1,0 +1,49 @@
+//! Fig 14: GVE-Louvain phase split (local-moving / aggregation / other)
+//! and pass split (first pass vs rest) per graph.
+//!
+//! Paper averages: 49% move / 35% aggregate / 16% other; 67% of runtime
+//! in the first pass; road/k-mer graphs spend more in later passes.
+
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::mean;
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::suite::SUITE;
+use gve_louvain::louvain::{gve::GveLouvain, LouvainParams};
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let mut t = Table::new(
+        "Fig 14: GVE-Louvain phase and pass split",
+        &["graph", "family", "move%", "agg%", "other%", "pass1%", "passes"],
+    );
+    let (mut mvs, mut ags, mut others, mut firsts) = (vec![], vec![], vec![], vec![]);
+    for entry in &SUITE {
+        let g = entry.graph(offset, seed);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        let (mv, ag, other) = out.phase_split();
+        let first = out.first_pass_fraction();
+        t.row(vec![
+            entry.name.into(),
+            entry.family.name().into(),
+            format!("{:.0}", mv * 100.0),
+            format!("{:.0}", ag * 100.0),
+            format!("{:.0}", other * 100.0),
+            format!("{:.0}", first * 100.0),
+            format!("{}", out.passes),
+        ]);
+        mvs.push(mv);
+        ags.push(ag);
+        others.push(other);
+        firsts.push(first);
+    }
+    print!("{}", t.render());
+    println!(
+        "\naverages: {:.0}% move / {:.0}% aggregate / {:.0}% other; {:.0}% in pass 1",
+        mean(&mvs) * 100.0,
+        mean(&ags) * 100.0,
+        mean(&others) * 100.0,
+        mean(&firsts) * 100.0
+    );
+    println!("(paper: 49% / 35% / 16%; 67% in the first pass)");
+}

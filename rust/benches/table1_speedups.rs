@@ -1,0 +1,49 @@
+//! Table 1: GVE-Louvain's speedup over the five comparison systems.
+//!
+//! Modeled times (CPU: 32-core projection; GPU: A100 device model) are
+//! geometric-mean-aggregated across the suite, matching the paper's
+//! aggregation. Absolute factors are shape targets (DESIGN.md §2).
+
+use gve_louvain::baselines::System;
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::runner::{compare_on_entry, mean_speedup, ComparisonCell};
+use gve_louvain::coordinator::suite::SUITE;
+
+fn main() {
+    let offset = bench_scale_offset();
+    let seed = bench_seed();
+    let systems = [
+        System::GveLouvain,
+        System::Vite,
+        System::Grappolo,
+        System::NetworKit,
+        System::Nido,
+        System::CuGraph,
+        System::NuLouvain,
+    ];
+    let mut cells: Vec<ComparisonCell> = Vec::new();
+    for entry in &SUITE {
+        cells.extend(compare_on_entry(entry, offset, &systems, 1, 1, seed));
+    }
+    let mut t = Table::new(
+        "Table 1: speedup of GVE-Louvain vs other implementations",
+        &["Louvain implementation", "Parallelism", "Our speedup", "Paper"],
+    );
+    for (sys, par, paper) in [
+        (System::Vite, "Multi node (1 node)", "50x"),
+        (System::Grappolo, "Multicore", "22x"),
+        (System::NetworKit, "Multicore", "20x"),
+        (System::Nido, "Multi GPU (1 GPU)", "56x"),
+        (System::CuGraph, "Multi GPU (1 GPU)", "5.8x"),
+        (System::NuLouvain, "GPU (ours)", "~1x"),
+    ] {
+        let s = mean_speedup(&cells, System::GveLouvain, sys)
+            .map(|x| format!("{x:.1}x"))
+            .unwrap_or_else(|| "OOM".into());
+        t.row(vec![sys.name().into(), par.into(), s, paper.into()]);
+    }
+    print!("{}", t.render());
+    println!("\nShape targets: Vite slowest CPU system by a large factor; Nido the");
+    println!("slowest GPU system; cuGraph the closest competitor; ν ≈ parity.");
+}

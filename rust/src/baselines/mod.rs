@@ -1,0 +1,172 @@
+//! Baseline Louvain implementations for the comparison studies
+//! (Table 1, Figs 11–12).
+//!
+//! The paper compares against released binaries of five systems; none
+//! run in this offline, GPU-less testbed, so each baseline is
+//! re-implemented with its *documented algorithmic signature*
+//! (DESIGN.md §5) on top of this crate's substrates.  The signatures —
+//! not absolute constants — are what produce each system's relative
+//! standing:
+//!
+//! | Baseline  | Signature |
+//! |-----------|-----------|
+//! | Vite      | synchronous double-buffered sweeps, map tables, threshold cycling, per-sweep collective overhead (distributed heritage) |
+//! | Grappolo  | greedy-coloring prepass, color-class-ordered sweeps, map tables, threshold scaling |
+//! | NetworKit | asynchronous PLM, Close-KV tables, move-until-quiet, no threshold scaling / pruning / aggregation tolerance |
+//! | cuGraph   | GPU sim, no Pick-Less, bounded iterations, RAPIDS-sized memory footprint (OOM gates) |
+//! | Nido      | GPU sim, batch-partitioned communities, Luby-style coloring, per-batch processing (quality loss) |
+
+pub mod common;
+pub mod cugraph;
+pub mod grappolo;
+pub mod networkit;
+pub mod nido;
+pub mod vite;
+
+use crate::graph::Csr;
+
+/// Which system a result came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum System {
+    GveLouvain,
+    NuLouvain,
+    Vite,
+    Grappolo,
+    NetworKit,
+    CuGraph,
+    Nido,
+}
+
+impl System {
+    pub fn name(self) -> &'static str {
+        match self {
+            System::GveLouvain => "gve-louvain",
+            System::NuLouvain => "nu-louvain",
+            System::Vite => "vite",
+            System::Grappolo => "grappolo",
+            System::NetworKit => "networkit",
+            System::CuGraph => "cugraph",
+            System::Nido => "nido",
+        }
+    }
+
+    pub fn is_gpu(self) -> bool {
+        matches!(self, System::NuLouvain | System::CuGraph | System::Nido)
+    }
+}
+
+/// Uniform result record for cross-system comparisons.
+#[derive(Clone, Debug)]
+pub struct BaselineOutcome {
+    pub system: System,
+    pub membership: Vec<u32>,
+    pub modularity: f64,
+    pub num_communities: usize,
+    pub passes: usize,
+    /// Measured wall time of this implementation on this host (1 core).
+    pub wall_ns: u64,
+    /// Modeled time on the paper's hardware (32-core Xeon for CPU
+    /// systems via work accounting, A100 via the device model for GPU
+    /// systems). `None` when the run would OOM (excluded in the paper's
+    /// figures too).
+    pub modeled_ns: Option<u64>,
+}
+
+/// Run a baseline by kind with its adopted configuration.
+pub fn run_system(system: System, g: &Csr, threads: usize, seed: u64) -> BaselineOutcome {
+    match system {
+        System::GveLouvain => gve_outcome(g, threads),
+        System::NuLouvain => nu_outcome(g),
+        System::Vite => vite::run(g, threads, seed),
+        System::Grappolo => grappolo::run(g, threads, seed),
+        System::NetworKit => networkit::run(g, threads, seed),
+        System::CuGraph => cugraph::run(g, seed),
+        System::Nido => nido::run(g, seed),
+    }
+}
+
+/// GVE-Louvain wrapped in the uniform record.
+pub fn gve_outcome(g: &Csr, threads: usize) -> BaselineOutcome {
+    use crate::louvain::{gve::GveLouvain, params::LouvainParams};
+    let t0 = std::time::Instant::now();
+    let out = GveLouvain::new(LouvainParams::with_threads(threads)).run(g);
+    let wall = t0.elapsed().as_nanos() as u64;
+    BaselineOutcome {
+        system: System::GveLouvain,
+        modeled_ns: Some(common::cpu_modeled_ns(wall, threads, 32)),
+        membership: out.membership,
+        modularity: out.modularity,
+        num_communities: out.num_communities,
+        passes: out.passes,
+        wall_ns: wall,
+    }
+}
+
+/// ν-Louvain wrapped in the uniform record.
+pub fn nu_outcome(g: &Csr) -> BaselineOutcome {
+    use crate::gpusim::{NuLouvain, NuParams};
+    let t0 = std::time::Instant::now();
+    let out = NuLouvain::new(NuParams::default()).run(g);
+    let wall = t0.elapsed().as_nanos() as u64;
+    BaselineOutcome {
+        system: System::NuLouvain,
+        modeled_ns: if out.fits_memory { Some(out.est_gpu_ns) } else { None },
+        membership: out.membership,
+        modularity: out.modularity,
+        num_communities: out.num_communities,
+        passes: out.passes,
+        wall_ns: wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    #[test]
+    fn all_systems_run_and_find_structure() {
+        let g = generate(GraphFamily::Web, 9, 3);
+        for s in [
+            System::GveLouvain,
+            System::NuLouvain,
+            System::Vite,
+            System::Grappolo,
+            System::NetworKit,
+            System::CuGraph,
+            System::Nido,
+        ] {
+            let out = run_system(s, &g, 1, 42);
+            assert!(out.modularity > 0.3, "{s:?}: q={}", out.modularity);
+            assert!(out.num_communities > 1, "{s:?}");
+            assert_eq!(out.membership.len(), g.num_vertices(), "{s:?}");
+            assert!(out.wall_ns > 0);
+        }
+    }
+
+    #[test]
+    fn gve_beats_or_matches_baseline_quality_on_web() {
+        let g = generate(GraphFamily::Web, 10, 5);
+        let gve = run_system(System::GveLouvain, &g, 1, 42);
+        let nido = run_system(System::Nido, &g, 1, 42);
+        // Paper: GVE finds ~43-45% higher modularity than Nido.
+        assert!(gve.modularity >= nido.modularity, "gve={} nido={}", gve.modularity, nido.modularity);
+    }
+
+    #[test]
+    fn system_names_unique() {
+        let names: std::collections::BTreeSet<_> = [
+            System::GveLouvain,
+            System::NuLouvain,
+            System::Vite,
+            System::Grappolo,
+            System::NetworKit,
+            System::CuGraph,
+            System::Nido,
+        ]
+        .iter()
+        .map(|s| s.name())
+        .collect();
+        assert_eq!(names.len(), 7);
+    }
+}

@@ -1,0 +1,145 @@
+//! Benchmark harness (the offline registry has no criterion).
+//!
+//! Every `rust/benches/*.rs` target is a plain `main()` using
+//! [`BenchSet`]: named measurements with warmup + repeats, printed as a
+//! [`Table`](crate::coordinator::report::Table) whose rows mirror the
+//! corresponding paper table/figure.  `GVE_BENCH_SCALE` (env) shifts
+//! suite scales so CI can run quick versions.
+
+use crate::coordinator::metrics::{fmt_ns, geomean, median};
+use crate::coordinator::report::Table;
+use std::time::Instant;
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<u64>,
+    /// Optional quality metric attached to the run (e.g. modularity).
+    pub quality: Option<f64>,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> u64 {
+        median(&self.samples_ns.iter().map(|&x| x as f64).collect::<Vec<_>>()) as u64
+    }
+
+    pub fn geomean_ns(&self) -> f64 {
+        geomean(&self.samples_ns.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+}
+
+/// A collection of measurements with uniform repeat policy.
+pub struct BenchSet {
+    pub title: String,
+    pub warmup: usize,
+    pub repeats: usize,
+    pub measurements: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        let repeats = std::env::var("GVE_BENCH_REPEATS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        Self { title: title.to_string(), warmup: 1, repeats, measurements: Vec::new() }
+    }
+
+    /// Time `body` (returns an optional quality metric to record).
+    pub fn measure(&mut self, name: &str, mut body: impl FnMut() -> Option<f64>) {
+        for _ in 0..self.warmup {
+            let _ = body();
+        }
+        let mut samples = Vec::with_capacity(self.repeats);
+        let mut quality = None;
+        for _ in 0..self.repeats {
+            let t0 = Instant::now();
+            quality = body();
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        self.measurements.push(Measurement { name: name.to_string(), samples_ns: samples, quality });
+    }
+
+    /// Record an externally-computed value (modeled times).
+    pub fn record(&mut self, name: &str, ns: u64, quality: Option<f64>) {
+        self.measurements
+            .push(Measurement { name: name.to_string(), samples_ns: vec![ns], quality });
+    }
+
+    /// Render with runtimes relative to `baseline` (paper Fig 2 style).
+    pub fn table_relative(&self, baseline: &str) -> Table {
+        let base = self
+            .measurements
+            .iter()
+            .find(|m| m.name == baseline)
+            .map(|m| m.geomean_ns())
+            .unwrap_or(1.0);
+        let mut t = Table::new(&self.title, &["variant", "time", "relative", "quality"]);
+        for m in &self.measurements {
+            let g = m.geomean_ns();
+            t.row(vec![
+                m.name.clone(),
+                fmt_ns(g as u64),
+                format!("{:.3}", g / base.max(1.0)),
+                m.quality.map(|q| format!("{q:.4}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Render absolute times.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&self.title, &["case", "median", "geomean", "quality"]);
+        for m in &self.measurements {
+            t.row(vec![
+                m.name.clone(),
+                fmt_ns(m.median_ns()),
+                fmt_ns(m.geomean_ns() as u64),
+                m.quality.map(|q| format!("{q:.4}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+}
+
+/// Suite scale offset for benches (`GVE_BENCH_SCALE`, default -2:
+/// quick-but-representative sizes on this 1-core host).
+pub fn bench_scale_offset() -> i32 {
+    std::env::var("GVE_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(-2)
+}
+
+/// Bench seed (`GVE_BENCH_SEED`, default 42).
+pub fn bench_seed() -> u64 {
+    std::env::var("GVE_BENCH_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let mut b = BenchSet::new("t");
+        b.repeats = 2;
+        b.warmup = 0;
+        b.measure("noop", || {
+            std::hint::black_box(1 + 1);
+            Some(0.5)
+        });
+        assert_eq!(b.measurements.len(), 1);
+        assert_eq!(b.measurements[0].samples_ns.len(), 2);
+        assert_eq!(b.measurements[0].quality, Some(0.5));
+    }
+
+    #[test]
+    fn relative_table_has_baseline_one() {
+        let mut b = BenchSet::new("t");
+        b.record("base", 1000, None);
+        b.record("fast", 500, None);
+        let t = b.table_relative("base");
+        let rendered = t.render();
+        assert!(rendered.contains("1.000"));
+        assert!(rendered.contains("0.500"));
+    }
+}

@@ -1,0 +1,236 @@
+//! TOML-subset config parser (no serde/toml in the offline registry).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / flat arrays, `#` comments.  Enough for the
+//! experiment definitions in `configs/*.toml`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section → key → value ("" is the root section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let value = parse_value(v.trim()).with_context(|| format!("line {}", ln + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Fetch `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let cfg = Config::parse(
+            r#"
+# experiment
+name = "fig11"
+[run]
+threads = 4
+tolerance = 0.01
+pruning = true
+systems = ["gve-louvain", "vite"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_str("", "name", ""), "fig11");
+        assert_eq!(cfg.get_int("run", "threads", 0), 4);
+        assert_eq!(cfg.get_float("run", "tolerance", 0.0), 0.01);
+        assert!(cfg.get_bool("run", "pruning", false));
+        let arr = cfg.get("run", "systems").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_str(), Some("gve-louvain"));
+    }
+
+    #[test]
+    fn comments_and_hash_in_strings() {
+        let cfg = Config::parse("key = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(cfg.get_str("", "key", ""), "a#b");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_int("run", "threads", 7), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("key garbage\n").is_err());
+        assert!(Config::parse("key = [1, 2\n").is_err());
+        assert!(Config::parse("key = \"open\n").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let cfg = Config::parse("m = [[1, 2], [3]]\n").unwrap();
+        let outer = cfg.get("", "m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_int(), Some(2));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: configuration, the experiment runner, metrics and
+//! report generation — the operational shell around the algorithms.
+//!
+//! * [`suite`] — the 13-graph dataset mirroring Table 2 (name, family,
+//!   scale, paper-scale |V|/|E| for the OOM gates);
+//! * [`config`] — a TOML-subset parser for `configs/*.toml` experiment
+//!   definitions (offline registry has no serde/toml);
+//! * [`runner`] — cross-system comparison runs with repeats;
+//! * [`metrics`] — stopwatch + aggregate helpers (geomean et al.);
+//! * [`report`] — markdown / CSV emitters used by benches and the CLI.
+
+pub mod config;
+pub mod metrics;
+pub mod report;
+pub mod runner;
+pub mod suite;

@@ -1,0 +1,155 @@
+//! The experiment runner: cross-system comparison sweeps with repeats
+//! (the paper averages five runs per graph; geometric mean for runtime,
+//! arithmetic for modularity).
+
+use super::metrics::{geomean, mean};
+use super::suite::SuiteEntry;
+use crate::baselines::{run_system, BaselineOutcome, System};
+use crate::gpusim::DeviceModel;
+use crate::graph::Csr;
+
+/// One (graph × system) aggregate over repeats.
+#[derive(Clone, Debug)]
+pub struct ComparisonCell {
+    pub graph: &'static str,
+    pub system: System,
+    /// Geometric-mean modeled runtime (ns); `None` = OOM-excluded.
+    pub modeled_ns: Option<f64>,
+    /// Geometric-mean wall time on this host (ns).
+    pub wall_ns: f64,
+    /// Arithmetic-mean modularity.
+    pub modularity: f64,
+    pub num_communities: usize,
+    pub passes: usize,
+}
+
+/// Run `systems` on one suite graph with repeats.
+pub fn compare_on_entry(
+    entry: &SuiteEntry,
+    scale_offset: i32,
+    systems: &[System],
+    threads: usize,
+    repeats: usize,
+    seed: u64,
+) -> Vec<ComparisonCell> {
+    let g = entry.graph(scale_offset, seed);
+    compare_on_graph(&g, entry, systems, threads, repeats, seed)
+}
+
+/// Run `systems` on a prebuilt graph (caller controls generation).
+pub fn compare_on_graph(
+    g: &Csr,
+    entry: &SuiteEntry,
+    systems: &[System],
+    threads: usize,
+    repeats: usize,
+    seed: u64,
+) -> Vec<ComparisonCell> {
+    let dev = DeviceModel::default();
+    systems
+        .iter()
+        .map(|&system| {
+            let mut walls = Vec::new();
+            let mut modeled = Vec::new();
+            let mut qs = Vec::new();
+            let mut last: Option<BaselineOutcome> = None;
+            for r in 0..repeats.max(1) {
+                let out = run_system(system, g, threads, seed ^ (r as u64) << 32);
+                walls.push(out.wall_ns as f64);
+                if let Some(mns) = out.modeled_ns {
+                    modeled.push(mns as f64);
+                }
+                qs.push(out.modularity);
+                last = Some(out);
+            }
+            let last = last.unwrap();
+            // Paper-scale OOM gate: GPU systems are excluded on graphs
+            // whose *paper-scale* footprint exceeds device memory.
+            let paper_oom = match system {
+                System::NuLouvain => !dev.nu_louvain_fits(entry.paper_v, entry.paper_e),
+                System::CuGraph => !dev.cugraph_fits(entry.paper_v, entry.paper_e),
+                _ => false,
+            };
+            let modeled_ns = if paper_oom || modeled.is_empty() {
+                None
+            } else {
+                Some(geomean(&modeled))
+            };
+            ComparisonCell {
+                graph: entry.name,
+                system,
+                modeled_ns,
+                wall_ns: geomean(&walls),
+                modularity: mean(&qs),
+                num_communities: last.num_communities,
+                passes: last.passes,
+            }
+        })
+        .collect()
+}
+
+/// Mean speedup of `a` over `b` across graphs (paper Fig 11b/12b style):
+/// geometric mean of per-graph modeled-time ratios where both ran.
+pub fn mean_speedup(cells: &[ComparisonCell], a: System, b: System) -> Option<f64> {
+    let mut ratios = Vec::new();
+    for cell in cells.iter().filter(|c| c.system == a) {
+        let other = cells
+            .iter()
+            .find(|c| c.system == b && c.graph == cell.graph)?;
+        if let (Some(ta), Some(tb)) = (cell.modeled_ns, other.modeled_ns) {
+            if ta > 0.0 {
+                ratios.push(tb / ta);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        None
+    } else {
+        Some(geomean(&ratios))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::suite;
+
+    #[test]
+    fn comparison_runs_and_aggregates() {
+        let entry = suite::find("com-Orkut").unwrap();
+        let cells = compare_on_entry(
+            entry,
+            -3,
+            &[System::GveLouvain, System::NetworKit],
+            1,
+            2,
+            42,
+        );
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.modularity > 0.2, "{:?}", c.system);
+            assert!(c.wall_ns > 0.0);
+            assert!(c.modeled_ns.is_some());
+        }
+    }
+
+    #[test]
+    fn paper_scale_oom_gates_apply() {
+        // sk-2005 at paper scale OOMs ν-Louvain even though the scaled
+        // replica fits this host.
+        let entry = suite::find("sk-2005").unwrap();
+        let cells = compare_on_entry(entry, -6, &[System::NuLouvain], 1, 1, 42);
+        assert!(cells[0].modeled_ns.is_none(), "nu must be OOM-gated on sk-2005");
+        let entry2 = suite::find("asia_osm").unwrap();
+        let cells2 = compare_on_entry(entry2, -6, &[System::NuLouvain], 1, 1, 42);
+        assert!(cells2[0].modeled_ns.is_some());
+    }
+
+    #[test]
+    fn speedup_computation() {
+        let entry = suite::find("asia_osm").unwrap();
+        let cells = compare_on_entry(entry, -5, &[System::GveLouvain, System::Vite], 1, 1, 42);
+        let s = mean_speedup(&cells, System::GveLouvain, System::Vite).unwrap();
+        assert!(s > 0.0);
+    }
+}

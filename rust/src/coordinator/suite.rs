@@ -1,0 +1,112 @@
+//! The evaluation suite: 13 synthetic graphs mirroring Table 2.
+//!
+//! Each entry names its SuiteSparse counterpart, the generator family
+//! standing in for it, the generated scale (log2 vertices, shifted by a
+//! CLI-controlled offset), and the *paper-scale* |V| / |E| used by the
+//! device memory model to reproduce the OOM exclusions of §5.2.
+
+use crate::graph::generators::{generate, GraphFamily};
+use crate::graph::Csr;
+
+/// One suite graph.
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteEntry {
+    /// SuiteSparse name this stands in for.
+    pub name: &'static str,
+    pub family: GraphFamily,
+    /// log2 of generated vertices at offset 0.
+    pub scale: u32,
+    /// Paper-scale vertex count (Table 2).
+    pub paper_v: u64,
+    /// Paper-scale directed edge slots (Table 2, "after reverse edges").
+    pub paper_e: u64,
+}
+
+/// Table 2, scaled down (generated sizes keep the relative ordering and
+/// the per-family density signatures).
+pub const SUITE: [SuiteEntry; 13] = [
+    SuiteEntry { name: "indochina-2004", family: GraphFamily::Web, scale: 12, paper_v: 7_410_000, paper_e: 341_000_000 },
+    SuiteEntry { name: "uk-2002", family: GraphFamily::Web, scale: 13, paper_v: 18_500_000, paper_e: 567_000_000 },
+    SuiteEntry { name: "arabic-2005", family: GraphFamily::Web, scale: 13, paper_v: 22_700_000, paper_e: 1_210_000_000 },
+    SuiteEntry { name: "uk-2005", family: GraphFamily::Web, scale: 14, paper_v: 39_500_000, paper_e: 1_730_000_000 },
+    SuiteEntry { name: "webbase-2001", family: GraphFamily::Web, scale: 15, paper_v: 118_000_000, paper_e: 1_890_000_000 },
+    SuiteEntry { name: "it-2004", family: GraphFamily::Web, scale: 14, paper_v: 41_300_000, paper_e: 2_190_000_000 },
+    SuiteEntry { name: "sk-2005", family: GraphFamily::Web, scale: 14, paper_v: 50_600_000, paper_e: 3_800_000_000 },
+    SuiteEntry { name: "com-LiveJournal", family: GraphFamily::Social, scale: 12, paper_v: 4_000_000, paper_e: 69_400_000 },
+    SuiteEntry { name: "com-Orkut", family: GraphFamily::Social, scale: 11, paper_v: 3_070_000, paper_e: 234_000_000 },
+    SuiteEntry { name: "asia_osm", family: GraphFamily::Road, scale: 14, paper_v: 12_000_000, paper_e: 25_400_000 },
+    SuiteEntry { name: "europe_osm", family: GraphFamily::Road, scale: 15, paper_v: 50_900_000, paper_e: 108_000_000 },
+    SuiteEntry { name: "kmer_A2a", family: GraphFamily::Kmer, scale: 15, paper_v: 171_000_000, paper_e: 361_000_000 },
+    SuiteEntry { name: "kmer_V1r", family: GraphFamily::Kmer, scale: 15, paper_v: 214_000_000, paper_e: 465_000_000 },
+];
+
+impl SuiteEntry {
+    /// Generate this entry's graph; `offset` shifts the scale (negative
+    /// for quick runs, positive for bigger ones).
+    pub fn graph(&self, offset: i32, seed: u64) -> Csr {
+        let scale = (self.scale as i32 + offset).clamp(6, 22) as u32;
+        generate(self.family, scale, seed ^ fnv(self.name))
+    }
+}
+
+/// Stable per-name seed component.
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Entries selected by family.
+pub fn by_family(f: GraphFamily) -> Vec<&'static SuiteEntry> {
+    SUITE.iter().filter(|e| e.family == f).collect()
+}
+
+/// A small representative subset (one per family) for quick benches.
+pub fn quick() -> Vec<&'static SuiteEntry> {
+    vec![&SUITE[0], &SUITE[7], &SUITE[9], &SUITE[11]]
+}
+
+/// Look up an entry by its SuiteSparse name.
+pub fn find(name: &str) -> Option<&'static SuiteEntry> {
+    SUITE.iter().find(|e| e.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_13_graphs_in_4_families() {
+        assert_eq!(SUITE.len(), 13);
+        assert_eq!(by_family(GraphFamily::Web).len(), 7);
+        assert_eq!(by_family(GraphFamily::Social).len(), 2);
+        assert_eq!(by_family(GraphFamily::Road).len(), 2);
+        assert_eq!(by_family(GraphFamily::Kmer).len(), 2);
+    }
+
+    #[test]
+    fn graphs_generate_and_are_distinct_per_entry() {
+        let a = find("asia_osm").unwrap().graph(-4, 42);
+        let b = find("europe_osm").unwrap().graph(-4, 42);
+        a.validate().unwrap();
+        b.validate().unwrap();
+        assert_ne!(a, b, "same-family entries must differ (seed mix)");
+    }
+
+    #[test]
+    fn paper_sizes_match_table2_ordering() {
+        let sk = find("sk-2005").unwrap();
+        assert_eq!(sk.paper_e, 3_800_000_000);
+        let asia = find("asia_osm").unwrap();
+        assert!(asia.paper_e < sk.paper_e / 100);
+    }
+
+    #[test]
+    fn quick_subset_covers_all_families() {
+        let fams: std::collections::BTreeSet<_> =
+            quick().iter().map(|e| e.family.name()).collect();
+        assert_eq!(fams.len(), 4);
+    }
+}

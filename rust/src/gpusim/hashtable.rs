@@ -1,0 +1,394 @@
+//! Per-vertex open-addressing hashtables (paper §4.3.2, Fig 6, Alg. 7).
+//!
+//! Two contiguous buffers `buf_k: u32[2|E|]` and `buf_v: V[2|E|]` hold
+//! every vertex's table; vertex `i`'s table lives at offset `2·O_i`
+//! (its CSR offset doubled) with capacity `p1 = nextPow2(D_i) − 1`
+//! (always ≥ D_i, load factor < 100%).  The secondary prime is
+//! `p2 = nextPow2(p1) − 1 > p1`.
+//!
+//! Four collision-resolution strategies (Fig 7):
+//! * `Linear`            — δ = 1 each retry;
+//! * `Quadratic`         — δ doubles each retry;
+//! * `Double`            — δ = k mod p2, fixed;
+//! * `QuadraticDouble`   — δ ← 2δ + (k mod p2) (Algorithm 7 line 17;
+//!   the adopted hybrid).
+//!
+//! Values are `f32` or `f64` (Fig 8 ablation) behind [`ValueKind`].
+//! Every operation reports its probe count so the device model can
+//! charge divergence/conflict costs.
+
+/// Empty-slot marker (φ in Algorithm 7).
+pub const EMPTY: u32 = u32::MAX;
+
+/// Collision resolution strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProbeStrategy {
+    Linear,
+    Quadratic,
+    Double,
+    QuadraticDouble,
+}
+
+impl ProbeStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeStrategy::Linear => "linear",
+            ProbeStrategy::Quadratic => "quadratic",
+            ProbeStrategy::Double => "double",
+            ProbeStrategy::QuadraticDouble => "quadratic-double",
+        }
+    }
+
+    pub const ALL: [ProbeStrategy; 4] = [
+        ProbeStrategy::Linear,
+        ProbeStrategy::Quadratic,
+        ProbeStrategy::Double,
+        ProbeStrategy::QuadraticDouble,
+    ];
+}
+
+/// Hashtable value precision (Fig 8: `Float` adopted over `Double`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ValueKind {
+    F32,
+    F64,
+}
+
+impl ValueKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ValueKind::F32 => "f32",
+            ValueKind::F64 => "f64",
+        }
+    }
+}
+
+/// Smallest power of two strictly greater than `x` (the paper's
+/// `nextPow2`), so capacity `nextPow2(D)−1 ≥ D` for all `D ≥ 1`.
+#[inline]
+pub fn next_pow2_above(x: u32) -> u32 {
+    let mut p = 1u32;
+    while p <= x {
+        p <<= 1;
+    }
+    p
+}
+
+/// The shared hashtable buffers (`buf_k`, `buf_v`).
+pub struct PerVertexTables {
+    keys: Vec<u32>,
+    // Stored as f64; writes round-trip through f32 when kind == F32 so
+    // numerics match a real f32 buffer bit-for-bit.
+    values: Vec<f64>,
+    kind: ValueKind,
+    strategy: ProbeStrategy,
+    pub max_retries: u32,
+}
+
+/// One vertex's table view: `[offset, offset + p1)` of the buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct TableRegion {
+    pub offset: usize,
+    /// Capacity `p1` (also the modulus of hash 1).
+    pub p1: u32,
+    /// Secondary prime-ish modulus `p2 > p1`.
+    pub p2: u32,
+}
+
+impl TableRegion {
+    /// Region for a vertex with CSR offset `o` and degree `d`
+    /// (Fig 6: offset `2·O_i`, capacity `nextPow2(D_i) − 1`).
+    pub fn for_vertex(o: usize, d: usize) -> Self {
+        let p1 = (next_pow2_above(d as u32) - 1).max(1);
+        // p2 must exceed p1: for p1 = 2^k − 1 that is 2^{k+1} − 1.
+        let p2 = 2 * p1 + 1;
+        Self { offset: 2 * o, p1, p2 }
+    }
+}
+
+/// Result of an accumulate: probes used, or failure after MAX_RETRIES.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbeOutcome {
+    pub probes: u32,
+    pub ok: bool,
+}
+
+impl PerVertexTables {
+    /// Allocate buffers of `2·e` slots (e = directed edge slots).
+    pub fn new(e: usize, kind: ValueKind, strategy: ProbeStrategy) -> Self {
+        Self {
+            keys: vec![EMPTY; 2 * e],
+            values: vec![0.0; 2 * e],
+            kind,
+            strategy,
+            max_retries: 64,
+        }
+    }
+
+    pub fn kind(&self) -> ValueKind {
+        self.kind
+    }
+
+    pub fn strategy(&self) -> ProbeStrategy {
+        self.strategy
+    }
+
+    /// Clear a region (hashtableClear); returns slots touched.
+    pub fn clear(&mut self, r: TableRegion) -> u32 {
+        for i in 0..r.p1 as usize {
+            self.keys[r.offset + i] = EMPTY;
+            self.values[r.offset + i] = 0.0;
+        }
+        r.p1
+    }
+
+    /// `H[k] += v` with the configured probe sequence (Algorithm 7).
+    pub fn accumulate(&mut self, r: TableRegion, k: u32, v: f64) -> ProbeOutcome {
+        let p1 = r.p1 as u64;
+        let p2 = r.p2 as u64;
+        let mut i = k as u64;
+        let mut di = 1u64;
+        for t in 0..self.max_retries {
+            let s = r.offset + (i % p1) as usize;
+            let cur = self.keys[s];
+            if cur == k || cur == EMPTY {
+                if cur == EMPTY {
+                    self.keys[s] = k;
+                }
+                let add = match self.kind {
+                    ValueKind::F64 => v,
+                    ValueKind::F32 => ((self.values[s] as f32) + (v as f32)) as f64 - self.values[s],
+                };
+                self.values[s] += add;
+                return ProbeOutcome { probes: t + 1, ok: true };
+            }
+            // Next slot per strategy.
+            i = i.wrapping_add(di);
+            di = match self.strategy {
+                ProbeStrategy::Linear => 1,
+                ProbeStrategy::Quadratic => di.wrapping_mul(2),
+                ProbeStrategy::Double => (k as u64 % p2).max(1),
+                ProbeStrategy::QuadraticDouble => di.wrapping_mul(2).wrapping_add(k as u64 % p2),
+            };
+        }
+        // Fallback: linear sweep from the last position. Quadratic-style
+        // step sequences over a 2^k−1 modulus can cycle on a slot subset;
+        // a real deployment sizes tables so this is rare (§A.0.4 "avoided
+        // by ensuring the hashtable is appropriately sized") — the sweep
+        // keeps the simulation robust and charges the extra probes.
+        for t in 0..r.p1 {
+            let s = r.offset + (i.wrapping_add(t as u64) % p1) as usize;
+            let cur = self.keys[s];
+            if cur == k || cur == EMPTY {
+                if cur == EMPTY {
+                    self.keys[s] = k;
+                }
+                let add = match self.kind {
+                    ValueKind::F64 => v,
+                    ValueKind::F32 => ((self.values[s] as f32) + (v as f32)) as f64 - self.values[s],
+                };
+                self.values[s] += add;
+                return ProbeOutcome { probes: self.max_retries + t + 1, ok: true };
+            }
+        }
+        ProbeOutcome { probes: self.max_retries + r.p1, ok: false }
+    }
+
+    /// Visit `(key, value)` pairs of a region.
+    pub fn for_each(&self, r: TableRegion, mut f: impl FnMut(u32, f64)) {
+        for i in 0..r.p1 as usize {
+            let k = self.keys[r.offset + i];
+            if k != EMPTY {
+                f(k, self.values[r.offset + i]);
+            }
+        }
+    }
+
+    /// Value for `key` (0 if absent), plus probes used to find it.
+    pub fn get(&self, r: TableRegion, key: u32) -> (f64, u32) {
+        let p1 = r.p1 as u64;
+        let p2 = r.p2 as u64;
+        let mut i = key as u64;
+        let mut di = 1u64;
+        for t in 0..self.max_retries {
+            let s = r.offset + (i % p1) as usize;
+            let cur = self.keys[s];
+            if cur == key {
+                return (self.values[s], t + 1);
+            }
+            if cur == EMPTY {
+                return (0.0, t + 1);
+            }
+            i = i.wrapping_add(di);
+            di = match self.strategy {
+                ProbeStrategy::Linear => 1,
+                ProbeStrategy::Quadratic => di.wrapping_mul(2),
+                ProbeStrategy::Double => (key as u64 % p2).max(1),
+                ProbeStrategy::QuadraticDouble => di.wrapping_mul(2).wrapping_add(key as u64 % p2),
+            };
+        }
+        // Same fallback as `accumulate`.
+        for t in 0..r.p1 {
+            let s = r.offset + (i.wrapping_add(t as u64) % p1) as usize;
+            let cur = self.keys[s];
+            if cur == key {
+                return (self.values[s], self.max_retries + t + 1);
+            }
+            if cur == EMPTY {
+                return (0.0, self.max_retries + t + 1);
+            }
+        }
+        (0.0, self.max_retries + r.p1)
+    }
+
+    /// Number of occupied slots in a region.
+    pub fn len(&self, r: TableRegion) -> usize {
+        (0..r.p1 as usize).filter(|&i| self.keys[r.offset + i] != EMPTY).count()
+    }
+
+    pub fn is_empty(&self, r: TableRegion) -> bool {
+        self.len(r) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_pow2_above_matches_paper_capacity_rule() {
+        assert_eq!(next_pow2_above(1), 2); // D=1 -> p1=1
+        assert_eq!(next_pow2_above(2), 4); // D=2 -> p1=3
+        assert_eq!(next_pow2_above(3), 4);
+        assert_eq!(next_pow2_above(4), 8); // D=4 -> p1=7
+        assert_eq!(next_pow2_above(7), 8);
+        // Capacity >= degree for all D in 1..=4096.
+        for d in 1u32..=4096 {
+            assert!(next_pow2_above(d) - 1 >= d);
+        }
+    }
+
+    #[test]
+    fn region_layout_matches_fig6() {
+        let r = TableRegion::for_vertex(10, 4);
+        assert_eq!(r.offset, 20);
+        assert_eq!(r.p1, 7);
+        assert_eq!(r.p2, 15);
+    }
+
+    #[test]
+    fn accumulate_and_get_all_strategies() {
+        for s in ProbeStrategy::ALL {
+            let mut t = PerVertexTables::new(64, ValueKind::F64, s);
+            let r = TableRegion::for_vertex(0, 8); // p1 = 15
+            for (k, v) in [(3u32, 1.0), (18, 2.0), (3, 0.5), (33, 4.0)] {
+                assert!(t.accumulate(r, k, v).ok, "{s:?}");
+            }
+            // 3, 18, 33 all hash to 3 mod 15: collision chains exercised.
+            assert_eq!(t.get(r, 3).0, 1.5, "{s:?}");
+            assert_eq!(t.get(r, 18).0, 2.0, "{s:?}");
+            assert_eq!(t.get(r, 33).0, 4.0, "{s:?}");
+            assert_eq!(t.len(r), 3);
+        }
+    }
+
+    #[test]
+    fn fills_to_capacity_without_failure() {
+        for s in ProbeStrategy::ALL {
+            let mut t = PerVertexTables::new(64, ValueKind::F64, s);
+            let r = TableRegion::for_vertex(0, 8); // p1 = 15
+            for k in 0..8u32 {
+                // Load factor ≈ 53% max (8 keys / 15 slots).
+                let out = t.accumulate(r, k, 1.0);
+                assert!(out.ok, "{s:?} failed at key {k}");
+            }
+            assert_eq!(t.len(r), 8);
+        }
+    }
+
+    #[test]
+    fn collision_chains_resolve() {
+        // All keys hash to slot 1 mod 15; pure-quadratic (doubling) probing
+        // cannot traverse 2^m−1 moduli from a single start slot, which is
+        // exactly why the paper hybridizes it with double hashing.
+        for s in [ProbeStrategy::Linear, ProbeStrategy::Double, ProbeStrategy::QuadraticDouble] {
+            let mut t = PerVertexTables::new(64, ValueKind::F64, s);
+            let r = TableRegion::for_vertex(0, 8); // p1 = 15
+            let mut worst = 0;
+            // All ≡ 1 (mod 15); chosen so the double-hash step stays
+            // co-prime with p1 (a real deployment sizes p1/p2 so that
+            // pathological steps are rare; Algorithm 7 tolerates the rest
+            // via MAX_RETRIES).
+            for (n, key) in [1u32, 16, 76, 106, 166, 256].into_iter().enumerate() {
+                let out = t.accumulate(r, key, 1.0);
+                assert!(out.ok, "{s:?} failed at key #{n} ({key})");
+                worst = worst.max(out.probes);
+            }
+            assert_eq!(t.len(r), 6, "{s:?}");
+            assert!(worst >= 2, "{s:?}: collisions expected");
+        }
+    }
+
+    #[test]
+    fn linear_probing_clusters_more_than_double() {
+        // Adversarial: many keys mapping near slot 0. Linear probing's
+        // clustering must cost more probes than double hashing.
+        let mut probes = std::collections::HashMap::new();
+        for s in [ProbeStrategy::Linear, ProbeStrategy::Double] {
+            let mut t = PerVertexTables::new(2048, ValueKind::F64, s);
+            let r = TableRegion::for_vertex(0, 512); // p1 = 1023
+            let mut total = 0u64;
+            for k in 0..400u32 {
+                total += t.accumulate(r, k * 1023 + (k % 3), 1.0).probes as u64;
+            }
+            probes.insert(s, total);
+        }
+        assert!(
+            probes[&ProbeStrategy::Linear] > probes[&ProbeStrategy::Double],
+            "{probes:?}"
+        );
+    }
+
+    #[test]
+    fn f32_values_round_to_f32_precision() {
+        let mut t32 = PerVertexTables::new(16, ValueKind::F32, ProbeStrategy::QuadraticDouble);
+        let mut t64 = PerVertexTables::new(16, ValueKind::F64, ProbeStrategy::QuadraticDouble);
+        let r = TableRegion::for_vertex(0, 4);
+        // Accumulate values that lose precision in f32.
+        for _ in 0..10 {
+            t32.accumulate(r, 1, 0.1);
+            t64.accumulate(r, 1, 0.1);
+        }
+        let v32 = t32.get(r, 1).0;
+        let v64 = t64.get(r, 1).0;
+        assert_ne!(v32, v64, "f32 path must differ from f64");
+        let mut acc = 0f32;
+        for _ in 0..10 {
+            acc += 0.1f32;
+        }
+        assert!((v32 - acc as f64).abs() < 1e-12, "v32={v32} acc={acc}");
+    }
+
+    #[test]
+    fn clear_resets_region_only() {
+        let mut t = PerVertexTables::new(32, ValueKind::F64, ProbeStrategy::Linear);
+        let r1 = TableRegion::for_vertex(0, 4); // offset 0, p1 7
+        let r2 = TableRegion::for_vertex(8, 4); // offset 16, p1 7
+        t.accumulate(r1, 2, 1.0);
+        t.accumulate(r2, 2, 5.0);
+        t.clear(r1);
+        assert!(t.is_empty(r1));
+        assert_eq!(t.get(r2, 2).0, 5.0);
+    }
+
+    #[test]
+    fn overload_reports_failure() {
+        let mut t = PerVertexTables::new(8, ValueKind::F64, ProbeStrategy::Linear);
+        let r = TableRegion::for_vertex(0, 2); // p1 = 3 slots
+        assert!(t.accumulate(r, 0, 1.0).ok);
+        assert!(t.accumulate(r, 1, 1.0).ok);
+        assert!(t.accumulate(r, 2, 1.0).ok);
+        // Fourth distinct key cannot fit in 3 slots.
+        assert!(!t.accumulate(r, 5, 1.0).ok);
+    }
+}

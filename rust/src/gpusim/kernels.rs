@@ -1,0 +1,479 @@
+//! Simulated ν-Louvain kernels (Algorithms 5–6).
+//!
+//! * [`move_iteration`] — one local-moving iteration.  Thread-per-vertex
+//!   work (degree < `switch_move`) runs in lock-step warps of 32
+//!   consecutive vertices (compute-all → apply-all: the swap-producing
+//!   granularity); block-per-vertex work (high degree) runs one vertex
+//!   per 128-thread block with intra-block parallel scanning.
+//! * [`aggregate`] — the aggregation phase on per-community hashtables
+//!   carved from the shared buffers, again kernel-partitioned by a
+//!   degree switch (`switch_agg`).
+//!
+//! Every simulated operation charges cycles/bytes into [`KernelWork`]
+//! (thread- and block-kernel work tracked separately so Figs 9/10 can
+//! sweep the switch degree).
+
+use super::device::{cycles, KernelWork};
+use super::hashtable::{PerVertexTables, TableRegion};
+use super::nulouvain::NuParams;
+use super::warp::{warp_cycles, warps, LaneMove, WarpDecisions, WARP_SIZE};
+use crate::graph::csr::HoleyCsr;
+use crate::graph::Csr;
+use crate::louvain::aggregation::sort_rows;
+use crate::louvain::modularity::delta_modularity;
+use crate::louvain::Counters;
+use crate::parallel::scan::exclusive_scan_serial;
+
+/// Output of one simulated local-moving iteration.
+#[derive(Debug, Default)]
+pub struct MoveIterationOutput {
+    pub dq: f64,
+    pub moves: u64,
+    /// Thread-per-vertex kernel work.
+    pub work_thread: KernelWork,
+    /// Block-per-vertex kernel work.
+    pub work_block: KernelWork,
+    pub counters: Counters,
+    /// Accumulates failed probes (table overflow; should stay 0).
+    pub failed_probes: u64,
+}
+
+/// One lock-step local-moving iteration over all vertices.
+#[allow(clippy::too_many_arguments)]
+pub fn move_iteration(
+    g: &Csr,
+    memb: &mut [u32],
+    k: &[f64],
+    sigma: &mut [f64],
+    affected: &mut [u32],
+    tables: &mut PerVertexTables,
+    params: &NuParams,
+    m: f64,
+    pick_less: bool,
+) -> MoveIterationOutput {
+    let n = g.num_vertices();
+    let mut out = MoveIterationOutput::default();
+    // A real iteration is several device-wide launches: clear, scan,
+    // best-pick/apply, ΔQ reduction + the host sync reading ΔQ back.
+    out.work_thread.launches = 3;
+    out.work_block.launches = 3;
+    let mut decisions = WarpDecisions::new();
+    let mut lane_cycles = [0u64; WARP_SIZE];
+
+    // Lock-step granularity only matters while several warps are
+    // resident.  A graph smaller than a few warps runs effectively
+    // serialized on real hardware, and an all-lanes-at-once apply on a
+    // handful of super-vertices can collapse every community into one
+    // (a state none of the lanes evaluated).  The paper's graphs never
+    // shrink this far (τ_agg stops first); below the threshold we apply
+    // moves immediately (async), which is also what eliminates the
+    // pathology on device.
+    let lockstep = n >= params.lockstep_min;
+
+    // --- Thread-per-vertex kernel: warps of 32 consecutive vertices,
+    // compute-then-apply (lock-step).
+    for warp in warps(n) {
+        decisions.clear();
+        let mut lanes = 0usize;
+        let mut any = false;
+        for (lane, i) in warp.clone().enumerate() {
+            lane_cycles[lane] = 0;
+            lanes = lane + 1;
+            let d = g.degree(i);
+            if d == 0 || d >= params.switch_move {
+                continue; // idle lane (other kernel or isolated)
+            }
+            if affected[i] == 0 {
+                continue; // pruned
+            }
+            affected[i] = 0;
+            any = true;
+            let (cyc, best) =
+                scan_and_pick(g, memb, k, sigma, tables, i, m, pick_less, false, &mut out);
+            lane_cycles[lane] = cyc;
+            if let Some(mv) = best {
+                if lockstep {
+                    decisions.push(mv);
+                } else {
+                    apply_move(g, memb, k, sigma, affected, mv, &mut out);
+                }
+            }
+            out.counters.vertices_processed += 1;
+        }
+        if any {
+            out.work_thread.warps += 1;
+            out.work_thread.warp_cycles += warp_cycles(&lane_cycles[..lanes]);
+        }
+        // Apply phase: all lanes commit against the state they all read.
+        for mv in decisions.drain() {
+            apply_move(g, memb, k, sigma, affected, mv, &mut out);
+        }
+    }
+
+    // --- Block-per-vertex kernel: one vertex per block, applied
+    // immediately (high-degree vertices are asymmetric; swap cycles
+    // come from the lock-step low-degree warps).
+    for i in 0..n {
+        let d = g.degree(i);
+        if d < params.switch_move {
+            continue;
+        }
+        if affected[i] == 0 {
+            out.counters.vertices_pruned += 1;
+            continue;
+        }
+        affected[i] = 0;
+        let (cyc, best) =
+            scan_and_pick(g, memb, k, sigma, tables, i, m, pick_less, true, &mut out);
+        // Block of `block_size` threads: parallel scan divides edge work,
+        // atomics serialize on hot table slots (charged in scan_and_pick
+        // via probe counts; here we divide the data-parallel share).
+        let block_warps = (params.block_size / WARP_SIZE as u64).max(1);
+        let par_cyc = cyc / params.block_size + (cyc % params.block_size != 0) as u64;
+        out.work_block.warps += block_warps;
+        out.work_block.warp_cycles += par_cyc.max(1) * block_warps;
+        out.counters.vertices_processed += 1;
+        if let Some(mv) = best {
+            apply_move(g, memb, k, sigma, affected, mv, &mut out);
+        }
+    }
+
+    // Prune accounting for the thread kernel happens inside the warp
+    // loop; count of skipped lanes is derivable from processed.
+    out
+}
+
+/// scanCommunities + best-community selection for one vertex.
+/// Returns (cycles, Some(move) if an admissible improving move exists).
+#[allow(clippy::too_many_arguments)]
+fn scan_and_pick(
+    g: &Csr,
+    memb: &[u32],
+    k: &[f64],
+    sigma: &[f64],
+    tables: &mut PerVertexTables,
+    i: usize,
+    m: f64,
+    pick_less: bool,
+    is_block: bool,
+    out: &mut MoveIterationOutput,
+) -> (u64, Option<LaneMove>) {
+    let d = g.degree(i);
+    let region = TableRegion::for_vertex(g.offsets[i], d);
+    let mut cyc = tables.clear(region) as u64 * cycles::CLEAR;
+    let (ts, ws) = g.edges(i);
+    let ci = memb[i];
+    for (t, w) in ts.iter().zip(ws) {
+        if *t as usize == i {
+            continue;
+        }
+        let pj = tables.accumulate(region, memb[*t as usize], *w as f64);
+        if !pj.ok {
+            out.failed_probes += 1;
+        }
+        cyc += cycles::EDGE_SCAN + pj.probes as u64 * cycles::PROBE + cycles::ATOMIC;
+        out.counters.table_ops += 1;
+    }
+    out.counters.edges_scanned_move += d as u64;
+    // Bytes: CSR slot reads coalesce (8 B), but the membership gather and
+    // hashtable probes are scattered — each costs a full 32 B transaction
+    // on HBM (the uncoalesced-access reality that keeps GPU Louvain
+    // memory-bound; calibrated against Fig 13's parity result).
+    let kernel_bytes = d as u64 * (8 + 32 + 64);
+
+    let (k_to_d, probes_d) = tables.get(region, ci);
+    cyc += probes_d as u64 * cycles::PROBE;
+    let sigma_d = sigma[ci as usize];
+    let k_i = k[i];
+
+    let mut best: Option<LaneMove> = None;
+    let mut best_dq = 0.0f64;
+    tables.for_each(region, |c, k_to_c| {
+        if c == ci {
+            return;
+        }
+        if pick_less && c >= ci {
+            return; // Algorithm 5 line 24
+        }
+        let dq = delta_modularity(k_to_c, k_to_d, k_i, sigma[c as usize], sigma_d, m);
+        if dq > best_dq {
+            best_dq = dq;
+            best = Some(LaneMove { vertex: i, to: c, dq });
+        }
+    });
+    cyc += region.p1 as u64 * cycles::BEST_PICK;
+
+    if is_block {
+        out.work_block.bytes += kernel_bytes;
+    } else {
+        out.work_thread.bytes += kernel_bytes;
+    }
+    (cyc, best)
+}
+
+/// Commit a move: Σ updates (atomics), membership store, neighbour marks.
+fn apply_move(
+    g: &Csr,
+    memb: &mut [u32],
+    k: &[f64],
+    sigma: &mut [f64],
+    affected: &mut [u32],
+    mv: LaneMove,
+    out: &mut MoveIterationOutput,
+) {
+    let i = mv.vertex;
+    let d = memb[i];
+    if d == mv.to {
+        return;
+    }
+    sigma[d as usize] -= k[i];
+    sigma[mv.to as usize] += k[i];
+    memb[i] = mv.to;
+    out.dq += mv.dq;
+    out.moves += 1;
+    out.work_thread.warp_cycles += 2 * cycles::ATOMIC;
+    for (t, _) in g.neighbours(i) {
+        affected[t as usize] = 1;
+    }
+    out.work_thread.bytes += g.degree(i) as u64 * 4;
+}
+
+/// Output of the simulated aggregation phase.
+pub struct AggregateOutput {
+    pub graph: Csr,
+    pub work_thread: KernelWork,
+    pub work_block: KernelWork,
+    pub counters: Counters,
+}
+
+/// Simulated aggregation (Algorithm 6): community-vertices CSR, then
+/// per-community hashtable merge into a holey CSR.
+pub fn aggregate(
+    g: &Csr,
+    memb: &[u32],
+    n_comm: usize,
+    tables: &mut PerVertexTables,
+    params: &NuParams,
+) -> AggregateOutput {
+    let n = g.num_vertices();
+    let mut counters = Counters::default();
+    let mut work_thread = KernelWork { launches: 2, ..Default::default() };
+    let mut work_block = KernelWork { launches: 1, ..Default::default() };
+
+    // countCommunityVertices + exclusiveScan (charged as one thread kernel).
+    let mut counts = vec![0usize; n_comm + 1];
+    for &c in memb {
+        counts[c as usize] += 1;
+    }
+    exclusive_scan_serial(&mut counts);
+    let comm_vertices = HoleyCsr::with_offsets(counts);
+    for i in 0..n {
+        comm_vertices.push_edge(memb[i] as usize, i as u32, 0.0);
+    }
+    work_thread.warps += (n as u64).div_ceil(WARP_SIZE as u64);
+    work_thread.warp_cycles += (n as u64) * 2;
+    work_thread.bytes += n as u64 * 8;
+
+    // communityTotalDegree + exclusiveScan -> holey CSR offsets.
+    let mut tot_deg = vec![0usize; n_comm + 1];
+    for i in 0..n {
+        tot_deg[memb[i] as usize] += g.degree(i);
+    }
+    // Community hashtable regions reuse the CSR offset rule (offset 2·O_c).
+    let comm_offsets: Vec<usize> = {
+        let mut t = tot_deg.clone();
+        exclusive_scan_serial(&mut t);
+        t
+    };
+    exclusive_scan_serial(&mut tot_deg);
+    let holey = HoleyCsr::with_offsets(tot_deg);
+
+    // Per-community merge, kernel-partitioned by total degree.
+    let mut lane_cycles = [0u64; WARP_SIZE];
+    for warp in warps(n_comm) {
+        let mut lanes = 0usize;
+        let mut any_thread = false;
+        for (lane, c) in warp.clone().enumerate() {
+            lane_cycles[lane] = 0;
+            lanes = lane + 1;
+            let members = comm_vertices.edges(c).0;
+            if members.is_empty() {
+                continue;
+            }
+            let deg_c = comm_offsets[c + 1] - comm_offsets[c];
+            if deg_c == 0 {
+                continue; // isolated members only: no edges to merge
+            }
+            let is_block = deg_c >= params.switch_agg;
+            let region = TableRegion::for_vertex(comm_offsets[c], deg_c);
+            let mut cyc = tables.clear(region) as u64 * cycles::CLEAR;
+            for &i in members {
+                for (j, w) in g.neighbours(i as usize) {
+                    let pr = tables.accumulate(region, memb[j as usize], w as f64);
+                    cyc += cycles::EDGE_SCAN + pr.probes as u64 * cycles::PROBE + cycles::ATOMIC;
+                    counters.table_ops += 1;
+                }
+                counters.edges_scanned_agg += g.degree(i as usize) as u64;
+            }
+            let mut row_len = 0u64;
+            tables.for_each(region, |dcomm, w| {
+                holey.push_edge(c, dcomm, w as f32);
+                row_len += 1;
+            });
+            cyc += row_len * cycles::ATOMIC;
+            let bytes = (deg_c as u64) * (8 + 32 + 64) + row_len * 32;
+            if is_block {
+                let bw = (params.block_size / WARP_SIZE as u64).max(1);
+                work_block.warps += bw;
+                work_block.warp_cycles += (cyc / params.block_size).max(1) * bw;
+                work_block.bytes += bytes;
+            } else {
+                any_thread = true;
+                lane_cycles[lane] = cyc;
+                work_thread.bytes += bytes;
+            }
+        }
+        if any_thread {
+            work_thread.warps += 1;
+            work_thread.warp_cycles += warp_cycles(&lane_cycles[..lanes]);
+        }
+    }
+
+    let mut graph = holey.compact();
+    sort_rows(&mut graph);
+    AggregateOutput { graph, work_thread, work_block, counters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::hashtable::{ProbeStrategy, ValueKind};
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::modularity::modularity;
+
+    fn nu_params() -> NuParams {
+        // Tests exercise lock-step semantics even on tiny graphs.
+        NuParams { lockstep_min: 0, ..NuParams::default() }
+    }
+
+    fn init(g: &Csr) -> (Vec<u32>, Vec<f64>, Vec<f64>, Vec<u32>, PerVertexTables) {
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n as u32).collect();
+        let k = g.vertex_weights();
+        let sigma = k.clone();
+        let affected = vec![1u32; n];
+        let tables =
+            PerVertexTables::new(g.num_edges().max(1), ValueKind::F32, ProbeStrategy::QuadraticDouble);
+        (memb, k, sigma, affected, tables)
+    }
+
+    #[test]
+    fn symmetric_pair_swaps_without_pick_less() {
+        // Two vertices 0,1 connected to each other and each to both of a
+        // pair of anchors — engineered so each prefers the *other's*
+        // community while anchors hold still. In lock-step they swap.
+        let g = GraphBuilder::new(2).edge(0, 1, 1.0).build_undirected();
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let m = g.total_weight();
+        let p = nu_params();
+        // Iteration 1 without pick-less: both see the other's community
+        // and both move -> memberships swap, state cycles.
+        let before = memb.clone();
+        let o1 = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p, m, false);
+        assert_eq!(o1.moves, 2, "both lanes moved in lock-step");
+        assert_eq!(memb, vec![1, 0], "swapped");
+        aff.iter_mut().for_each(|a| *a = 1);
+        let o2 = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p, m, false);
+        assert_eq!(o2.moves, 2);
+        assert_eq!(memb, before, "swapped back: the §4.3.1 cycle");
+    }
+
+    #[test]
+    fn pick_less_breaks_the_swap() {
+        let g = GraphBuilder::new(2).edge(0, 1, 1.0).build_undirected();
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let m = g.total_weight();
+        let p = nu_params();
+        let o = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p, m, true);
+        // Only the higher-id vertex may move down; vertex 0 is blocked.
+        assert_eq!(o.moves, 1);
+        assert_eq!(memb, vec![0, 0]);
+    }
+
+    #[test]
+    fn moves_have_positive_dq_and_sigma_consistent() {
+        let g = generate(GraphFamily::Web, 9, 5);
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let m = g.total_weight();
+        let p = nu_params();
+        let o = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p, m, false);
+        assert!(o.dq > 0.0);
+        assert!(o.moves > 0);
+        assert_eq!(o.failed_probes, 0, "hashtables must never overflow");
+        let n = g.num_vertices();
+        let mut want = vec![0f64; n];
+        for v in 0..n {
+            want[memb[v] as usize] += k[v];
+        }
+        for c in 0..n {
+            assert!((sigma[c] - want[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernel_partition_by_switch_degree() {
+        let g = generate(GraphFamily::Web, 9, 7);
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let m = g.total_weight();
+        // switch = 1: everything block-per-vertex.
+        let p_all_block = NuParams { switch_move: 1, ..nu_params() };
+        let o = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p_all_block, m, false);
+        assert_eq!(o.work_thread.warps, 0);
+        assert!(o.work_block.warps > 0);
+        // switch = huge: everything thread-per-vertex.
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let p_all_thread = NuParams { switch_move: usize::MAX, ..nu_params() };
+        let o = move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p_all_thread, m, false);
+        assert!(o.work_thread.warps > 0);
+        assert_eq!(o.work_block.warps, 0);
+    }
+
+    #[test]
+    fn aggregate_preserves_total_weight_and_matches_cpu() {
+        use crate::louvain::aggregation::aggregate_csr;
+        use crate::louvain::hashtable::TablePool;
+        use crate::louvain::params::{LouvainParams, TableKind};
+        let g = generate(GraphFamily::Social, 9, 9);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 37) as u32).collect();
+        let mut tables =
+            PerVertexTables::new(g.num_edges(), ValueKind::F64, ProbeStrategy::QuadraticDouble);
+        let out = aggregate(&g, &memb, 37, &mut tables, &nu_params());
+        out.graph.validate().unwrap();
+        assert!((out.graph.total_weight() - g.total_weight()).abs() < 1e-5 * g.total_weight());
+        // Cross-check against the CPU aggregation.
+        let pool = TablePool::new(TableKind::FarKv, 37, 1);
+        let cpu = aggregate_csr(&g, &memb, 37, &pool, &LouvainParams::default());
+        assert_eq!(out.graph.offsets, cpu.graph.offsets);
+        assert_eq!(out.graph.targets, cpu.graph.targets);
+        for (a, b) in out.graph.weights.iter().zip(&cpu.graph.weights) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn iterating_improves_modularity() {
+        let g = generate(GraphFamily::Web, 9, 11);
+        let (mut memb, k, mut sigma, mut aff, mut tables) = init(&g);
+        let m = g.total_weight();
+        let p = nu_params();
+        let q0 = modularity(&g, &memb);
+        for li in 0..5 {
+            let pl = (li + p.rho / 2) % p.rho == 0;
+            move_iteration(&g, &mut memb, &k, &mut sigma, &mut aff, &mut tables, &p, m, pl);
+        }
+        let q1 = modularity(&g, &memb);
+        assert!(q1 > q0 + 0.2, "q0={q0} q1={q1}");
+    }
+}

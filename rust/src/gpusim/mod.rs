@@ -1,0 +1,38 @@
+//! GPU-semantics simulator hosting ν-Louvain (paper §4.3–4.4, App. A).
+//!
+//! No GPU exists on this testbed (repro band 0), so the CUDA execution
+//! model is *simulated* — not cycle-accurately, but mechanism-accurately
+//! for everything the paper's findings rest on (DESIGN.md §2):
+//!
+//! * **Lock-step warps** ([`warp`]) — 32 consecutive vertices compute
+//!   their best community against the shared membership, *then* all
+//!   apply: exactly the compute/apply granularity that lets symmetric
+//!   vertices swap communities forever (§4.3.1) until Pick-Less breaks
+//!   the cycle.
+//! * **Per-vertex open-addressing hashtables** ([`hashtable`]) — keys +
+//!   values carved out of two `2|E|` buffers at offset `2·O_i`,
+//!   capacity `nextPow2(D_i)−1`, four probe sequences (linear /
+//!   quadratic / double / quadratic-double, Algorithm 7), f32 or f64
+//!   values (Fig 8).
+//! * **Thread- vs block-per-vertex kernels** ([`kernels`]) — a degree
+//!   switch routes vertices to either kernel (Figs 9–10); warp time is
+//!   the max over lanes (divergence), block time divides parallel work
+//!   across the block.
+//! * **Device cost model** ([`device`]) — an A100-like throughput
+//!   model: cycles and bytes accumulated by the kernels are converted
+//!   to estimated kernel time with occupancy and launch-overhead
+//!   effects, which is what makes late, small passes GPU-unfriendly —
+//!   the paper's headline.  It also models device memory footprints
+//!   (the OOM gates of §5.2).
+//! * **ν-Louvain driver** ([`nulouvain`]) — Algorithms 4–6 with
+//!   Pick-Less every ρ iterations (PL4 adopted).
+
+pub mod device;
+pub mod hashtable;
+pub mod kernels;
+pub mod nulouvain;
+pub mod warp;
+
+pub use device::DeviceModel;
+pub use hashtable::{ProbeStrategy, ValueKind};
+pub use nulouvain::{NuLouvain, NuParams, NuResult};

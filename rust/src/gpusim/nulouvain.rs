@@ -1,0 +1,341 @@
+//! ν-Louvain driver (Algorithm 4) on the GPU simulator.
+//!
+//! Same pass structure as GVE-Louvain, with the GPU-specific pieces of
+//! §4.3: Pick-Less mode every ρ iterations (`(l_i + ρ/2) mod ρ == 0`,
+//! Algorithm 5 line 4), per-vertex open-addressing hashtables, kernel
+//! partitioning by switch degree, and the device cost model that turns
+//! accumulated kernel work into estimated A100 time.
+
+use super::device::{DeviceModel, KernelWork};
+use super::hashtable::{PerVertexTables, ProbeStrategy, ValueKind};
+use super::kernels::{aggregate, move_iteration};
+use crate::graph::Csr;
+use crate::louvain::dendrogram;
+use crate::louvain::modularity::modularity;
+use crate::louvain::renumber::renumber_communities;
+use crate::louvain::Counters;
+use std::time::Instant;
+
+/// Parameters of a ν-Louvain run (§4.3 list: defaults are the adopted
+/// configuration — PL4, switch 64/128, quadratic-double, f32 values).
+#[derive(Clone, Copy, Debug)]
+pub struct NuParams {
+    pub max_passes: usize,
+    pub max_iterations: usize,
+    pub tolerance: f64,
+    pub tolerance_drop: f64,
+    pub aggregation_tolerance: f64,
+    /// Pick-Less period ρ (Fig 5: 4 adopted; 0 disables PL entirely).
+    pub rho: usize,
+    /// Thread-vs-block switch degree, local-moving (Fig 9: 64).
+    pub switch_move: usize,
+    /// Thread-vs-block switch degree, aggregation (Fig 10: 128).
+    pub switch_agg: usize,
+    pub probe: ProbeStrategy,
+    pub values: ValueKind,
+    /// Threads per block for the block-per-vertex kernels.
+    pub block_size: u64,
+    /// Below this many vertices, lock-step apply degrades to immediate
+    /// (async) apply — see `kernels::move_iteration` for the rationale.
+    pub lockstep_min: usize,
+    pub device: DeviceModel,
+}
+
+impl Default for NuParams {
+    fn default() -> Self {
+        Self {
+            max_passes: 10,
+            max_iterations: 20,
+            tolerance: 0.01,
+            tolerance_drop: 10.0,
+            aggregation_tolerance: 0.8,
+            rho: 4,
+            switch_move: 64,
+            switch_agg: 128,
+            probe: ProbeStrategy::QuadraticDouble,
+            values: ValueKind::F32,
+            block_size: 128,
+            lockstep_min: 128,
+            device: DeviceModel::default(),
+        }
+    }
+}
+
+/// Is Pick-Less mode active in iteration `li` (Algorithm 5 line 4)?
+#[inline]
+pub fn pick_less_active(li: usize, rho: usize) -> bool {
+    rho != 0 && (li + rho / 2) % rho == 0
+}
+
+/// Per-pass statistics with estimated device time per phase.
+#[derive(Clone, Debug, Default)]
+pub struct NuPassStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub iterations: usize,
+    pub communities: usize,
+    /// Estimated device time of this pass's local-moving kernels (ns).
+    pub move_est_ns: u64,
+    /// Estimated device time of this pass's aggregation kernels (ns).
+    pub agg_est_ns: u64,
+    /// Estimated other device/host work (init, renumber, dendrogram).
+    pub other_est_ns: u64,
+    pub dq: f64,
+    /// Mean occupancy of this pass's local-moving launches.
+    pub occupancy: f64,
+}
+
+/// Result of a ν-Louvain run.
+#[derive(Debug, Default)]
+pub struct NuResult {
+    pub membership: Vec<u32>,
+    pub modularity: f64,
+    pub num_communities: usize,
+    pub passes: usize,
+    /// Estimated total device time (the simulator's "GPU runtime").
+    pub est_gpu_ns: u64,
+    /// Host wall time of the simulation itself (not the GPU estimate).
+    pub sim_wall_ns: u64,
+    pub pass_stats: Vec<NuPassStats>,
+    pub counters: Counters,
+    /// Total kernel work (for roofline-style reporting).
+    pub work: KernelWork,
+    /// Would this run fit on the modeled device?
+    pub fits_memory: bool,
+}
+
+impl NuResult {
+    pub fn phase_split(&self) -> (f64, f64, f64) {
+        let mv: u64 = self.pass_stats.iter().map(|p| p.move_est_ns).sum();
+        let ag: u64 = self.pass_stats.iter().map(|p| p.agg_est_ns).sum();
+        let tot = self.est_gpu_ns.max(1) as f64;
+        (mv as f64 / tot, ag as f64 / tot, ((tot - mv as f64 - ag as f64) / tot).max(0.0))
+    }
+
+    pub fn first_pass_fraction(&self) -> f64 {
+        let f = self
+            .pass_stats
+            .first()
+            .map(|p| p.move_est_ns + p.agg_est_ns + p.other_est_ns)
+            .unwrap_or(0) as f64;
+        f / self.est_gpu_ns.max(1) as f64
+    }
+}
+
+/// The ν-Louvain algorithm object.
+pub struct NuLouvain {
+    pub params: NuParams,
+}
+
+impl NuLouvain {
+    pub fn new(params: NuParams) -> Self {
+        Self { params }
+    }
+
+    /// Run on `g`.
+    pub fn run(&self, g: &Csr) -> NuResult {
+        let p = &self.params;
+        let dev = &p.device;
+        let t_start = Instant::now();
+        let n0 = g.num_vertices();
+        let m = g.total_weight();
+        let mut result = NuResult {
+            membership: (0..n0 as u32).collect(),
+            fits_memory: dev.nu_louvain_fits(n0 as u64, g.num_edges() as u64),
+            ..Default::default()
+        };
+        if n0 == 0 || m == 0.0 {
+            result.num_communities = n0;
+            return result;
+        }
+
+        let mut owned: Option<Csr> = None;
+        let mut tau = p.tolerance;
+
+        for pass in 0..p.max_passes {
+            let gp: &Csr = owned.as_ref().unwrap_or(g);
+            let np = gp.num_vertices();
+
+            let k: Vec<f64> = gp.vertex_weights();
+            let mut sigma = k.clone();
+            let mut membership: Vec<u32> = (0..np as u32).collect();
+            let mut affected = vec![1u32; np];
+            let mut tables = PerVertexTables::new(gp.num_edges().max(1), p.values, p.probe);
+            // Init kernels: vertexWeights + resets (memory-bound sweep).
+            let init_work = KernelWork {
+                warp_cycles: (gp.num_edges() as u64) * 2,
+                warps: (np as u64).div_ceil(32),
+                bytes: gp.num_edges() as u64 * 8 + np as u64 * 24,
+                launches: 3,
+            };
+            let mut stats = NuPassStats {
+                vertices: np,
+                edges: gp.num_edges(),
+                other_est_ns: dev.kernel_ns(&init_work),
+                ..Default::default()
+            };
+            result.work.merge(&init_work);
+
+            // Local-moving (Algorithm 5).
+            let mut iterations = 0usize;
+            let mut occupancy_sum = 0.0;
+            for li in 0..p.max_iterations {
+                let pl = pick_less_active(li, p.rho);
+                let out = move_iteration(
+                    gp, &mut membership, &k, &mut sigma, &mut affected, &mut tables, p, m, pl,
+                );
+                iterations += 1;
+                stats.dq += out.dq;
+                stats.move_est_ns += dev.kernel_ns(&out.work_thread) + dev.kernel_ns(&out.work_block);
+                occupancy_sum += dev.occupancy(&out.work_thread);
+                result.work.merge(&out.work_thread);
+                result.work.merge(&out.work_block);
+                result.counters.merge(&out.counters);
+                if out.dq <= tau {
+                    break;
+                }
+            }
+            stats.iterations = iterations;
+            stats.occupancy = occupancy_sum / iterations.max(1) as f64;
+
+            let n_comm = renumber_communities(&mut membership);
+            stats.communities = n_comm;
+            let converged = iterations <= 1;
+            let low_shrink = (n_comm as f64) / (np as f64) > p.aggregation_tolerance;
+            dendrogram::lookup(&mut result.membership, &membership);
+
+            if converged || low_shrink || pass + 1 == p.max_passes {
+                result.pass_stats.push(stats);
+                result.passes = pass + 1;
+                break;
+            }
+
+            // Aggregation (Algorithm 6).
+            let agg = aggregate(gp, &membership, n_comm, &mut tables, p);
+            stats.agg_est_ns = dev.kernel_ns(&agg.work_thread) + dev.kernel_ns(&agg.work_block);
+            result.work.merge(&agg.work_thread);
+            result.work.merge(&agg.work_block);
+            result.counters.merge(&agg.counters);
+            owned = Some(agg.graph);
+            tau /= p.tolerance_drop;
+
+            result.pass_stats.push(stats);
+            result.passes = pass + 1;
+        }
+
+        result.num_communities = renumber_communities(&mut result.membership);
+        result.modularity = modularity(g, &result.membership);
+        result.est_gpu_ns = result
+            .pass_stats
+            .iter()
+            .map(|s| s.move_est_ns + s.agg_est_ns + s.other_est_ns)
+            .sum();
+        result.sim_wall_ns = t_start.elapsed().as_nanos() as u64;
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::{gve::GveLouvain, params::LouvainParams};
+
+    #[test]
+    fn pick_less_schedule_matches_algorithm5() {
+        // ρ=4: PL active when (li + 2) % 4 == 0 -> li = 2, 6, 10, ...
+        let active: Vec<usize> = (0..12).filter(|&li| pick_less_active(li, 4)).collect();
+        assert_eq!(active, vec![2, 6, 10]);
+        // ρ=0 disables.
+        assert!((0..20).all(|li| !pick_less_active(li, 0)));
+    }
+
+    #[test]
+    fn nu_louvain_finds_communities_on_all_families() {
+        for f in GraphFamily::ALL {
+            let g = generate(f, 10, 3);
+            let out = NuLouvain::new(NuParams::default()).run(&g);
+            assert!(out.modularity > 0.3, "{f:?}: q={}", out.modularity);
+            assert!(out.num_communities > 1, "{f:?}");
+            assert!(out.est_gpu_ns > 0);
+            assert!(out.fits_memory);
+        }
+    }
+
+    #[test]
+    fn nu_quality_close_to_gve() {
+        for f in [GraphFamily::Web, GraphFamily::Road] {
+            let g = generate(f, 10, 13);
+            let nu = NuLouvain::new(NuParams::default()).run(&g);
+            let gve = GveLouvain::new(LouvainParams::default()).run(&g);
+            // Paper Fig 13c: ν-Louvain ~0.5% lower modularity on average.
+            assert!(
+                nu.modularity > gve.modularity - 0.08,
+                "{f:?}: nu={} gve={}",
+                nu.modularity,
+                gve.modularity
+            );
+        }
+    }
+
+    #[test]
+    fn disabling_pick_less_hurts_convergence_or_quality() {
+        // Road lattices have exactly the symmetric adjacent-id pairs that
+        // trigger swap cycles (§4.3.1).
+        let g = generate(GraphFamily::Road, 10, 5);
+        let with_pl = NuLouvain::new(NuParams::default()).run(&g);
+        let no_pl = NuLouvain::new(NuParams { rho: 0, ..Default::default() }).run(&g);
+        let iters = |r: &NuResult| r.pass_stats.iter().map(|p| p.iterations).sum::<usize>();
+        assert!(
+            iters(&no_pl) > iters(&with_pl) || no_pl.modularity < with_pl.modularity,
+            "no-PL: iters={} q={}; PL4: iters={} q={}",
+            iters(&no_pl),
+            no_pl.modularity,
+            iters(&with_pl),
+            with_pl.modularity
+        );
+    }
+
+    #[test]
+    fn later_passes_have_lower_occupancy() {
+        let g = generate(GraphFamily::Road, 12, 7);
+        let out = NuLouvain::new(NuParams::default()).run(&g);
+        assert!(out.passes >= 2, "need multiple passes, got {}", out.passes);
+        let first = out.pass_stats.first().unwrap().occupancy;
+        let last = out.pass_stats.last().unwrap().occupancy;
+        assert!(last <= first, "occupancy should collapse: first={first} last={last}");
+    }
+
+    #[test]
+    fn est_time_accounts_all_phases() {
+        let g = generate(GraphFamily::Web, 10, 9);
+        let out = NuLouvain::new(NuParams::default()).run(&g);
+        let (mv, ag, other) = out.phase_split();
+        assert!((mv + ag + other - 1.0).abs() < 1e-6);
+        assert!(mv > 0.0);
+        assert!(out.first_pass_fraction() > 0.3);
+    }
+
+    #[test]
+    fn f32_and_f64_values_agree_on_quality() {
+        let g = generate(GraphFamily::Web, 10, 11);
+        let q32 = NuLouvain::new(NuParams { values: ValueKind::F32, ..Default::default() }).run(&g).modularity;
+        let q64 = NuLouvain::new(NuParams { values: ValueKind::F64, ..Default::default() }).run(&g).modularity;
+        // Fig 8: f32 maintains community quality.
+        assert!((q32 - q64).abs() < 0.02, "q32={q32} q64={q64}");
+    }
+
+    #[test]
+    fn probe_strategies_same_communities_different_probes() {
+        let g = generate(GraphFamily::Social, 9, 17);
+        let mut qualities = Vec::new();
+        for s in ProbeStrategy::ALL {
+            let out = NuLouvain::new(NuParams { probe: s, ..Default::default() }).run(&g);
+            assert_eq!(out.counters.table_ops > 0, true);
+            qualities.push(out.modularity);
+        }
+        for q in &qualities {
+            assert!((q - qualities[0]).abs() < 0.05, "{qualities:?}");
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Lock-step warp semantics (§3.5, §4.3.1).
+//!
+//! A warp is 32 threads executing in lock-step; in the thread-per-vertex
+//! kernel, 32 *consecutive* vertices (SM assignment is by vertex id)
+//! compute their best community against the shared membership vector and
+//! only then apply their moves.  This compute-then-apply granularity is
+//! what lets two symmetrically-connected vertices read each other's old
+//! community and swap forever — the non-convergence the Pick-Less
+//! heuristic exists to break.
+//!
+//! Divergence: a lock-step warp retires when its slowest lane does, so
+//! the cycle cost of a warp is the **max** over lane costs, and idle
+//! lanes (pruned / wrong-kernel vertices) still ride along at zero cost.
+
+/// Threads per warp (NVIDIA).
+pub const WARP_SIZE: usize = 32;
+
+/// One lane's pending move decision.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneMove {
+    pub vertex: usize,
+    pub to: u32,
+    pub dq: f64,
+}
+
+/// Reusable decision buffer for one warp's compute phase.
+#[derive(Debug, Default)]
+pub struct WarpDecisions {
+    moves: Vec<LaneMove>,
+}
+
+impl WarpDecisions {
+    pub fn new() -> Self {
+        Self { moves: Vec::with_capacity(WARP_SIZE) }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.moves.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, m: LaneMove) {
+        self.moves.push(m);
+    }
+
+    #[inline]
+    pub fn drain(&mut self) -> std::vec::Drain<'_, LaneMove> {
+        self.moves.drain(..)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+/// Lock-step warp cost: max over lane cycle counts.
+#[inline]
+pub fn warp_cycles(lane_cycles: &[u64]) -> u64 {
+    lane_cycles.iter().copied().max().unwrap_or(0)
+}
+
+/// Iterate `0..n` in warp-sized id ranges.
+pub fn warps(n: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    (0..n.div_ceil(WARP_SIZE)).map(move |w| {
+        let lo = w * WARP_SIZE;
+        lo..(lo + WARP_SIZE).min(n)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warps_cover_range_in_order() {
+        let rs: Vec<_> = warps(70).collect();
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0], 0..32);
+        assert_eq!(rs[1], 32..64);
+        assert_eq!(rs[2], 64..70);
+    }
+
+    #[test]
+    fn warps_empty() {
+        assert_eq!(warps(0).count(), 0);
+    }
+
+    #[test]
+    fn warp_cycles_is_lane_max() {
+        assert_eq!(warp_cycles(&[3, 9, 1]), 9);
+        assert_eq!(warp_cycles(&[]), 0);
+    }
+
+    #[test]
+    fn decisions_buffer_reuse() {
+        let mut d = WarpDecisions::new();
+        d.push(LaneMove { vertex: 1, to: 2, dq: 0.5 });
+        assert_eq!(d.len(), 1);
+        let taken: Vec<_> = d.drain().collect();
+        assert_eq!(taken.len(), 1);
+        assert!(d.is_empty());
+    }
+}

@@ -1,0 +1,208 @@
+//! Edge-list → CSR builders (dedupe, symmetrize, self-loop policy).
+
+use super::csr::Csr;
+use crate::{EdgeWeight, VertexId};
+
+/// Accumulating edge-list builder.
+///
+/// Duplicate `(u, v)` pairs have their weights summed (the convention
+/// the aggregation phase relies on); `build_undirected` mirrors each
+/// edge, `build_directed` keeps slots as inserted.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId, EdgeWeight)>,
+    keep_self_loops: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        Self { n, edges: Vec::new(), keep_self_loops: true }
+    }
+
+    pub fn drop_self_loops(mut self) -> Self {
+        self.keep_self_loops = false;
+        self
+    }
+
+    /// Add an edge (chainable).
+    pub fn edge(mut self, u: VertexId, v: VertexId, w: EdgeWeight) -> Self {
+        self.push(u, v, w);
+        self
+    }
+
+    /// Add an edge (by reference).
+    pub fn push(&mut self, u: VertexId, v: VertexId, w: EdgeWeight) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.edges.push((u, v, w));
+    }
+
+    pub fn num_pending(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build an undirected CSR: each `(u,v)` lands in both adjacency
+    /// lists (a self-loop lands once), parallel edges merged.
+    pub fn build_undirected(self) -> Csr {
+        let mut dir: Vec<(VertexId, VertexId, EdgeWeight)> = Vec::with_capacity(self.edges.len() * 2);
+        for (u, v, w) in &self.edges {
+            if u == v {
+                if self.keep_self_loops {
+                    dir.push((*u, *v, *w));
+                }
+            } else {
+                dir.push((*u, *v, *w));
+                dir.push((*v, *u, *w));
+            }
+        }
+        build_from_directed(self.n, dir)
+    }
+
+    /// Build a directed CSR from the slots as inserted (parallel edges
+    /// merged).
+    pub fn build_directed(self) -> Csr {
+        let keep = self.keep_self_loops;
+        let dir = self
+            .edges
+            .into_iter()
+            .filter(|(u, v, _)| keep || u != v)
+            .collect();
+        build_from_directed(self.n, dir)
+    }
+}
+
+/// Counting-sort directed slots into CSR, merging duplicate targets.
+fn build_from_directed(n: usize, mut edges: Vec<(VertexId, VertexId, EdgeWeight)>) -> Csr {
+    // Sort by (source, target) to merge duplicates and give deterministic
+    // neighbour order (ascending target) — the tie-break contract shared
+    // with the Pallas tile builders.
+    edges.sort_unstable_by_key(|&(u, v, _)| ((u as u64) << 32) | v as u64);
+
+    let mut offsets = vec![0usize; n + 1];
+    let mut targets: Vec<VertexId> = Vec::with_capacity(edges.len());
+    let mut weights: Vec<EdgeWeight> = Vec::with_capacity(edges.len());
+
+    let mut i = 0usize;
+    while i < edges.len() {
+        let (u, v, mut w) = edges[i];
+        let mut j = i + 1;
+        while j < edges.len() && edges[j].0 == u && edges[j].1 == v {
+            w += edges[j].2;
+            j += 1;
+        }
+        offsets[u as usize + 1] += 1;
+        targets.push(v);
+        weights.push(w);
+        i = j;
+    }
+    for v in 0..n {
+        offsets[v + 1] += offsets[v];
+    }
+    Csr { offsets, targets, weights }
+}
+
+/// Symmetrize an arbitrary directed CSR (paper: "after adding reverse
+/// edges" — LAW web graphs are directed and get mirrored).
+///
+/// Pattern symmetrization: each unordered pair `{u, v}` appears once in
+/// the output with the *maximum* weight over its directed instances
+/// (SuiteSparse-script semantics for the unit-weight repro graphs).
+pub fn symmetrize(g: &Csr) -> Csr {
+    let mut pairs: Vec<(VertexId, VertexId, EdgeWeight)> = Vec::with_capacity(g.num_edges());
+    for v in 0..g.num_vertices() {
+        for (t, w) in g.neighbours(v) {
+            let (a, b) = if (t as usize) < v { (t, v as VertexId) } else { (v as VertexId, t) };
+            pairs.push((a, b, w));
+        }
+    }
+    pairs.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)).then(y.2.total_cmp(&x.2)));
+    pairs.dedup_by_key(|p| (p.0, p.1)); // keeps first = max weight
+    let mut b = GraphBuilder::new(g.num_vertices());
+    for (u, v, w) in pairs {
+        b.push(u, v, w);
+    }
+    b.build_undirected()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn undirected_mirrors_edges() {
+        let g = GraphBuilder::new(3).edge(0, 1, 1.0).edge(1, 2, 2.0).build_undirected();
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.edges(1).0, &[0, 2]);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn duplicate_edges_merge_weights() {
+        let g = GraphBuilder::new(2)
+            .edge(0, 1, 1.0)
+            .edge(0, 1, 2.0)
+            .build_undirected();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.edges(0).1, &[3.0]);
+    }
+
+    #[test]
+    fn self_loops_kept_once() {
+        let g = GraphBuilder::new(2).edge(0, 0, 5.0).edge(0, 1, 1.0).build_undirected();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.vertex_weight(0), 6.0);
+        // total weight: (5 + 1 + 1)/2 = 3.5
+        assert_eq!(g.total_weight(), 3.5);
+    }
+
+    #[test]
+    fn self_loops_dropped_when_asked() {
+        let g = GraphBuilder::new(2).drop_self_loops().edge(0, 0, 5.0).edge(0, 1, 1.0).build_undirected();
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn neighbour_order_ascending() {
+        let g = GraphBuilder::new(5)
+            .edge(0, 4, 1.0)
+            .edge(0, 2, 1.0)
+            .edge(0, 3, 1.0)
+            .build_undirected();
+        assert_eq!(g.edges(0).0, &[2, 3, 4]);
+    }
+
+    #[test]
+    fn directed_build_keeps_direction() {
+        let g = GraphBuilder::new(3).edge(0, 1, 1.0).edge(2, 1, 1.0).build_directed();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.degree(1), 0);
+        assert!(!g.is_symmetric());
+    }
+
+    #[test]
+    fn symmetrize_directed_graph() {
+        let d = GraphBuilder::new(3).edge(0, 1, 1.0).edge(1, 2, 1.0).edge(2, 0, 1.0).build_directed();
+        let s = symmetrize(&d);
+        s.validate().unwrap();
+        assert!(s.is_symmetric());
+        assert_eq!(s.num_edges(), 6);
+        assert!(s.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).build_undirected();
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices_have_zero_degree() {
+        let g = GraphBuilder::new(10).edge(0, 1, 1.0).build_undirected();
+        for v in 2..10 {
+            assert_eq!(g.degree(v), 0);
+        }
+    }
+}

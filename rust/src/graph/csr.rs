@@ -1,0 +1,312 @@
+//! Weighted CSR and holey-CSR graph representations.
+//!
+//! * [`Csr`] — the immutable input / super-vertex graph: `offsets`
+//!   (len N+1), `targets`, `weights`.  Undirected graphs store both
+//!   directions; `|E|` counts directed slots to match the paper's
+//!   Table 2 convention ("after adding reverse edges").
+//! * [`HoleyCsr`] — preallocated CSR with per-vertex fill cursors, the
+//!   target of the aggregation phase (offsets over-estimate degrees, so
+//!   edge/weight arrays have gaps; `compact()` squeezes it into a
+//!   [`Csr`]).
+
+use crate::{EdgeWeight, VertexId};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Immutable weighted CSR graph.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub offsets: Vec<usize>,
+    pub targets: Vec<VertexId>,
+    pub weights: Vec<EdgeWeight>,
+}
+
+impl Csr {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Number of directed edge slots (undirected edges count twice).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Neighbour slice of `v`: `(targets, weights)`.
+    #[inline]
+    pub fn edges(&self, v: usize) -> (&[VertexId], &[EdgeWeight]) {
+        let (lo, hi) = (self.offsets[v], self.offsets[v + 1]);
+        (&self.targets[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Iterator over `(target, weight)` pairs of `v`.
+    #[inline]
+    pub fn neighbours(&self, v: usize) -> impl Iterator<Item = (VertexId, EdgeWeight)> + '_ {
+        let (t, w) = self.edges(v);
+        t.iter().copied().zip(w.iter().copied())
+    }
+
+    /// Weighted degree `K_v = Σ_j w_vj` (f64 accumulation per paper §5.1.2).
+    pub fn vertex_weight(&self, v: usize) -> f64 {
+        self.edges(v).1.iter().map(|&w| w as f64).sum()
+    }
+
+    /// `K_v` for every vertex.
+    pub fn vertex_weights(&self) -> Vec<f64> {
+        (0..self.num_vertices()).map(|v| self.vertex_weight(v)).collect()
+    }
+
+    /// Total edge weight `m = Σ_ij w_ij / 2` (self-loops count once per
+    /// stored slot, i.e. `w/2` per direction like every other edge).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum::<f64>() / 2.0
+    }
+
+    /// Structural validation: sorted offsets, targets in range,
+    /// non-negative weights. Returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.is_empty() {
+            return Err("offsets empty (need at least [0])".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if *self.offsets.last().unwrap() != self.targets.len() {
+            return Err(format!(
+                "offsets end {} != targets len {}",
+                self.offsets.last().unwrap(),
+                self.targets.len()
+            ));
+        }
+        if self.targets.len() != self.weights.len() {
+            return Err("targets/weights length mismatch".into());
+        }
+        let n = self.num_vertices();
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets not monotone at {v}"));
+            }
+        }
+        if let Some(&t) = self.targets.iter().find(|&&t| (t as usize) >= n) {
+            return Err(format!("target {t} out of range (n={n})"));
+        }
+        if self.weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
+            return Err("non-finite or negative weight".into());
+        }
+        Ok(())
+    }
+
+    /// Check symmetry (every directed slot has a reverse with equal
+    /// weight). O(E log E); intended for tests/generators.
+    pub fn is_symmetric(&self) -> bool {
+        use std::collections::HashMap;
+        let mut fwd: HashMap<(u32, u32), f64> = HashMap::new();
+        for v in 0..self.num_vertices() {
+            for (t, w) in self.neighbours(v) {
+                *fwd.entry((v as u32, t)).or_insert(0.0) += w as f64;
+            }
+        }
+        fwd.iter().all(|(&(a, b), &w)| {
+            fwd.get(&(b, a)).map(|&w2| (w - w2).abs() < 1e-6 * (1.0 + w.abs())).unwrap_or(false)
+        })
+    }
+}
+
+/// Preallocated CSR with per-vertex fill cursors (the aggregation
+/// target). `offsets` over-estimate degrees; `fill[v]` tracks how many
+/// slots of `v` are used. Writes are lock-free via atomic cursors.
+#[derive(Debug)]
+pub struct HoleyCsr {
+    pub offsets: Vec<usize>,
+    fill: Vec<AtomicUsize>,
+    pub targets: Vec<VertexId>,
+    pub weights: Vec<EdgeWeight>,
+}
+
+impl HoleyCsr {
+    /// Allocate from an offsets array (already exclusive-scanned).
+    pub fn with_offsets(offsets: Vec<usize>) -> Self {
+        let cap = *offsets.last().unwrap_or(&0);
+        let n = offsets.len().saturating_sub(1);
+        Self {
+            offsets,
+            fill: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            targets: vec![0; cap],
+            weights: vec![0.0; cap],
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Used degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.fill[v].load(Ordering::Relaxed)
+    }
+
+    /// Capacity reserved for `v`.
+    #[inline]
+    pub fn capacity(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Reserve the next slot of `v` atomically; returns the global slot
+    /// index. Panics in debug if the over-estimate was violated.
+    #[inline]
+    pub fn claim_slot(&self, v: usize) -> usize {
+        let k = self.fill[v].fetch_add(1, Ordering::Relaxed);
+        debug_assert!(k < self.capacity(v), "holey CSR overflow at vertex {v}");
+        self.offsets[v] + k
+    }
+
+    /// Write a claimed slot. The caller must own `slot` via
+    /// [`claim_slot`]; distinct slots never alias, so the unsafe writes
+    /// are race-free.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn write_slot(&self, slot: usize, target: VertexId, weight: EdgeWeight) {
+        unsafe {
+            *(self.targets.as_ptr() as *mut VertexId).add(slot) = target;
+            *(self.weights.as_ptr() as *mut EdgeWeight).add(slot) = weight;
+        }
+    }
+
+    /// Append an edge `(v -> target, weight)`.
+    #[inline]
+    pub fn push_edge(&self, v: usize, target: VertexId, weight: EdgeWeight) {
+        let slot = self.claim_slot(v);
+        self.write_slot(slot, target, weight);
+    }
+
+    /// Used neighbour slice of `v`.
+    #[inline]
+    pub fn edges(&self, v: usize) -> (&[VertexId], &[EdgeWeight]) {
+        let lo = self.offsets[v];
+        let hi = lo + self.degree(v);
+        (&self.targets[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// Squeeze out the holes into an immutable [`Csr`].
+    pub fn compact(&self) -> Csr {
+        let n = self.num_vertices();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut total = 0usize;
+        for v in 0..n {
+            total += self.degree(v);
+            offsets.push(total);
+        }
+        let mut targets = Vec::with_capacity(total);
+        let mut weights = Vec::with_capacity(total);
+        for v in 0..n {
+            let (t, w) = self.edges(v);
+            targets.extend_from_slice(t);
+            weights.extend_from_slice(w);
+        }
+        Csr { offsets, targets, weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn triangle() -> Csr {
+        // 0-1, 1-2, 0-2 with weights 1, 2, 3.
+        GraphBuilder::new(3)
+            .edge(0, 1, 1.0)
+            .edge(1, 2, 2.0)
+            .edge(0, 2, 3.0)
+            .build_undirected()
+    }
+
+    #[test]
+    fn csr_counts_and_degrees() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 6); // both directions
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(2), 2);
+    }
+
+    #[test]
+    fn csr_weights_and_total() {
+        let g = triangle();
+        assert_eq!(g.vertex_weight(0), 4.0);
+        assert_eq!(g.vertex_weight(1), 3.0);
+        assert_eq!(g.vertex_weight(2), 5.0);
+        assert_eq!(g.total_weight(), 6.0);
+    }
+
+    #[test]
+    fn csr_validate_catches_bad_target() {
+        let mut g = triangle();
+        g.targets[0] = 99;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn csr_validate_catches_bad_offsets() {
+        let g = Csr { offsets: vec![0, 2, 1], targets: vec![0, 1], weights: vec![1.0, 1.0] };
+        assert!(g.validate().is_err());
+        let g = Csr { offsets: vec![1, 2], targets: vec![0], weights: vec![1.0] };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn csr_symmetry() {
+        assert!(triangle().is_symmetric());
+        let asym = Csr { offsets: vec![0, 1, 1], targets: vec![1], weights: vec![1.0] };
+        assert!(!asym.is_symmetric());
+    }
+
+    #[test]
+    fn holey_push_and_compact() {
+        let offsets = vec![0usize, 4, 8, 12]; // over-estimated degree 4 each
+        let h = HoleyCsr::with_offsets(offsets);
+        h.push_edge(0, 1, 1.0);
+        h.push_edge(1, 0, 1.0);
+        h.push_edge(1, 2, 2.5);
+        h.push_edge(2, 1, 2.5);
+        assert_eq!(h.degree(0), 1);
+        assert_eq!(h.degree(1), 2);
+        let c = h.compact();
+        c.validate().unwrap();
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.edges(1).0, &[0, 2]);
+        assert_eq!(c.edges(1).1, &[1.0, 2.5]);
+    }
+
+    #[test]
+    fn holey_concurrent_pushes_all_land() {
+        let n = 64;
+        let h = HoleyCsr::with_offsets((0..=n).map(|i| i * 8).collect());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for v in 0..n {
+                        h.push_edge(v, (t * 1000 + v) as u32, t as f32);
+                    }
+                });
+            }
+        });
+        for v in 0..n {
+            assert_eq!(h.degree(v), 4);
+        }
+        let c = h.compact();
+        assert_eq!(c.num_edges(), 4 * n);
+    }
+}

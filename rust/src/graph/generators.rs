@@ -1,0 +1,338 @@
+//! Synthetic graph generators mirroring the paper's dataset families.
+//!
+//! The evaluation graphs (Table 2) are SuiteSparse datasets from four
+//! families; none are redistributable inside this offline testbed, so
+//! each family is substituted by a generator reproducing the structural
+//! features that drive Louvain behaviour (DESIGN.md §2):
+//!
+//! * **Web** (LAW: indochina-2004 … sk-2005) — power-law degrees, high
+//!   average degree, *strong* planted communities (few, large) → high
+//!   modularity (~0.98 in the paper), first pass dominates.
+//! * **Social** (SNAP: com-LiveJournal, com-Orkut) — power-law, high
+//!   degree, *weak* community structure (high mixing) → low modularity,
+//!   aggregation-heavy.
+//! * **Road** (DIMACS10: asia_osm, europe_osm) — avg degree ≈ 2.1,
+//!   spatial lattice, many small communities → later passes dominate.
+//! * **K-mer** (GenBank: kmer_A2a, kmer_V1r) — avg degree ≈ 2.2, long
+//!   chains with sparse branching → later passes dominate.
+//!
+//! Every generator is deterministic in `(scale, seed)`.
+
+use super::builder::GraphBuilder;
+use super::csr::Csr;
+use crate::parallel::prng::Xoshiro256;
+use crate::VertexId;
+
+/// Dataset family of a generated graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GraphFamily {
+    Web,
+    Social,
+    Road,
+    Kmer,
+    /// Plain RMAT (used by ablations that only need skew, no ground truth).
+    Rmat,
+}
+
+impl GraphFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphFamily::Web => "web",
+            GraphFamily::Social => "social",
+            GraphFamily::Road => "road",
+            GraphFamily::Kmer => "kmer",
+            GraphFamily::Rmat => "rmat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "web" => Some(GraphFamily::Web),
+            "social" => Some(GraphFamily::Social),
+            "road" => Some(GraphFamily::Road),
+            "kmer" => Some(GraphFamily::Kmer),
+            "rmat" => Some(GraphFamily::Rmat),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [GraphFamily; 4] =
+        [GraphFamily::Web, GraphFamily::Social, GraphFamily::Road, GraphFamily::Kmer];
+}
+
+/// Generate a family graph with `2^scale` vertices.
+pub fn generate(family: GraphFamily, scale: u32, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    match family {
+        GraphFamily::Web => planted_partition(&PlantedPartition {
+            n,
+            n_communities: (n / 256).max(32).min(n / 8),
+            avg_degree: 24.0,
+            mixing: 0.03,
+            degree_exponent: 2.1,
+            max_degree: (n / 8).max(8),
+            community_size_exponent: 1.1,
+            seed,
+        }),
+        GraphFamily::Social => planted_partition(&PlantedPartition {
+            n,
+            n_communities: (n / 128).max(16).min(n / 8),
+            avg_degree: 40.0,
+            mixing: 0.35,
+            degree_exponent: 2.3,
+            max_degree: (n / 4).max(8),
+            community_size_exponent: 1.2,
+            seed,
+        }),
+        GraphFamily::Road => road(n, seed),
+        GraphFamily::Kmer => kmer(n, seed),
+        GraphFamily::Rmat => rmat(scale, 8, seed),
+    }
+}
+
+/// Parameters of the planted-partition (LFR-lite) generator.
+#[derive(Clone, Debug)]
+pub struct PlantedPartition {
+    pub n: usize,
+    pub n_communities: usize,
+    pub avg_degree: f64,
+    /// Fraction of edge endpoints leaving the home community.
+    pub mixing: f64,
+    /// Power-law exponent of the degree distribution.
+    pub degree_exponent: f64,
+    pub max_degree: usize,
+    /// Power-law exponent of community sizes.
+    pub community_size_exponent: f64,
+    pub seed: u64,
+}
+
+/// LFR-lite: power-law degrees + power-law community sizes + mixing.
+pub fn planted_partition(p: &PlantedPartition) -> Csr {
+    let mut rng = Xoshiro256::new(p.seed);
+    let n = p.n;
+    let nc = p.n_communities.max(1);
+
+    // Community sizes ~ power law, then normalized to n members.
+    let mut sizes: Vec<f64> = (0..nc)
+        .map(|_| rng.powerlaw(1000, p.community_size_exponent) as f64)
+        .collect();
+    let total: f64 = sizes.iter().sum();
+    for s in sizes.iter_mut() {
+        *s = (*s / total * n as f64).max(1.0);
+    }
+    // Assign members contiguously then shuffle ids so community != id-range.
+    let mut comm_of: Vec<u32> = Vec::with_capacity(n);
+    for (c, s) in sizes.iter().enumerate() {
+        let take = (*s).round() as usize;
+        for _ in 0..take {
+            if comm_of.len() < n {
+                comm_of.push(c as u32);
+            }
+        }
+    }
+    while comm_of.len() < n {
+        comm_of.push(rng.below(nc as u64) as u32);
+    }
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut community = vec![0u32; n];
+    for (slot, &v) in perm.iter().enumerate() {
+        community[v as usize] = comm_of[slot];
+    }
+
+    // Membership lists for intra-community endpoint sampling.
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); nc];
+    for (v, &c) in community.iter().enumerate() {
+        members[c as usize].push(v as u32);
+    }
+
+    // Degree targets: truncated power law rescaled to the requested mean.
+    let raw: Vec<f64> =
+        (0..n).map(|_| rng.powerlaw(p.max_degree as u64, p.degree_exponent) as f64).collect();
+    let mean = raw.iter().sum::<f64>() / n as f64;
+    let scale = p.avg_degree / (2.0 * mean); // each generated edge adds 2 endpoints
+
+    let mut b = GraphBuilder::new(n).drop_self_loops();
+    for v in 0..n {
+        let d = (raw[v] * scale).round() as usize;
+        let c = community[v] as usize;
+        for _ in 0..d {
+            let intra = !rng.chance(p.mixing) && members[c].len() > 1;
+            let u = if intra {
+                loop {
+                    let u = members[c][rng.below(members[c].len() as u64) as usize];
+                    if u as usize != v {
+                        break u;
+                    }
+                }
+            } else {
+                loop {
+                    let u = rng.below(n as u64) as u32;
+                    if u as usize != v {
+                        break u;
+                    }
+                }
+            };
+            b.push(v as VertexId, u, 1.0);
+        }
+    }
+    b.build_undirected()
+}
+
+/// Road-network analogue: 2-D lattice with sparse link retention
+/// (target average degree ≈ 2.1, like asia_osm / europe_osm).
+pub fn road(n: usize, seed: u64) -> Csr {
+    let mut rng = Xoshiro256::new(seed ^ 0x0a0a);
+    let side = (n as f64).sqrt().ceil() as usize;
+    let keep = 0.53; // 4·keep ≈ 2.12 average degree
+    let mut b = GraphBuilder::new(n).drop_self_loops();
+    let idx = |r: usize, c: usize| (r * side + c) as u32;
+    for r in 0..side {
+        for c in 0..side {
+            let v = idx(r, c) as usize;
+            if v >= n {
+                continue;
+            }
+            if c + 1 < side && ((idx(r, c + 1) as usize) < n) && rng.chance(keep) {
+                b.push(v as VertexId, idx(r, c + 1), 1.0);
+            }
+            if r + 1 < side && ((idx(r + 1, c) as usize) < n) && rng.chance(keep) {
+                b.push(v as VertexId, idx(r + 1, c), 1.0);
+            }
+        }
+    }
+    b.build_undirected()
+}
+
+/// Protein k-mer analogue: long chains with sparse branch links
+/// (average degree ≈ 2.2, like kmer_A2a / kmer_V1r).
+pub fn kmer(n: usize, seed: u64) -> Csr {
+    let mut rng = Xoshiro256::new(seed ^ 0x4b4b);
+    let mut b = GraphBuilder::new(n).drop_self_loops();
+    let mut v = 0usize;
+    while v < n {
+        // Chain length ~ geometric with mean ≈ 64.
+        let len = (1.0 + rng.unit_f64().ln() / (1.0f64 - 1.0 / 64.0).ln()) as usize;
+        let len = len.clamp(2, 512).min(n - v);
+        for i in 0..len.saturating_sub(1) {
+            b.push((v + i) as VertexId, (v + i + 1) as VertexId, 1.0);
+        }
+        // Sparse branches off the chain (~10% of vertices).
+        for i in 0..len {
+            if rng.chance(0.10) {
+                let u = rng.below(n as u64) as u32;
+                if u as usize != v + i {
+                    b.push((v + i) as VertexId, u, 1.0);
+                }
+            }
+        }
+        v += len;
+    }
+    b.build_undirected()
+}
+
+/// RMAT(a=0.57, b=0.19, c=0.19, d=0.05) with `2^scale` vertices and
+/// `edgefactor · 2^scale` undirected edges.
+pub fn rmat(scale: u32, edgefactor: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * edgefactor;
+    let (a, b_, c) = (0.57, 0.19, 0.19);
+    let mut rng = Xoshiro256::new(seed ^ 0x52_4d_41_54);
+    let mut b = GraphBuilder::new(n).drop_self_loops();
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for bit in (0..scale).rev() {
+            let r = rng.unit_f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b_ {
+                (0, 1)
+            } else if r < a + b_ + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u |= du << bit;
+            v |= dv << bit;
+        }
+        if u != v {
+            b.push(u as VertexId, v as VertexId, 1.0);
+        }
+    }
+    b.build_undirected()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_all_families_valid_and_symmetric() {
+        for f in GraphFamily::ALL {
+            let g = generate(f, 10, 42);
+            g.validate().unwrap();
+            assert!(g.is_symmetric(), "{f:?} not symmetric");
+            assert!(g.num_vertices() == 1 << 10);
+            assert!(g.num_edges() > 0, "{f:?} empty");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        for f in GraphFamily::ALL {
+            let a = generate(f, 9, 7);
+            let b = generate(f, 9, 7);
+            assert_eq!(a, b, "{f:?} not deterministic");
+            let c = generate(f, 9, 8);
+            assert_ne!(a, c, "{f:?} ignores seed");
+        }
+    }
+
+    #[test]
+    fn family_average_degrees_match_table2_shape() {
+        let web = generate(GraphFamily::Web, 12, 1);
+        let social = generate(GraphFamily::Social, 12, 1);
+        let road = generate(GraphFamily::Road, 12, 1);
+        let kmer = generate(GraphFamily::Kmer, 12, 1);
+        let avg = |g: &Csr| g.num_edges() as f64 / g.num_vertices() as f64;
+        // Paper Table 2: web 8.6–41, social 17–76, road ≈2.1, kmer ≈2.1–2.2.
+        assert!(avg(&web) > 10.0, "web avg degree {}", avg(&web));
+        assert!(avg(&social) > 15.0, "social avg degree {}", avg(&social));
+        assert!((1.4..3.2).contains(&avg(&road)), "road avg degree {}", avg(&road));
+        assert!((1.4..3.4).contains(&avg(&kmer)), "kmer avg degree {}", avg(&kmer));
+        // Web/social are an order of magnitude denser than road/kmer.
+        assert!(avg(&web) > 4.0 * avg(&road));
+    }
+
+    #[test]
+    fn web_degrees_are_skewed() {
+        let g = generate(GraphFamily::Web, 12, 3);
+        let mut degs: Vec<usize> = (0..g.num_vertices()).map(|v| g.degree(v)).collect();
+        degs.sort_unstable();
+        let median = degs[degs.len() / 2];
+        let max = *degs.last().unwrap();
+        assert!(max > 8 * median.max(1), "no skew: median={median} max={max}");
+    }
+
+    #[test]
+    fn rmat_respects_edgefactor_roughly() {
+        let g = rmat(10, 8, 5);
+        let m = g.num_edges() / 2;
+        // Dedup + self-loop removal eats some edges; expect within 40%.
+        assert!(m > (1 << 10) * 8 * 6 / 10, "m={m}");
+    }
+
+    #[test]
+    fn road_is_spatially_local() {
+        let g = road(1 << 10, 9);
+        let side = ((1usize << 10) as f64).sqrt().ceil() as usize;
+        for v in 0..g.num_vertices() {
+            for (t, _) in g.neighbours(v) {
+                let (vr, vc) = (v / side, v % side);
+                let (tr, tc) = (t as usize / side, t as usize % side);
+                let dist = vr.abs_diff(tr) + vc.abs_diff(tc);
+                assert_eq!(dist, 1, "non-lattice edge {v}->{t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Graph IO: MatrixMarket (the SuiteSparse interchange the paper loads),
+//! whitespace edge lists, and a fast binary format (the "Vite/Nido
+//! binary conversion" step of §5.2).
+
+use super::builder::{symmetrize, GraphBuilder};
+use super::csr::Csr;
+use crate::VertexId;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const BIN_MAGIC: &[u8; 8] = b"GVELOUV1";
+
+/// Read a MatrixMarket `.mtx` coordinate file (1-indexed).
+///
+/// `pattern` matrices get weight 1; `general` symmetry is symmetrized
+/// per the paper ("after adding reverse edges"), `symmetric` storage is
+/// mirrored.
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    if !header.starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file: {}", path.display());
+    }
+    let lower = header.to_lowercase();
+    let pattern = lower.contains("pattern");
+    let symmetric = lower.contains("symmetric");
+    if !lower.contains("coordinate") {
+        bail!("only coordinate format supported");
+    }
+
+    let mut line = String::new();
+    // Skip comments.
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("unexpected EOF before size line");
+        }
+        if !line.starts_with('%') && !line.trim().is_empty() {
+            break;
+        }
+    }
+    let mut it = line.split_whitespace();
+    let rows: usize = it.next().context("rows")?.parse()?;
+    let cols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+    let n = rows.max(cols);
+
+    let mut b = GraphBuilder::new(n);
+    let mut seen = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("row idx")?.parse()?;
+        let j: usize = it.next().context("col idx")?.parse()?;
+        let w: f32 = if pattern { 1.0 } else { it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0) };
+        if i == 0 || j == 0 || i > n || j > n {
+            bail!("index out of range: {i} {j} (n={n})");
+        }
+        b.push((i - 1) as VertexId, (j - 1) as VertexId, w.abs());
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("nnz mismatch: header {nnz}, file {seen}");
+    }
+    if symmetric {
+        Ok(b.build_undirected())
+    } else {
+        Ok(symmetrize(&b.build_directed()))
+    }
+}
+
+/// Write a graph as MatrixMarket (symmetric coordinate real, lower
+/// triangle + self-loops once).
+pub fn write_matrix_market(g: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let mut entries: Vec<(usize, usize, f32)> = Vec::new();
+    for v in 0..g.num_vertices() {
+        for (t, wt) in g.neighbours(v) {
+            if (t as usize) <= v {
+                entries.push((v + 1, t as usize + 1, wt));
+            }
+        }
+    }
+    writeln!(w, "%%MatrixMarket matrix coordinate real symmetric")?;
+    writeln!(w, "{} {} {}", g.num_vertices(), g.num_vertices(), entries.len())?;
+    for (i, j, wt) in entries {
+        writeln!(w, "{i} {j} {wt}")?;
+    }
+    Ok(())
+}
+
+/// Read a whitespace edge list (`u v [w]`, 0-indexed) as undirected.
+pub fn read_edge_list(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut edges: Vec<(u32, u32, f32)> = Vec::new();
+    let mut n = 0usize;
+    for line in r.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it.next().context("u")?.parse()?;
+        let v: u32 = it.next().context("v")?.parse()?;
+        let w: f32 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        n = n.max(u as usize + 1).max(v as usize + 1);
+        edges.push((u, v, w));
+    }
+    let mut b = GraphBuilder::new(n);
+    for (u, v, w) in edges {
+        b.push(u, v, w);
+    }
+    Ok(b.build_undirected())
+}
+
+/// Write the fast binary format (the analogue of Vite's conversion).
+pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&(o as u64).to_le_bytes())?;
+    }
+    for &t in &g.targets {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    for &wt in &g.weights {
+        w.write_all(&wt.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let m = u64::from_le_bytes(u64buf) as usize;
+    let mut offsets = vec![0usize; n + 1];
+    for o in offsets.iter_mut() {
+        r.read_exact(&mut u64buf)?;
+        *o = u64::from_le_bytes(u64buf) as usize;
+    }
+    let mut targets = vec![0u32; m];
+    let mut u32buf = [0u8; 4];
+    for t in targets.iter_mut() {
+        r.read_exact(&mut u32buf)?;
+        *t = u32::from_le_bytes(u32buf);
+    }
+    let mut weights = vec![0f32; m];
+    for w in weights.iter_mut() {
+        r.read_exact(&mut u32buf)?;
+        *w = f32::from_le_bytes(u32buf);
+    }
+    let g = Csr { offsets, targets, weights };
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+/// Load any supported format by extension (`.mtx`, `.bin`, else edge list).
+pub fn load(path: &Path) -> Result<Csr> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => read_matrix_market(path),
+        Some("bin") => read_binary(path),
+        _ => read_edge_list(path),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("gve_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        let g = generate(GraphFamily::Web, 8, 1);
+        let p = tmp("web.bin");
+        write_binary(&g, &p).unwrap();
+        let h = read_binary(&p).unwrap();
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn matrix_market_round_trip() {
+        let g = generate(GraphFamily::Road, 8, 2);
+        let p = tmp("road.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(g.num_vertices(), h.num_vertices());
+        assert_eq!(g.num_edges(), h.num_edges());
+        assert_eq!(g.total_weight(), h.total_weight());
+        assert!(h.is_symmetric());
+    }
+
+    #[test]
+    fn matrix_market_pattern_general() {
+        let p = tmp("pat.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate pattern general\n% comment\n3 3 2\n1 2\n3 1\n").unwrap();
+        let g = read_matrix_market(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4); // two undirected edges
+        assert!(g.is_symmetric());
+        assert!(g.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn matrix_market_rejects_bad_header() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "garbage\n1 1 0\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+
+    #[test]
+    fn matrix_market_rejects_nnz_mismatch() {
+        let p = tmp("mismatch.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate pattern general\n3 3 5\n1 2\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+
+    #[test]
+    fn edge_list_parses_comments_and_weights() {
+        let p = tmp("el.txt");
+        std::fs::write(&p, "# comment\n0 1 2.5\n1 2\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.edges(0).1, &[2.5]);
+        assert_eq!(g.edges(2).1, &[1.0]);
+    }
+
+    #[test]
+    fn load_dispatches_on_extension() {
+        let g = generate(GraphFamily::Kmer, 7, 3);
+        let pb = tmp("k.bin");
+        write_binary(&g, &pb).unwrap();
+        assert_eq!(load(&pb).unwrap(), g);
+        let pm = tmp("k.mtx");
+        write_matrix_market(&g, &pm).unwrap();
+        assert_eq!(load(&pm).unwrap().num_edges(), g.num_edges());
+    }
+}

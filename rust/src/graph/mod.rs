@@ -1,0 +1,13 @@
+//! Graph substrate: weighted CSR, holey CSR, builders, generators, IO.
+//!
+//! The paper stores the input graph and every super-vertex graph in
+//! CSR; the aggregation phase writes into a *holey* CSR whose offsets
+//! over-estimate each super-vertex degree (Algorithm 3 / Fig 4).
+
+pub mod builder;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod properties;
+
+pub use csr::{Csr, HoleyCsr};

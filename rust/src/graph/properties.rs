@@ -1,0 +1,106 @@
+//! Graph property summaries (the columns of Table 2).
+
+use super::csr::Csr;
+
+/// Summary statistics of a graph (Table 2 columns + degree spread).
+#[derive(Clone, Debug)]
+pub struct GraphProperties {
+    pub num_vertices: usize,
+    /// Directed edge slots ("after adding reverse edges").
+    pub num_edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub total_weight: f64,
+    pub self_loops: usize,
+    pub isolated: usize,
+}
+
+impl GraphProperties {
+    pub fn of(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut max_degree = 0usize;
+        let mut self_loops = 0usize;
+        let mut isolated = 0usize;
+        for v in 0..n {
+            let d = g.degree(v);
+            max_degree = max_degree.max(d);
+            if d == 0 {
+                isolated += 1;
+            }
+            self_loops += g.edges(v).0.iter().filter(|&&t| t as usize == v).count();
+        }
+        Self {
+            num_vertices: n,
+            num_edges: g.num_edges(),
+            avg_degree: if n == 0 { 0.0 } else { g.num_edges() as f64 / n as f64 },
+            max_degree,
+            total_weight: g.total_weight(),
+            self_loops,
+            isolated,
+        }
+    }
+
+    /// One Table 2-style row: |V|, |E|, D_avg.
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "{:<16} {:>9} {:>10} {:>7.1}",
+            name,
+            human(self.num_vertices as f64),
+            human(self.num_edges as f64),
+            self.avg_degree
+        )
+    }
+}
+
+/// Human-readable magnitude (paper style: 3.07M, 3.80B).
+pub fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    #[test]
+    fn properties_of_triangle() {
+        let g = GraphBuilder::new(4).edge(0, 1, 1.0).edge(1, 2, 1.0).edge(0, 2, 1.0).build_undirected();
+        let p = GraphProperties::of(&g);
+        assert_eq!(p.num_vertices, 4);
+        assert_eq!(p.num_edges, 6);
+        assert_eq!(p.max_degree, 2);
+        assert_eq!(p.isolated, 1);
+        assert_eq!(p.self_loops, 0);
+        assert_eq!(p.total_weight, 3.0);
+    }
+
+    #[test]
+    fn self_loops_counted() {
+        let g = GraphBuilder::new(2).edge(0, 0, 1.0).edge(0, 1, 1.0).build_undirected();
+        assert_eq!(GraphProperties::of(&g).self_loops, 1);
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(human(3.07e6), "3.07M");
+        assert_eq!(human(3.8e9), "3.80B");
+        assert_eq!(human(42.0), "42");
+        assert_eq!(human(2500.0), "2.5K");
+    }
+
+    #[test]
+    fn family_rows_render() {
+        let g = generate(GraphFamily::Web, 8, 1);
+        let row = GraphProperties::of(&g).table_row("web-s8");
+        assert!(row.contains("web-s8"));
+    }
+}

@@ -1,0 +1,60 @@
+//! # gve-louvain
+//!
+//! A reproduction of *"CPU vs. GPU for Community Detection: Performance
+//! Insights from GVE-Louvain and ν-Louvain"* (Sahu, CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains everything the paper's evaluation depends on,
+//! built from scratch (see `DESIGN.md` for the inventory):
+//!
+//! * [`graph`] — weighted CSR / holey-CSR graph substrate, synthetic
+//!   generators mirroring the paper's four dataset families, and IO.
+//! * [`parallel`] — an OpenMP-like scheduling substrate (static /
+//!   dynamic / guided / auto chunk schedules), parallel scan, atomic
+//!   f64, deterministic PRNGs, and a replay model used for the
+//!   strong-scaling study on this single-core testbed.
+//! * [`louvain`] — the paper's CPU contribution: **GVE-Louvain** with
+//!   per-thread collision-free hashtables (std-map / Close-KV /
+//!   Far-KV), vertex pruning, threshold scaling, aggregation tolerance
+//!   and prefix-sum CSR aggregation.
+//! * [`gpusim`] — a lock-step warp/SM GPU-semantics simulator hosting
+//!   **ν-Louvain**: per-vertex open-addressing hashtables (four probe
+//!   sequences), Pick-Less swap mitigation, thread- vs block-per-vertex
+//!   kernels, and an A100-like cost model.
+//! * [`baselines`] — algorithmic signatures of Vite, Grappolo,
+//!   NetworKit PLM, cuGraph and Nido for the comparison tables.
+//! * [`runtime`] — the PJRT side: loads the AOT-lowered Pallas
+//!   community-scan tile executables (`artifacts/*.hlo.txt`) and runs
+//!   ν-Louvain's local-moving hot-spot through real XLA.
+//! * [`coordinator`] — CLI, config, experiment runner, metrics
+//!   (phase/pass splits) and report generation.
+//! * [`prop`] / [`bench`] — in-tree property-testing and benchmark
+//!   harnesses (the offline registry has neither proptest nor
+//!   criterion).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gve_louvain::graph::generators::{GraphFamily, generate};
+//! use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
+//!
+//! let g = generate(GraphFamily::Web, 14, 42); // 2^14 vertices
+//! let out = GveLouvain::new(LouvainParams::default()).run(&g);
+//! println!("Q = {:.4}, {} communities, {} passes",
+//!          out.modularity, out.num_communities, out.passes);
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod gpusim;
+pub mod graph;
+pub mod louvain;
+pub mod parallel;
+pub mod prop;
+pub mod runtime;
+
+/// Crate-wide vertex id type (paper: 32-bit vertex identifiers).
+pub type VertexId = u32;
+/// Crate-wide edge weight type (paper: 32-bit edge weights).
+pub type EdgeWeight = f32;

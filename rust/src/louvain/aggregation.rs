@@ -1,0 +1,419 @@
+//! Aggregation phase (Algorithm 3): communities → super-vertex graph.
+//!
+//! Two implementations, ablated in Fig 2:
+//!
+//! * [`aggregate_csr`] — the adopted design: community-vertices CSR via
+//!   parallel prefix sum, super-vertex graph into a preallocated
+//!   *holey* CSR (offsets over-estimate each super-vertex degree with
+//!   the community's total degree), 2.2× faster;
+//! * [`aggregate_2d`] — `Vec<Vec<_>>` 2-D arrays allocated during the
+//!   algorithm (the ablation baseline).
+//!
+//! Both scan with `self = true` (Algorithm 3 line 15): the weight to
+//! the own community becomes the super-vertex self-loop, carrying
+//! `σ_c` forward so later passes see correct internal weights.
+
+use super::hashtable::TablePool;
+use super::params::LouvainParams;
+use super::Counters;
+use crate::graph::csr::HoleyCsr;
+use crate::graph::Csr;
+use crate::parallel::pool::{parallel_for, parallel_for_ctx, ChunkRecord, ParallelOpts};
+use crate::parallel::scan::exclusive_scan;
+use crate::parallel::schedule::Schedule;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Result of an aggregation phase.
+pub struct AggOutcome {
+    pub graph: Csr,
+    pub counters: Counters,
+    pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
+}
+
+/// CSR + prefix-sum aggregation (the adopted design).
+pub fn aggregate_csr(
+    g: &Csr,
+    membership: &[u32],
+    n_comm: usize,
+    pool: &TablePool,
+    params: &LouvainParams,
+) -> AggOutcome {
+    let n = g.num_vertices();
+    let opts = ParallelOpts {
+        threads: params.threads,
+        schedule: params.schedule,
+        chunk: params.chunk,
+        record: params.record_chunks,
+    };
+    let mut counters = Counters::default();
+    let mut loops = Vec::new();
+
+    // --- Community-vertices CSR G'_{C'} (lines 3-6).
+    let mut counts = vec![0usize; n_comm + 1];
+    {
+        let counts_at: &[AtomicUsize] =
+            unsafe { &*(counts.as_mut_slice() as *mut [usize] as *const [AtomicUsize]) };
+        let s = parallel_for(n, opts, |range| {
+            for i in range {
+                counts_at[membership[i] as usize].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        if params.record_chunks {
+            loops.push((params.schedule, s.chunks));
+        }
+    }
+    exclusive_scan(&mut counts, params.threads);
+    let comm_vertices = HoleyCsr::with_offsets(counts);
+    {
+        let cv = &comm_vertices;
+        let s = parallel_for(n, opts, |range| {
+            for i in range {
+                cv.push_edge(membership[i] as usize, i as u32, 0.0);
+            }
+        });
+        if params.record_chunks {
+            loops.push((params.schedule, s.chunks));
+        }
+    }
+
+    // --- Super-vertex graph offsets: community total degree (lines 8-9).
+    let mut tot_deg = vec![0usize; n_comm + 1];
+    {
+        let td: &[AtomicUsize] =
+            unsafe { &*(tot_deg.as_mut_slice() as *mut [usize] as *const [AtomicUsize]) };
+        let s = parallel_for(n, opts, |range| {
+            for i in range {
+                td[membership[i] as usize].fetch_add(g.degree(i), Ordering::Relaxed);
+            }
+        });
+        if params.record_chunks {
+            loops.push((params.schedule, s.chunks));
+        }
+    }
+    exclusive_scan(&mut tot_deg, params.threads);
+    let holey = HoleyCsr::with_offsets(tot_deg);
+
+    // --- Fill the holey CSR (lines 11-17).
+    let scanned = AtomicU64::new(0);
+    let ops = AtomicU64::new(0);
+    {
+        let cv = &comm_vertices;
+        let holey = &holey;
+        let s = parallel_for_ctx(
+            n_comm,
+            opts,
+            |tid| pool.table(tid),
+            |table, range| {
+                let mut l_scanned = 0u64;
+                let mut l_ops = 0u64;
+                for c in range {
+                    let members = cv.edges(c).0;
+                    if members.is_empty() {
+                        continue;
+                    }
+                    table.clear();
+                    for &i in members {
+                        // scanCommunities with self = true.
+                        for (j, w) in g.neighbours(i as usize) {
+                            table.accumulate(membership[j as usize], w as f64);
+                            l_ops += 1;
+                        }
+                        l_scanned += g.degree(i as usize) as u64;
+                    }
+                    table.for_each(|d, w| {
+                        holey.push_edge(c, d, w as f32);
+                    });
+                }
+                scanned.fetch_add(l_scanned, Ordering::Relaxed);
+                ops.fetch_add(l_ops, Ordering::Relaxed);
+            },
+        );
+        if params.record_chunks {
+            loops.push((params.schedule, s.chunks));
+        }
+    }
+    counters.edges_scanned_agg = scanned.load(Ordering::Relaxed);
+    counters.table_ops = ops.load(Ordering::Relaxed);
+
+    let (mut graph, s_compact) = compact_parallel(&holey, opts, params.threads);
+    let s = sort_rows_parallel(&mut graph, opts);
+    if params.record_chunks {
+        loops.push((params.schedule, s_compact.chunks));
+        loops.push((params.schedule, s.chunks));
+    }
+    AggOutcome { graph, counters, loops }
+}
+
+/// Parallel compaction of a holey CSR (offsets via parallel scan, rows
+/// copied in parallel) — the paper's aggregation is parallel end to end.
+fn compact_parallel(
+    h: &HoleyCsr,
+    opts: ParallelOpts,
+    threads: usize,
+) -> (Csr, crate::parallel::pool::WorkStats) {
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+    let n = h.num_vertices();
+    let mut offsets = vec![0usize; n + 1];
+    for v in 0..n {
+        offsets[v] = h.degree(v);
+    }
+    let total = exclusive_scan(&mut offsets, threads);
+    let mut targets = vec![0u32; total];
+    let mut weights = vec![0f32; total];
+    let tp = SendPtr(targets.as_mut_ptr());
+    let wp = SendPtr(weights.as_mut_ptr());
+    let offsets_ref = &offsets;
+    let stats = parallel_for(n, opts, |range| {
+        let (tp, wp) = (&tp, &wp);
+        for v in range {
+            let (ts, ws) = h.edges(v);
+            let lo = offsets_ref[v];
+            // SAFETY: [lo, lo+len) regions are disjoint per vertex.
+            unsafe {
+                std::ptr::copy_nonoverlapping(ts.as_ptr(), tp.0.add(lo), ts.len());
+                std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
+            }
+        }
+    });
+    (Csr { offsets, targets, weights }, stats)
+}
+
+/// Parallel per-row sort (rows are disjoint slices; embarrassingly
+/// parallel, recorded for the scaling replay).
+fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts) -> crate::parallel::pool::WorkStats {
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+    let n = g.num_vertices();
+    let offsets = &g.offsets;
+    let tp = SendPtr(g.targets.as_mut_ptr());
+    let wp = SendPtr(g.weights.as_mut_ptr());
+    parallel_for(n, ParallelOpts { chunk: opts.chunk.min(512), ..opts }, |range| {
+        let (tp, wp) = (&tp, &wp);
+        let mut buf: Vec<(u32, f32)> = Vec::new();
+        for v in range {
+            let (lo, hi) = (offsets[v], offsets[v + 1]);
+            // SAFETY: rows are disjoint; each v visited by one chunk.
+            let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(lo), hi - lo) };
+            let ws = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+            buf.clear();
+            buf.extend(ts.iter().copied().zip(ws.iter().copied()));
+            buf.sort_unstable_by_key(|p| p.0);
+            for (k, (t, w)) in buf.iter().enumerate() {
+                ts[k] = *t;
+                ws[k] = *w;
+            }
+        }
+    })
+}
+
+/// 2-D array (`Vec<Vec>`) aggregation — the Fig 2 ablation baseline.
+/// Allocates per-community vectors during the algorithm.
+pub fn aggregate_2d(
+    g: &Csr,
+    membership: &[u32],
+    n_comm: usize,
+    pool: &TablePool,
+    params: &LouvainParams,
+) -> AggOutcome {
+    let n = g.num_vertices();
+    let mut counters = Counters::default();
+
+    // Community membership lists as 2-D arrays (allocation-heavy).
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); n_comm];
+    for i in 0..n {
+        members[membership[i] as usize].push(i as u32);
+    }
+
+    // Per-community adjacency as freshly allocated rows.
+    let rows: Vec<std::sync::Mutex<Vec<(u32, f32)>>> =
+        (0..n_comm).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    let scanned = AtomicU64::new(0);
+    let opts = ParallelOpts {
+        threads: params.threads,
+        schedule: params.schedule,
+        chunk: params.chunk,
+        record: false,
+    };
+    let members_ref = &members;
+    parallel_for_ctx(
+        n_comm,
+        opts,
+        |tid| pool.table(tid),
+        |table, range| {
+            let mut l_scanned = 0u64;
+            for c in range {
+                if members_ref[c].is_empty() {
+                    continue;
+                }
+                table.clear();
+                for &i in &members_ref[c] {
+                    for (j, w) in g.neighbours(i as usize) {
+                        table.accumulate(membership[j as usize], w as f64);
+                    }
+                    l_scanned += g.degree(i as usize) as u64;
+                }
+                let mut row = Vec::new(); // the ablated allocation
+                table.for_each(|d, w| row.push((d, w as f32)));
+                *rows[c].lock().unwrap() = row;
+            }
+            scanned.fetch_add(l_scanned, Ordering::Relaxed);
+        },
+    );
+    counters.edges_scanned_agg = scanned.load(Ordering::Relaxed);
+
+    // Assemble CSR from the 2-D structure.
+    let mut offsets = vec![0usize; n_comm + 1];
+    let rows: Vec<Vec<(u32, f32)>> = rows.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    for (c, row) in rows.iter().enumerate() {
+        offsets[c + 1] = offsets[c] + row.len();
+    }
+    let mut targets = Vec::with_capacity(offsets[n_comm]);
+    let mut weights = Vec::with_capacity(offsets[n_comm]);
+    for row in &rows {
+        for &(d, w) in row {
+            targets.push(d);
+            weights.push(w);
+        }
+    }
+    let mut graph = Csr { offsets, targets, weights };
+    sort_rows(&mut graph);
+    AggOutcome { graph, counters, loops: Vec::new() }
+}
+
+/// Sort each adjacency row by target id (normalizes hashtable iteration
+/// order so all table kinds produce byte-identical super-vertex graphs).
+pub fn sort_rows(g: &mut Csr) {
+    let n = g.num_vertices();
+    for v in 0..n {
+        let (lo, hi) = (g.offsets[v], g.offsets[v + 1]);
+        let mut pairs: Vec<(u32, f32)> = g.targets[lo..hi]
+            .iter()
+            .copied()
+            .zip(g.weights[lo..hi].iter().copied())
+            .collect();
+        pairs.sort_unstable_by_key(|p| p.0);
+        for (k, (t, w)) in pairs.into_iter().enumerate() {
+            g.targets[lo + k] = t;
+            g.weights[lo + k] = w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::params::TableKind;
+
+    fn params() -> LouvainParams {
+        LouvainParams::default()
+    }
+
+    #[test]
+    fn two_triangles_aggregate_to_two_supervertices() {
+        let g = GraphBuilder::new(6)
+            .edge(0, 1, 1.0).edge(1, 2, 1.0).edge(0, 2, 1.0)
+            .edge(3, 4, 1.0).edge(4, 5, 1.0).edge(3, 5, 1.0)
+            .edge(2, 3, 1.0)
+            .build_undirected();
+        let memb = vec![0u32, 0, 0, 1, 1, 1];
+        let pool = TablePool::new(TableKind::FarKv, 2, 1);
+        let out = aggregate_csr(&g, &memb, 2, &pool, &params());
+        let sg = &out.graph;
+        sg.validate().unwrap();
+        assert_eq!(sg.num_vertices(), 2);
+        // Self-loops: 2*σ_c = 6 (three internal edges, both directions);
+        // bridge: weight 1 each way.
+        assert_eq!(sg.edges(0).0, &[0, 1]);
+        assert_eq!(sg.edges(0).1, &[6.0, 1.0]);
+        assert_eq!(sg.edges(1).1, &[1.0, 6.0]);
+        // m is preserved.
+        assert!((sg.total_weight() - g.total_weight()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_weight_preserved_across_families() {
+        for f in GraphFamily::ALL {
+            let g = generate(f, 9, 3);
+            let n = g.num_vertices();
+            // Arbitrary 8-way partition.
+            let memb: Vec<u32> = (0..n).map(|v| (v % 8) as u32).collect();
+            let pool = TablePool::new(TableKind::FarKv, 8, 1);
+            let out = aggregate_csr(&g, &memb, 8, &pool, &params());
+            assert!(
+                (out.graph.total_weight() - g.total_weight()).abs() < 1e-6 * g.total_weight(),
+                "{f:?}"
+            );
+            assert!(out.graph.is_symmetric(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn csr_and_2d_produce_identical_graphs() {
+        for f in [GraphFamily::Web, GraphFamily::Road] {
+            let g = generate(f, 9, 13);
+            let n = g.num_vertices();
+            let memb: Vec<u32> = (0..n).map(|v| (v % 50) as u32).collect();
+            let pool = TablePool::new(TableKind::FarKv, 50, 1);
+            let a = aggregate_csr(&g, &memb, 50, &pool, &params());
+            let b = aggregate_2d(&g, &memb, 50, &pool, &params());
+            assert_eq!(a.graph, b.graph, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn table_kinds_produce_identical_supergraphs() {
+        let g = generate(GraphFamily::Social, 8, 19);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 13) as u32).collect();
+        let mut graphs = Vec::new();
+        for kind in [TableKind::Map, TableKind::CloseKv, TableKind::FarKv] {
+            let pool = TablePool::new(kind, 13, 1);
+            let p = LouvainParams { table: kind, ..params() };
+            graphs.push(aggregate_csr(&g, &memb, 13, &pool, &p).graph);
+        }
+        assert_eq!(graphs[0], graphs[1]);
+        assert_eq!(graphs[1], graphs[2]);
+    }
+
+    #[test]
+    fn multithreaded_matches_single_threaded() {
+        let g = generate(GraphFamily::Web, 10, 29);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 97) as u32).collect();
+        let pool1 = TablePool::new(TableKind::FarKv, 97, 1);
+        let pool4 = TablePool::new(TableKind::FarKv, 97, 4);
+        let a = aggregate_csr(&g, &memb, 97, &pool1, &LouvainParams { threads: 1, ..params() });
+        let b = aggregate_csr(&g, &memb, 97, &pool4, &LouvainParams { threads: 4, ..params() });
+        assert_eq!(a.graph, b.graph);
+    }
+
+    #[test]
+    fn empty_communities_get_no_edges() {
+        let g = GraphBuilder::new(3).edge(0, 1, 1.0).build_undirected();
+        // Community 1 is empty (ids 0 and 2 used).
+        let memb = vec![0u32, 0, 2];
+        let pool = TablePool::new(TableKind::FarKv, 3, 1);
+        let out = aggregate_csr(&g, &memb, 3, &pool, &params());
+        assert_eq!(out.graph.degree(1), 0);
+        assert_eq!(out.graph.degree(2), 0); // isolated vertex
+        assert_eq!(out.graph.edges(0).0, &[0]);
+        assert_eq!(out.graph.edges(0).1, &[2.0]);
+    }
+
+    #[test]
+    fn self_loops_carry_internal_weight_forward() {
+        // Path 0-1-2 in one community: internal slots = 4 (two edges × two
+        // directions) => self-loop 4.0.
+        let g = GraphBuilder::new(3).edge(0, 1, 1.0).edge(1, 2, 1.0).build_undirected();
+        let memb = vec![0u32, 0, 0];
+        let pool = TablePool::new(TableKind::FarKv, 1, 1);
+        let out = aggregate_csr(&g, &memb, 1, &pool, &params());
+        assert_eq!(out.graph.edges(0).1, &[4.0]);
+        assert!((out.graph.total_weight() - g.total_weight()).abs() < 1e-12);
+    }
+}

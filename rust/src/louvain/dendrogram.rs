@@ -1,0 +1,60 @@
+//! Dendrogram lookup (Algorithm 1 lines 11 & 14).
+//!
+//! After each pass the top-level membership `C` (over the *original*
+//! vertices) is re-pointed through the pass-level membership `C'` (over
+//! the current super-vertices): `C[v] = C'[C[v]]`.
+
+/// `top[v] = pass[top[v]]` for all original vertices.
+pub fn lookup(top: &mut [u32], pass: &[u32]) {
+    for c in top.iter_mut() {
+        debug_assert!((*c as usize) < pass.len(), "dangling dendrogram pointer");
+        *c = pass[*c as usize];
+    }
+}
+
+/// Fold a whole dendrogram (list of per-pass memberships) into a flat
+/// original-vertex membership.
+pub fn flatten(levels: &[Vec<u32>]) -> Vec<u32> {
+    match levels.split_first() {
+        None => Vec::new(),
+        Some((first, rest)) => {
+            let mut top = first.clone();
+            for pass in rest {
+                lookup(&mut top, pass);
+            }
+            top
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_chains_memberships() {
+        // 4 vertices -> 3 communities -> 2 communities.
+        let mut top = vec![0, 1, 2, 1];
+        let pass = vec![1, 0, 1];
+        lookup(&mut top, &pass);
+        assert_eq!(top, vec![1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn flatten_matches_sequential_lookup() {
+        let levels = vec![vec![0, 1, 2, 1], vec![1, 0, 1], vec![0, 0]];
+        let flat = flatten(&levels);
+        assert_eq!(flat, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn flatten_single_level_is_copy() {
+        let levels = vec![vec![3, 1, 4]];
+        assert_eq!(flatten(&levels), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn flatten_empty() {
+        assert!(flatten(&[]).is_empty());
+    }
+}

@@ -1,0 +1,367 @@
+//! GVE-Louvain driver (Algorithm 1): the pass loop tying together
+//! local-moving, renumbering, dendrogram lookup and aggregation, with
+//! threshold scaling and the aggregation tolerance.
+
+use super::aggregation::{aggregate_2d, aggregate_csr};
+use super::dendrogram;
+use super::hashtable::TablePool;
+use super::local_moving::local_moving;
+use super::modularity::modularity;
+use super::params::{AggregationKind, LouvainParams};
+use super::renumber::renumber_communities;
+use super::Counters;
+use crate::graph::Csr;
+use crate::parallel::pool::ChunkRecord;
+use crate::parallel::schedule::Schedule;
+use std::time::Instant;
+
+/// Per-pass statistics (feeds Figs 14/17: phase and pass splits).
+#[derive(Clone, Debug, Default)]
+pub struct PassStats {
+    /// Vertices of `G'` at this pass.
+    pub vertices: usize,
+    /// Directed edge slots of `G'` at this pass.
+    pub edges: usize,
+    /// Local-moving iterations (`l_i`).
+    pub iterations: usize,
+    /// Communities after this pass's local-moving.
+    pub communities: usize,
+    pub move_ns: u64,
+    pub agg_ns: u64,
+    pub other_ns: u64,
+    /// Total accepted ΔQ.
+    pub dq: f64,
+}
+
+/// Result of a full Louvain run.
+#[derive(Debug, Default)]
+pub struct LouvainResult {
+    /// Final community of every original vertex (dense ids).
+    pub membership: Vec<u32>,
+    /// Modularity of `membership` on the input graph.
+    pub modularity: f64,
+    pub num_communities: usize,
+    pub passes: usize,
+    pub total_ns: u64,
+    pub pass_stats: Vec<PassStats>,
+    pub counters: Counters,
+    /// Recorded parallel loops (for the scaling replay model).
+    pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
+    /// Wall time not covered by recorded parallel loops.
+    pub serial_ns: u64,
+}
+
+impl LouvainResult {
+    /// Phase split: `(move, aggregate, other)` fractions of total time.
+    pub fn phase_split(&self) -> (f64, f64, f64) {
+        let mv: u64 = self.pass_stats.iter().map(|p| p.move_ns).sum();
+        let ag: u64 = self.pass_stats.iter().map(|p| p.agg_ns).sum();
+        let tot = self.total_ns.max(1) as f64;
+        let (mv, ag) = (mv as f64, ag as f64);
+        (mv / tot, ag / tot, ((tot - mv - ag) / tot).max(0.0))
+    }
+
+    /// Fraction of runtime spent in the first pass.
+    pub fn first_pass_fraction(&self) -> f64 {
+        let first = self
+            .pass_stats
+            .first()
+            .map(|p| p.move_ns + p.agg_ns + p.other_ns)
+            .unwrap_or(0) as f64;
+        first / self.total_ns.max(1) as f64
+    }
+}
+
+/// The GVE-Louvain algorithm object.
+pub struct GveLouvain {
+    pub params: LouvainParams,
+}
+
+impl GveLouvain {
+    pub fn new(params: LouvainParams) -> Self {
+        Self { params }
+    }
+
+    /// Run on `g`; returns the result with full metrics.
+    pub fn run(&self, g: &Csr) -> LouvainResult {
+        let p = &self.params;
+        let t_start = Instant::now();
+        let n0 = g.num_vertices();
+        let m = g.total_weight();
+        let mut result = LouvainResult {
+            membership: (0..n0 as u32).collect(),
+            ..Default::default()
+        };
+        if n0 == 0 || m == 0.0 {
+            result.num_communities = n0;
+            return result;
+        }
+
+        let mut owned: Option<Csr> = None; // super-vertex graph (pass >= 1)
+        let mut tau = p.tolerance;
+
+        for pass in 0..p.max_passes {
+            let gp: &Csr = owned.as_ref().unwrap_or(g);
+            let np = gp.num_vertices();
+            let t_pass = Instant::now();
+
+            // Init: K', Σ', C' (Algorithm 1 lines 4-5). K' is a parallel
+            // loop (recorded for the scaling replay like the others).
+            let k: Vec<f64> = {
+                let mut k = vec![0f64; np];
+                let opts = crate::parallel::pool::ParallelOpts {
+                    threads: p.threads,
+                    schedule: p.schedule,
+                    chunk: p.chunk,
+                    record: p.record_chunks,
+                };
+                struct SendPtr(*mut f64);
+                unsafe impl Send for SendPtr {}
+                unsafe impl Sync for SendPtr {}
+                let ptr = SendPtr(k.as_mut_ptr());
+                let stats = crate::parallel::pool::parallel_for(np, opts, |r| {
+                    let ptr = &ptr;
+                    for i in r {
+                        // SAFETY: disjoint indices per chunk.
+                        unsafe { *ptr.0.add(i) = gp.vertex_weight(i) };
+                    }
+                });
+                if p.record_chunks {
+                    result.loops.push((p.schedule, stats.chunks));
+                }
+                k
+            };
+            let mut sigma = k.clone();
+            let mut membership: Vec<u32> = (0..np as u32).collect();
+            let mut affected = vec![1u32; np];
+            let pool = TablePool::new(p.table, np, p.threads);
+            let t_init = t_pass.elapsed().as_nanos() as u64;
+
+            // Local-moving phase (line 6).
+            let t0 = Instant::now();
+            let mv = local_moving(
+                gp, &mut membership, &k, &mut sigma, &mut affected, &pool, p, m, tau,
+            );
+            let move_ns = t0.elapsed().as_nanos() as u64;
+            result.counters.merge(&mv.counters);
+            result.loops.extend(mv.loops);
+
+            // Community count + convergence checks (lines 7-9).
+            let t1 = Instant::now();
+            let n_comm = renumber_communities(&mut membership);
+            let converged = mv.iterations <= 1;
+            let low_shrink = (n_comm as f64) / (np as f64) > p.aggregation_tolerance;
+
+            // Fold this pass into the top-level membership (lines 11/14;
+            // a parallel loop in the paper, recorded for the replay).
+            {
+                struct SendPtr(*mut u32);
+                unsafe impl Send for SendPtr {}
+                unsafe impl Sync for SendPtr {}
+                let opts = crate::parallel::pool::ParallelOpts {
+                    threads: p.threads,
+                    schedule: p.schedule,
+                    chunk: p.chunk,
+                    record: p.record_chunks,
+                };
+                let top = &mut result.membership;
+                let ptr = SendPtr(top.as_mut_ptr());
+                let pass_memb = &membership;
+                let stats = crate::parallel::pool::parallel_for(top.len(), opts, |r| {
+                    let ptr = &ptr;
+                    for i in r {
+                        // SAFETY: disjoint indices per chunk.
+                        unsafe {
+                            let c = *ptr.0.add(i);
+                            *ptr.0.add(i) = pass_memb[c as usize];
+                        }
+                    }
+                });
+                if p.record_chunks {
+                    result.loops.push((p.schedule, stats.chunks));
+                }
+            }
+            let mut other_ns = t_init + t1.elapsed().as_nanos() as u64;
+
+            let mut stats = PassStats {
+                vertices: np,
+                edges: gp.num_edges(),
+                iterations: mv.iterations,
+                communities: n_comm,
+                move_ns,
+                agg_ns: 0,
+                other_ns,
+                dq: mv.dq_total,
+            };
+
+            if converged || low_shrink || pass + 1 == p.max_passes {
+                result.pass_stats.push(stats);
+                result.passes = pass + 1;
+                break;
+            }
+
+            // Aggregation phase (line 12).
+            let t2 = Instant::now();
+            let agg = match p.aggregation {
+                AggregationKind::Csr => aggregate_csr(gp, &membership, n_comm, &pool, p),
+                AggregationKind::TwoDim => aggregate_2d(gp, &membership, n_comm, &pool, p),
+            };
+            stats.agg_ns = t2.elapsed().as_nanos() as u64;
+            result.counters.edges_scanned_agg += agg.counters.edges_scanned_agg;
+            result.counters.table_ops += agg.counters.table_ops;
+            result.loops.extend(agg.loops);
+            owned = Some(agg.graph);
+
+            // Threshold scaling (line 13).
+            tau /= p.tolerance_drop;
+
+            let _ = other_ns;
+            result.pass_stats.push(stats);
+            result.passes = pass + 1;
+        }
+
+        result.num_communities = renumber_communities(&mut result.membership);
+        // Detection time excludes the final quality evaluation (the paper
+        // reports Q separately from runtime).
+        result.total_ns = t_start.elapsed().as_nanos() as u64;
+        result.modularity = modularity(g, &result.membership);
+        let par_ns: u64 = result
+            .loops
+            .iter()
+            .flat_map(|(_, c)| c.iter().map(|r| r.ns))
+            .sum();
+        result.serial_ns = result.total_ns.saturating_sub(par_ns);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::params::TableKind;
+
+    #[test]
+    fn two_triangles_full_run() {
+        let g = GraphBuilder::new(6)
+            .edge(0, 1, 1.0).edge(1, 2, 1.0).edge(0, 2, 1.0)
+            .edge(3, 4, 1.0).edge(4, 5, 1.0).edge(3, 5, 1.0)
+            .edge(2, 3, 1.0)
+            .build_undirected();
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert_eq!(out.num_communities, 2);
+        assert!((out.modularity - 0.35714).abs() < 1e-3, "q={}", out.modularity);
+        assert_eq!(out.membership[0], out.membership[2]);
+        assert_ne!(out.membership[0], out.membership[3]);
+    }
+
+    #[test]
+    fn planted_web_graph_recovers_high_modularity() {
+        let g = generate(GraphFamily::Web, 11, 42);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert!(out.modularity > 0.8, "web q={}", out.modularity);
+        assert!(out.num_communities > 1);
+        assert!(out.passes >= 1);
+    }
+
+    #[test]
+    fn social_graph_gets_lower_modularity_than_web() {
+        let web = GveLouvain::new(LouvainParams::default()).run(&generate(GraphFamily::Web, 10, 1));
+        let soc = GveLouvain::new(LouvainParams::default()).run(&generate(GraphFamily::Social, 10, 1));
+        assert!(
+            web.modularity > soc.modularity + 0.1,
+            "web={} social={}",
+            web.modularity,
+            soc.modularity
+        );
+    }
+
+    #[test]
+    fn road_graph_many_communities() {
+        let g = generate(GraphFamily::Road, 12, 2);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert!(out.modularity > 0.6, "road q={}", out.modularity);
+        assert!(out.num_communities > 20, "communities={}", out.num_communities);
+    }
+
+    #[test]
+    fn membership_is_dense_and_in_range() {
+        let g = generate(GraphFamily::Kmer, 10, 3);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        let max = *out.membership.iter().max().unwrap() as usize;
+        assert_eq!(max + 1, out.num_communities);
+    }
+
+    #[test]
+    fn deterministic_single_thread() {
+        let g = generate(GraphFamily::Web, 10, 7);
+        let a = GveLouvain::new(LouvainParams::default()).run(&g);
+        let b = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert_eq!(a.membership, b.membership);
+        assert_eq!(a.modularity, b.modularity);
+        assert_eq!(a.passes, b.passes);
+    }
+
+    #[test]
+    fn pass_stats_cover_runtime() {
+        let g = generate(GraphFamily::Web, 10, 9);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert_eq!(out.pass_stats.len(), out.passes);
+        let (mv, ag, other) = out.phase_split();
+        assert!((mv + ag + other - 1.0).abs() < 1e-6);
+        assert!(mv > 0.0);
+        assert!(out.first_pass_fraction() > 0.0);
+        // First pass has the full graph.
+        assert_eq!(out.pass_stats[0].vertices, g.num_vertices());
+    }
+
+    #[test]
+    fn empty_and_trivial_graphs() {
+        let empty = Csr { offsets: vec![0], targets: vec![], weights: vec![] };
+        let out = GveLouvain::new(LouvainParams::default()).run(&empty);
+        assert_eq!(out.num_communities, 0);
+
+        let lonely = GraphBuilder::new(3).build_undirected();
+        let out = GveLouvain::new(LouvainParams::default()).run(&lonely);
+        assert_eq!(out.num_communities, 3); // no edges: everyone alone
+    }
+
+    #[test]
+    fn naive_params_still_correct_but_more_work() {
+        let g = generate(GraphFamily::Web, 10, 11);
+        let fast = GveLouvain::new(LouvainParams::default()).run(&g);
+        let naive = GveLouvain::new(LouvainParams { table: TableKind::FarKv, ..LouvainParams::naive() }).run(&g);
+        assert!((fast.modularity - naive.modularity).abs() < 0.05,
+                "fast={} naive={}", fast.modularity, naive.modularity);
+        // The naive config runs more local-moving iterations.
+        let fast_iters: usize = fast.pass_stats.iter().map(|p| p.iterations).sum();
+        let naive_iters: usize = naive.pass_stats.iter().map(|p| p.iterations).sum();
+        assert!(naive_iters >= fast_iters);
+    }
+
+    #[test]
+    fn aggregation_tolerance_stops_early() {
+        let g = generate(GraphFamily::Social, 10, 13);
+        let strict = GveLouvain::new(LouvainParams { aggregation_tolerance: 1.0, ..Default::default() }).run(&g);
+        let loose = GveLouvain::new(LouvainParams { aggregation_tolerance: 0.5, ..Default::default() }).run(&g);
+        assert!(loose.passes <= strict.passes);
+    }
+
+    #[test]
+    fn multithreaded_quality_close_to_single() {
+        let g = generate(GraphFamily::Web, 11, 17);
+        let q1 = GveLouvain::new(LouvainParams::with_threads(1)).run(&g).modularity;
+        let q4 = GveLouvain::new(LouvainParams::with_threads(4)).run(&g).modularity;
+        assert!((q1 - q4).abs() < 0.02, "q1={q1} q4={q4}");
+    }
+
+    #[test]
+    fn record_chunks_collects_loops() {
+        let g = generate(GraphFamily::Web, 9, 19);
+        let out = GveLouvain::new(LouvainParams { record_chunks: true, ..Default::default() }).run(&g);
+        assert!(!out.loops.is_empty());
+        let covered: usize = out.loops[0].1.iter().map(|c| c.len).sum();
+        assert_eq!(covered, g.num_vertices());
+    }
+}

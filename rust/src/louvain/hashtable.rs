@@ -1,0 +1,298 @@
+//! Per-thread collision-free community tables (§4.1.9, Fig 3).
+//!
+//! Three designs, ablated in Fig 2 ("hashtable": Far-KV 4.4× over Map,
+//! 1.3× over Close-KV):
+//!
+//! * [`TableKind::Map`] — an ordered map per scan (C++ `std::map`
+//!   analogue).
+//! * [`TableKind::CloseKv`] — key-list + full-size (`|V|`) values
+//!   array, with **all threads' arrays packed into one contiguous
+//!   slab** and all key counts sharing a cache line: the NetworKit-like
+//!   layout whose false sharing the paper blames for its slowdown.
+//! * [`TableKind::FarKv`] — same key-list + values-array design but
+//!   every thread's arrays (and its count) are **independent heap
+//!   allocations padded apart** (Fig 3): the adopted design.
+//!
+//! The value associated with a key is stored at the index pointed to by
+//! the key (collision-free by construction); `keys` records which slots
+//! are dirty so `clear()` is O(#keys), not O(|V|).
+
+use super::params::TableKind;
+use std::collections::BTreeMap;
+
+/// Pool owning the backing storage for every thread's table.
+pub struct TablePool {
+    kind: TableKind,
+    n: usize,
+    threads: usize,
+    // Close-KV: one slab for all threads; counts share a cache line.
+    close_keys: Vec<u32>,
+    close_values: Vec<f64>,
+    close_counts: Vec<u32>,
+    // Far-KV: independent allocations per thread.
+    far: Vec<FarStorage>,
+}
+
+/// One thread's Far-KV storage; `_pad` keeps allocations apart even if
+/// the allocator would otherwise pack them.
+struct FarStorage {
+    keys: Vec<u32>,
+    values: Vec<f64>,
+    count: Box<u32>,
+    _pad: Vec<u8>,
+}
+
+impl TablePool {
+    /// Build a pool for `threads` tables over community ids `< n`.
+    pub fn new(kind: TableKind, n: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        match kind {
+            TableKind::Map => Self { kind, n, threads, close_keys: vec![], close_values: vec![], close_counts: vec![], far: vec![] },
+            TableKind::CloseKv => Self {
+                kind,
+                n,
+                threads,
+                close_keys: vec![0; n * threads],
+                close_values: vec![0.0; n * threads],
+                close_counts: vec![0; threads],
+                far: vec![],
+            },
+            TableKind::FarKv => Self {
+                kind,
+                n,
+                threads,
+                close_keys: vec![],
+                close_values: vec![],
+                close_counts: vec![],
+                far: (0..threads)
+                    .map(|_| FarStorage {
+                        keys: vec![0; n],
+                        values: vec![0.0; n],
+                        count: Box::new(0),
+                        _pad: vec![0; 4096],
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    pub fn kind(&self) -> TableKind {
+        self.kind
+    }
+
+    /// Hand out thread `tid`'s table view.
+    ///
+    /// Contract: at most one live view per `tid` at a time (the
+    /// fork-join loops in this crate guarantee it — `init(tid)` runs
+    /// once per worker per loop).
+    pub fn table(&self, tid: usize) -> CommunityTable {
+        assert!(tid < self.threads, "tid {tid} >= threads {}", self.threads);
+        match self.kind {
+            TableKind::Map => CommunityTable::Map(BTreeMap::new()),
+            TableKind::CloseKv => CommunityTable::Kv(KvView {
+                keys: self.close_keys[tid * self.n..].as_ptr() as *mut u32,
+                values: self.close_values[tid * self.n..].as_ptr() as *mut f64,
+                count: (&self.close_counts[tid]) as *const u32 as *mut u32,
+                cap: self.n,
+            }),
+            TableKind::FarKv => {
+                let f = &self.far[tid];
+                CommunityTable::Kv(KvView {
+                    keys: f.keys.as_ptr() as *mut u32,
+                    values: f.values.as_ptr() as *mut f64,
+                    count: (&*f.count) as *const u32 as *mut u32,
+                    cap: self.n,
+                })
+            }
+        }
+    }
+}
+
+/// A per-thread community table (enum-dispatched).
+pub enum CommunityTable {
+    Map(BTreeMap<u32, f64>),
+    Kv(KvView),
+}
+
+/// Raw view into KV storage (collision-free: value slot == key).
+pub struct KvView {
+    keys: *mut u32,
+    values: *mut f64,
+    count: *mut u32,
+    cap: usize,
+}
+
+// SAFETY: views are handed to exactly one worker thread at a time (see
+// `TablePool::table`); distinct tids view disjoint storage.
+unsafe impl Send for KvView {}
+
+impl CommunityTable {
+    /// Remove all entries (O(#keys) for KV designs).
+    #[inline]
+    pub fn clear(&mut self) {
+        match self {
+            CommunityTable::Map(m) => m.clear(),
+            CommunityTable::Kv(kv) => unsafe {
+                let cnt = *kv.count as usize;
+                for i in 0..cnt {
+                    let k = *kv.keys.add(i) as usize;
+                    *kv.values.add(k) = 0.0;
+                }
+                *kv.count = 0;
+            },
+        }
+    }
+
+    /// `table[c] += w` (records the key on first touch).
+    #[inline]
+    pub fn accumulate(&mut self, c: u32, w: f64) {
+        match self {
+            CommunityTable::Map(m) => {
+                *m.entry(c).or_insert(0.0) += w;
+            }
+            CommunityTable::Kv(kv) => unsafe {
+                debug_assert!((c as usize) < kv.cap);
+                let slot = kv.values.add(c as usize);
+                if *slot == 0.0 {
+                    *kv.keys.add(*kv.count as usize) = c;
+                    *kv.count += 1;
+                }
+                *slot += w;
+            },
+        }
+    }
+
+    /// Value for community `c` (0 when absent).
+    #[inline]
+    pub fn get(&self, c: u32) -> f64 {
+        match self {
+            CommunityTable::Map(m) => m.get(&c).copied().unwrap_or(0.0),
+            CommunityTable::Kv(kv) => unsafe {
+                debug_assert!((c as usize) < kv.cap);
+                *kv.values.add(c as usize)
+            },
+        }
+    }
+
+    /// Number of recorded keys (KV may count a key twice if a zero
+    /// weight was accumulated; harmless for all users).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            CommunityTable::Map(m) => m.len(),
+            CommunityTable::Kv(kv) => unsafe { *kv.count as usize },
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit `(community, weight)` pairs. KV order is first-touch
+    /// order; Map order is ascending key.
+    #[inline]
+    pub fn for_each(&self, mut f: impl FnMut(u32, f64)) {
+        match self {
+            CommunityTable::Map(m) => {
+                for (&k, &v) in m {
+                    f(k, v);
+                }
+            }
+            CommunityTable::Kv(kv) => unsafe {
+                let cnt = *kv.count as usize;
+                for i in 0..cnt {
+                    let k = *kv.keys.add(i);
+                    f(k, *kv.values.add(k as usize));
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> [TableKind; 3] {
+        [TableKind::Map, TableKind::CloseKv, TableKind::FarKv]
+    }
+
+    #[test]
+    fn accumulate_get_clear_all_kinds() {
+        for kind in kinds() {
+            let pool = TablePool::new(kind, 100, 1);
+            let mut t = pool.table(0);
+            t.accumulate(5, 1.5);
+            t.accumulate(5, 2.5);
+            t.accumulate(7, 1.0);
+            assert_eq!(t.get(5), 4.0, "{kind:?}");
+            assert_eq!(t.get(7), 1.0);
+            assert_eq!(t.get(9), 0.0);
+            t.clear();
+            assert_eq!(t.get(5), 0.0, "{kind:?} clear failed");
+            assert!(t.is_empty());
+        }
+    }
+
+    #[test]
+    fn for_each_visits_all_entries() {
+        for kind in kinds() {
+            let pool = TablePool::new(kind, 64, 1);
+            let mut t = pool.table(0);
+            for c in [3u32, 9, 31, 3, 9] {
+                t.accumulate(c, 1.0);
+            }
+            let mut seen = std::collections::BTreeMap::new();
+            t.for_each(|c, w| {
+                seen.insert(c, w);
+            });
+            assert_eq!(seen.len(), 3, "{kind:?}");
+            assert_eq!(seen[&3], 2.0);
+            assert_eq!(seen[&9], 2.0);
+            assert_eq!(seen[&31], 1.0);
+        }
+    }
+
+    #[test]
+    fn threads_have_isolated_tables() {
+        for kind in [TableKind::CloseKv, TableKind::FarKv] {
+            let pool = TablePool::new(kind, 32, 4);
+            std::thread::scope(|s| {
+                for tid in 0..4 {
+                    let pool = &pool;
+                    s.spawn(move || {
+                        let mut t = pool.table(tid);
+                        for i in 0..32u32 {
+                            t.accumulate(i, (tid + 1) as f64);
+                        }
+                        for i in 0..32u32 {
+                            assert_eq!(t.get(i), (tid + 1) as f64, "{kind:?} tid={tid}");
+                        }
+                        t.clear();
+                    });
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn reuse_after_clear_is_clean() {
+        for kind in kinds() {
+            let pool = TablePool::new(kind, 16, 1);
+            for round in 1..=3 {
+                let mut t = pool.table(0);
+                t.accumulate(1, round as f64);
+                assert_eq!(t.get(1), round as f64, "{kind:?} round {round}");
+                t.clear();
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tid_out_of_range_panics() {
+        let pool = TablePool::new(TableKind::FarKv, 8, 2);
+        let _ = pool.table(2);
+    }
+}

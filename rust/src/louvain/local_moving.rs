@@ -1,0 +1,330 @@
+//! Local-moving phase (Algorithm 2).
+//!
+//! Asynchronous: threads read neighbour memberships as they go (relaxed
+//! atomics — the paper's OpenMP implementation has the same benign
+//! races), move vertices greedily to the best-ΔQ community, update `Σ'`
+//! atomically, and (with pruning, §4.1.6) mark moved vertices'
+//! neighbours for reprocessing.
+
+use super::hashtable::TablePool;
+use super::modularity::delta_modularity;
+use super::params::LouvainParams;
+use super::Counters;
+use crate::graph::Csr;
+use crate::parallel::atomics::{as_atomic_f64, as_atomic_u32, AtomicF64};
+use crate::parallel::pool::{parallel_for_ctx, ChunkRecord, ParallelOpts};
+use crate::parallel::schedule::Schedule;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Result of one local-moving phase.
+#[derive(Debug, Default)]
+pub struct MoveOutcome {
+    /// Iterations performed (`l_i`).
+    pub iterations: usize,
+    /// Sum of accepted ΔQ over all iterations.
+    pub dq_total: f64,
+    pub counters: Counters,
+    /// Per-iteration chunk records for the scaling replay model
+    /// (empty unless `params.record_chunks`).
+    pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
+}
+
+/// Run the local-moving phase on `g` (`G'`).
+///
+/// * `membership` — `C'`, updated in place;
+/// * `vertex_weight` — `K'` (read-only);
+/// * `sigma` — `Σ'`, updated in place;
+/// * `affected` — pruning flags (1 = process); all-1 on entry for a
+///   fresh pass. Ignored (all vertices processed) when
+///   `params.pruning` is false.
+/// * `tau` — this pass's convergence tolerance.
+#[allow(clippy::too_many_arguments)]
+pub fn local_moving(
+    g: &Csr,
+    membership: &mut [u32],
+    vertex_weight: &[f64],
+    sigma: &mut [f64],
+    affected: &mut [u32],
+    pool: &TablePool,
+    params: &LouvainParams,
+    m: f64,
+    tau: f64,
+) -> MoveOutcome {
+    let n = g.num_vertices();
+    let memb = as_atomic_u32(membership);
+    let sig = as_atomic_f64(sigma);
+    let flags = as_atomic_u32(affected);
+
+    let mut out = MoveOutcome::default();
+    let opts = ParallelOpts {
+        threads: params.threads,
+        schedule: params.schedule,
+        chunk: params.chunk,
+        record: params.record_chunks,
+    };
+
+    for _li in 0..params.max_iterations {
+        let dq_iter = AtomicF64::new(0.0);
+        let scanned = AtomicU64::new(0);
+        let moves = AtomicU64::new(0);
+        let table_ops = AtomicU64::new(0);
+        let processed = AtomicU64::new(0);
+        let pruned = AtomicU64::new(0);
+
+        let stats = parallel_for_ctx(
+            n,
+            opts,
+            |tid| pool.table(tid),
+            |table, range| {
+                let mut l_dq = 0.0f64;
+                let mut l_scanned = 0u64;
+                let mut l_moves = 0u64;
+                let mut l_ops = 0u64;
+                let mut l_proc = 0u64;
+                let mut l_pruned = 0u64;
+                for i in range {
+                    if params.pruning {
+                        // Claim-and-clear the processed mark (prune).
+                        if flags[i].swap(0, Ordering::Relaxed) == 0 {
+                            l_pruned += 1;
+                            continue;
+                        }
+                    }
+                    l_proc += 1;
+                    let (ts, ws) = g.edges(i);
+                    if ts.is_empty() {
+                        continue;
+                    }
+                    // scanCommunities (self = false). Hot loop: unchecked
+                    // indexing (targets are validated at CSR build time)
+                    // — see EXPERIMENTS.md §Perf.
+                    table.clear();
+                    for (t, w) in ts.iter().zip(ws) {
+                        if *t as usize == i {
+                            continue;
+                        }
+                        // SAFETY: `validate()` guarantees t < |V'|.
+                        let cj = unsafe { memb.get_unchecked(*t as usize) }
+                            .load(Ordering::Relaxed);
+                        table.accumulate(cj, *w as f64);
+                    }
+                    l_ops += ts.len() as u64;
+                    l_scanned += ts.len() as u64;
+
+                    let d = memb[i].load(Ordering::Relaxed);
+                    let k_i = vertex_weight[i];
+                    let k_to_d = table.get(d);
+                    let sigma_d = sig[d as usize].load();
+
+                    // Choose best community (first max wins ties).
+                    let mut best_c = d;
+                    let mut best_dq = 0.0f64;
+                    table.for_each(|c, k_to_c| {
+                        if c == d {
+                            return;
+                        }
+                        // SAFETY: community ids are vertex ids of G' (< |V'|).
+                        let sigma_c = unsafe { sig.get_unchecked(c as usize) }.load();
+                        let dq = delta_modularity(k_to_c, k_to_d, k_i, sigma_c, sigma_d, m);
+                        if dq > best_dq {
+                            best_dq = dq;
+                            best_c = c;
+                        }
+                    });
+
+                    if best_c != d && best_dq > 0.0 {
+                        sig[d as usize].fetch_sub(k_i);
+                        sig[best_c as usize].fetch_add(k_i);
+                        memb[i].store(best_c, Ordering::Relaxed);
+                        l_dq += best_dq;
+                        l_moves += 1;
+                        if params.pruning {
+                            for t in ts {
+                                flags[*t as usize].store(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                dq_iter.fetch_add(l_dq);
+                scanned.fetch_add(l_scanned, Ordering::Relaxed);
+                moves.fetch_add(l_moves, Ordering::Relaxed);
+                table_ops.fetch_add(l_ops, Ordering::Relaxed);
+                processed.fetch_add(l_proc, Ordering::Relaxed);
+                pruned.fetch_add(l_pruned, Ordering::Relaxed);
+            },
+        );
+
+        out.iterations += 1;
+        let dq = dq_iter.load();
+        out.dq_total += dq;
+        out.counters.edges_scanned_move += scanned.load(Ordering::Relaxed);
+        out.counters.moves_applied += moves.load(Ordering::Relaxed);
+        out.counters.table_ops += table_ops.load(Ordering::Relaxed);
+        out.counters.vertices_processed += processed.load(Ordering::Relaxed);
+        out.counters.vertices_pruned += pruned.load(Ordering::Relaxed);
+        if params.record_chunks {
+            out.loops.push((params.schedule, stats.chunks));
+        }
+        if dq <= tau {
+            break; // locally converged (Algorithm 2 line 14)
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::modularity::modularity;
+    use crate::louvain::params::TableKind;
+
+    fn setup(g: &Csr) -> (Vec<u32>, Vec<f64>, Vec<f64>, Vec<u32>) {
+        let n = g.num_vertices();
+        let membership: Vec<u32> = (0..n as u32).collect();
+        let k: Vec<f64> = g.vertex_weights();
+        let sigma = k.clone();
+        let affected = vec![1u32; n];
+        (membership, k, sigma, affected)
+    }
+
+    #[test]
+    fn two_triangles_find_the_obvious_communities() {
+        // Two triangles joined by one bridge edge.
+        let g = GraphBuilder::new(6)
+            .edge(0, 1, 1.0).edge(1, 2, 1.0).edge(0, 2, 1.0)
+            .edge(3, 4, 1.0).edge(4, 5, 1.0).edge(3, 5, 1.0)
+            .edge(2, 3, 1.0)
+            .build_undirected();
+        let (mut memb, k, mut sigma, mut aff) = setup(&g);
+        let params = LouvainParams::default();
+        let pool = TablePool::new(TableKind::FarKv, 6, 1);
+        let m = g.total_weight();
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        assert!(out.iterations >= 1);
+        assert_eq!(memb[0], memb[1]);
+        assert_eq!(memb[1], memb[2]);
+        assert_eq!(memb[3], memb[4]);
+        assert_eq!(memb[4], memb[5]);
+        assert_ne!(memb[0], memb[3]);
+        assert!(out.dq_total > 0.0);
+    }
+
+    #[test]
+    fn moves_never_decrease_modularity() {
+        for f in GraphFamily::ALL {
+            let g = generate(f, 9, 17);
+            let n = g.num_vertices();
+            let (mut memb, k, mut sigma, mut aff) = setup(&g);
+            let q0 = modularity(&g, &(0..n as u32).collect::<Vec<_>>());
+            let params = LouvainParams::default();
+            let pool = TablePool::new(TableKind::FarKv, n, 1);
+            let m = g.total_weight();
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            let q1 = modularity(&g, &memb);
+            assert!(q1 >= q0 - 1e-9, "{f:?}: q0={q0} q1={q1}");
+        }
+    }
+
+    #[test]
+    fn sigma_stays_consistent_with_membership() {
+        let g = generate(GraphFamily::Web, 9, 23);
+        let n = g.num_vertices();
+        let (mut memb, k, mut sigma, mut aff) = setup(&g);
+        let params = LouvainParams::default();
+        let pool = TablePool::new(TableKind::FarKv, n, 1);
+        let m = g.total_weight();
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        // Σ'[c] must equal the sum of K over members of c.
+        let mut want = vec![0f64; n];
+        for v in 0..n {
+            want[memb[v] as usize] += k[v];
+        }
+        for c in 0..n {
+            assert!((sigma[c] - want[c]).abs() < 1e-6, "Σ[{c}]={} want {}", sigma[c], want[c]);
+        }
+    }
+
+    #[test]
+    fn table_kinds_agree_single_thread() {
+        let g = generate(GraphFamily::Social, 8, 29);
+        let n = g.num_vertices();
+        let m = g.total_weight();
+        let mut results = Vec::new();
+        for kind in [TableKind::Map, TableKind::CloseKv, TableKind::FarKv] {
+            let (mut memb, k, mut sigma, mut aff) = setup(&g);
+            let params = LouvainParams { table: kind, ..Default::default() };
+            let pool = TablePool::new(kind, n, 1);
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            results.push(modularity(&g, &memb));
+        }
+        // Map iterates keys in ascending order, KV in first-touch order:
+        // tie-breaks may differ, but quality must agree closely.
+        assert!((results[0] - results[2]).abs() < 0.02, "{results:?}");
+        assert!((results[1] - results[2]).abs() < 1e-12, "{results:?}");
+    }
+
+    #[test]
+    fn pruning_and_no_pruning_reach_similar_quality() {
+        let g = generate(GraphFamily::Web, 9, 31);
+        let n = g.num_vertices();
+        let m = g.total_weight();
+        let mut qs = Vec::new();
+        for pruning in [false, true] {
+            let (mut memb, k, mut sigma, mut aff) = setup(&g);
+            let params = LouvainParams { pruning, ..Default::default() };
+            let pool = TablePool::new(TableKind::FarKv, n, 1);
+            let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            if pruning {
+                assert!(out.counters.vertices_pruned > 0, "pruning never skipped a vertex");
+            }
+            qs.push(modularity(&g, &memb));
+        }
+        assert!((qs[0] - qs[1]).abs() < 0.03, "{qs:?}");
+    }
+
+    #[test]
+    fn max_iterations_caps_work() {
+        let g = generate(GraphFamily::Social, 9, 37);
+        let n = g.num_vertices();
+        let (mut memb, k, mut sigma, mut aff) = setup(&g);
+        let params = LouvainParams { max_iterations: 3, ..Default::default() };
+        let pool = TablePool::new(TableKind::FarKv, n, 1);
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 0.0);
+        assert!(out.iterations <= 3);
+    }
+
+    #[test]
+    fn multithreaded_run_is_sane() {
+        let g = generate(GraphFamily::Web, 10, 41);
+        let n = g.num_vertices();
+        let (mut memb, k, mut sigma, mut aff) = setup(&g);
+        let params = LouvainParams { threads: 4, ..Default::default() };
+        let pool = TablePool::new(TableKind::FarKv, n, 4);
+        let m = g.total_weight();
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        let q = modularity(&g, &memb);
+        assert!(q > 0.4, "multithreaded local-moving broke quality: q={q}");
+        // Σ invariant still holds after concurrent updates.
+        let mut want = vec![0f64; n];
+        for v in 0..n {
+            want[memb[v] as usize] += k[v];
+        }
+        for c in 0..n {
+            assert!((sigma[c] - want[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_stay_put() {
+        let g = GraphBuilder::new(5).edge(0, 1, 1.0).build_undirected();
+        let (mut memb, k, mut sigma, mut aff) = setup(&g);
+        let params = LouvainParams::default();
+        let pool = TablePool::new(TableKind::FarKv, 5, 1);
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 1e-9);
+        for v in 2..5 {
+            assert_eq!(memb[v], v as u32);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! GVE-Louvain: the paper's multicore Louvain implementation.
+//!
+//! Structure follows the paper's Algorithms 1–3:
+//!
+//! * [`params`] — all tunables of §4.1 (schedule, iteration cap,
+//!   tolerance + drop rate, aggregation tolerance, pruning, hashtable
+//!   design, aggregation strategy);
+//! * [`modularity`] — Eq. 1 / Eq. 2;
+//! * [`hashtable`] — per-thread community tables: `Map` (std::map-like
+//!   BTreeMap), `CloseKv`, `FarKv` (§4.1.9, Fig 3);
+//! * [`local_moving`] — Algorithm 2 with vertex pruning;
+//! * [`aggregation`] — Algorithm 3 (prefix-sum CSR + holey CSR) and the
+//!   2-D-array ablation variant (§4.1.7–4.1.8);
+//! * [`renumber`] / [`dendrogram`] — community renumbering and
+//!   dendrogram lookup;
+//! * [`gve`] — the pass loop (Algorithm 1) with phase/pass metrics.
+
+pub mod aggregation;
+pub mod dendrogram;
+pub mod gve;
+pub mod hashtable;
+pub mod local_moving;
+pub mod modularity;
+pub mod params;
+pub mod renumber;
+
+pub use gve::{GveLouvain, LouvainResult, PassStats};
+pub use params::LouvainParams;
+
+/// Work counters shared by CPU and GPU paths; they feed the device cost
+/// models and the phase-split reports.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    /// Edge slots scanned during local-moving.
+    pub edges_scanned_move: u64,
+    /// Edge slots scanned during aggregation.
+    pub edges_scanned_agg: u64,
+    /// Accepted community moves.
+    pub moves_applied: u64,
+    /// Hashtable accumulate operations.
+    pub table_ops: u64,
+    /// Vertices processed (local-moving iterations summed).
+    pub vertices_processed: u64,
+    /// Vertices skipped by pruning.
+    pub vertices_pruned: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, o: &Counters) {
+        self.edges_scanned_move += o.edges_scanned_move;
+        self.edges_scanned_agg += o.edges_scanned_agg;
+        self.moves_applied += o.moves_applied;
+        self.table_ops += o.table_ops;
+        self.vertices_processed += o.vertices_processed;
+        self.vertices_pruned += o.vertices_pruned;
+    }
+}

@@ -1,0 +1,152 @@
+//! Modularity (Eq. 1) and delta-modularity (Eq. 2).
+//!
+//! Conventions (matching the paper's definitions in §3.1 and making
+//! Eq. 1 agree with the standard `L_c/m − (k_c/2m)²` form):
+//!
+//! * `σ_c`  — sum over *directed slots* internal to `c`
+//!   (`Σ_{i∈c} K_{i→c}`): each undirected internal edge counts twice,
+//!   a self-loop slot once.
+//! * `Σ_c`  — total weighted degree of members (`Σ_{i∈c} K_i`).
+//! * `m`    — half the total slot weight.
+
+use crate::graph::Csr;
+
+/// Per-community `(σ_c, Σ_c)` accumulated over the graph.
+pub fn community_weights(g: &Csr, membership: &[u32]) -> (Vec<f64>, Vec<f64>) {
+    let nc = membership.iter().copied().max().map(|c| c as usize + 1).unwrap_or(0);
+    let mut sigma = vec![0f64; nc];
+    let mut big = vec![0f64; nc];
+    for v in 0..g.num_vertices() {
+        let cv = membership[v] as usize;
+        let (ts, ws) = g.edges(v);
+        for (t, w) in ts.iter().zip(ws) {
+            big[cv] += *w as f64;
+            if membership[*t as usize] as usize == cv {
+                sigma[cv] += *w as f64;
+            }
+        }
+    }
+    (sigma, big)
+}
+
+/// Modularity `Q` of a membership (Eq. 1).
+pub fn modularity(g: &Csr, membership: &[u32]) -> f64 {
+    let m = g.total_weight();
+    if m == 0.0 {
+        return 0.0;
+    }
+    let (sigma, big) = community_weights(g, membership);
+    sigma
+        .iter()
+        .zip(&big)
+        .map(|(&s, &b)| s / (2.0 * m) - (b / (2.0 * m)).powi(2))
+        .sum()
+}
+
+/// Delta-modularity of moving `i` from community `d` to `c` (Eq. 2).
+///
+/// * `k_to_c` / `k_to_d` — `K_{i→c}` / `K_{i→d}` (scan, self excluded);
+/// * `k_i` — weighted degree of `i`;
+/// * `sigma_c` / `sigma_d` — `Σ_c` / `Σ_d` *before* the move.
+#[inline]
+pub fn delta_modularity(k_to_c: f64, k_to_d: f64, k_i: f64, sigma_c: f64, sigma_d: f64, m: f64) -> f64 {
+    (k_to_c - k_to_d) / m - k_i * (k_i + sigma_c - sigma_d) / (2.0 * m * m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    fn two_pairs() -> Csr {
+        GraphBuilder::new(4).edge(0, 1, 1.0).edge(2, 3, 1.0).build_undirected()
+    }
+
+    #[test]
+    fn modularity_two_disjoint_edges() {
+        // Known value: 0.5 (see module docs for the convention check).
+        let g = two_pairs();
+        let q = modularity(&g, &[0, 0, 1, 1]);
+        assert!((q - 0.5).abs() < 1e-12, "q={q}");
+    }
+
+    #[test]
+    fn modularity_single_community_is_zero() {
+        // Q = σ/(2m) − (Σ/2m)² = 1 − 1 = 0 when all vertices share one
+        // community.
+        let g = two_pairs();
+        let q = modularity(&g, &[0, 0, 0, 0]);
+        assert!(q.abs() < 1e-12, "q={q}");
+    }
+
+    #[test]
+    fn modularity_singletons_negative_or_zero() {
+        let g = two_pairs();
+        let q = modularity(&g, &[0, 1, 2, 3]);
+        assert!(q < 0.0, "q={q}");
+    }
+
+    #[test]
+    fn modularity_range_on_random_graphs() {
+        for f in GraphFamily::ALL {
+            let g = generate(f, 9, 11);
+            let n = g.num_vertices();
+            let singleton: Vec<u32> = (0..n as u32).collect();
+            let q = modularity(&g, &singleton);
+            assert!((-0.5..=1.0).contains(&q), "{f:?} q={q}");
+        }
+    }
+
+    #[test]
+    fn delta_modularity_matches_recomputation() {
+        // Moving a vertex and recomputing Q from scratch must equal
+        // Q_before + ΔQ (the fundamental Eq. 2 invariant).
+        let g = generate(GraphFamily::Web, 8, 5);
+        let n = g.num_vertices();
+        let m = g.total_weight();
+        // Random-ish initial membership: two halves.
+        let mut memb: Vec<u32> = (0..n).map(|v| (v % 2) as u32).collect();
+        let (sigma_dummy, big) = community_weights(&g, &memb);
+        let _ = sigma_dummy;
+        let q0 = modularity(&g, &memb);
+
+        // Pick vertex 3, move 0 -> 1 (or 1 -> 0).
+        let i = 3usize;
+        let d = memb[i] as usize;
+        let c = 1 - d;
+        let mut k_to = [0f64; 2];
+        for (t, w) in g.neighbours(i) {
+            if t as usize == i {
+                continue;
+            }
+            k_to[memb[t as usize] as usize] += w as f64;
+        }
+        let k_i = g.vertex_weight(i);
+        let dq = delta_modularity(k_to[c], k_to[d], k_i, big[c], big[d], m);
+
+        memb[i] = c as u32;
+        let q1 = modularity(&g, &memb);
+        assert!((q1 - q0 - dq).abs() < 1e-9, "q0={q0} q1={q1} dq={dq}");
+    }
+
+    #[test]
+    fn community_weights_totals() {
+        let g = generate(GraphFamily::Social, 8, 7);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 5) as u32).collect();
+        let (sigma, big) = community_weights(&g, &memb);
+        let m = g.total_weight();
+        // Σ over all c of Σ_c = 2m; σ_c ≤ Σ_c.
+        assert!((big.iter().sum::<f64>() - 2.0 * m).abs() < 1e-9);
+        for (s, b) in sigma.iter().zip(&big) {
+            assert!(*s <= b + 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_graph_modularity_zero() {
+        let g = Csr { offsets: vec![0], targets: vec![], weights: vec![] };
+        assert_eq!(modularity(&g, &[]), 0.0);
+    }
+}

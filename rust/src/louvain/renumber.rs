@@ -1,0 +1,77 @@
+//! Community renumbering (Algorithm 1 line 10).
+//!
+//! After local-moving, community ids are a sparse subset of `0..|V'|`;
+//! the aggregation phase needs them dense in `0..|Γ|`.
+
+/// Renumber communities to dense ids preserving first-appearance order.
+/// Returns the number of communities `|Γ|`.
+pub fn renumber_communities(membership: &mut [u32]) -> usize {
+    let n = membership.len();
+    if n == 0 {
+        return 0;
+    }
+    let max = membership.iter().copied().max().unwrap() as usize;
+    let mut remap = vec![u32::MAX; max + 1];
+    let mut next = 0u32;
+    for c in membership.iter_mut() {
+        let slot = &mut remap[*c as usize];
+        if *slot == u32::MAX {
+            *slot = next;
+            next += 1;
+        }
+        *c = *slot;
+    }
+    next as usize
+}
+
+/// Count distinct communities without renumbering.
+pub fn count_communities(membership: &[u32]) -> usize {
+    if membership.is_empty() {
+        return 0;
+    }
+    let max = membership.iter().copied().max().unwrap() as usize;
+    let mut seen = vec![false; max + 1];
+    let mut n = 0usize;
+    for &c in membership {
+        if !seen[c as usize] {
+            seen[c as usize] = true;
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renumber_dense_and_stable() {
+        let mut m = vec![7, 3, 7, 9, 3];
+        let n = renumber_communities(&mut m);
+        assert_eq!(n, 3);
+        assert_eq!(m, vec![0, 1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn renumber_already_dense_is_identity_up_to_order() {
+        let mut m = vec![0, 1, 2, 1];
+        let n = renumber_communities(&mut m);
+        assert_eq!(n, 3);
+        assert_eq!(m, vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn renumber_empty() {
+        let mut m: Vec<u32> = vec![];
+        assert_eq!(renumber_communities(&mut m), 0);
+    }
+
+    #[test]
+    fn count_matches_renumber() {
+        let m = vec![5, 5, 2, 9, 2, 0];
+        assert_eq!(count_communities(&m), 4);
+        let mut mm = m.clone();
+        assert_eq!(renumber_communities(&mut mm), 4);
+    }
+}

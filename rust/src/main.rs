@@ -1,0 +1,297 @@
+//! `repro` — the CLI for the GVE-Louvain / ν-Louvain reproduction.
+//!
+//! Subcommands:
+//!
+//! * `suite`                — list the 13-graph evaluation suite (Table 2)
+//! * `generate`             — write a suite/family graph to disk
+//! * `run`                  — run one system on one graph
+//! * `compare`              — cross-system comparison (Figs 11–13 rows)
+//! * `pjrt`                 — run the PJRT three-layer ν-Louvain path
+//! * `config`               — run an experiment described by a TOML file
+//!
+//! Arguments are hand-parsed (`--key value` / flags); the offline
+//! registry has no clap.
+
+use anyhow::{bail, Context, Result};
+use gve_louvain::baselines::{run_system, System};
+use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::runner::{compare_on_entry, mean_speedup};
+use gve_louvain::coordinator::{config::Config, suite};
+use gve_louvain::gpusim::nulouvain::NuParams;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::io;
+use gve_louvain::graph::properties::GraphProperties;
+use gve_louvain::runtime::executor::MoveExecutor;
+use gve_louvain::runtime::pjrt_louvain::PjrtLouvain;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed `--key value` options + positional args.
+struct Opts {
+    flags: HashMap<String, String>,
+    #[allow(dead_code)]
+    positional: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Self { flags, positional }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_i(&self, key: &str, default: i64) -> i64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..]);
+    match cmd.as_str() {
+        "suite" => cmd_suite(&opts),
+        "generate" => cmd_generate(&opts),
+        "run" => cmd_run(&opts),
+        "compare" => cmd_compare(&opts),
+        "pjrt" => cmd_pjrt(&opts),
+        "config" => cmd_config(&opts),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        r#"repro — GVE-Louvain / ν-Louvain reproduction CLI
+
+USAGE: repro <subcommand> [--key value ...]
+
+  suite     [--offset N]                      list the Table 2 suite
+  generate  --graph NAME|--family F [--scale S] [--seed N] --out PATH
+  run       --system S --graph NAME [--offset N] [--threads T] [--seed N]
+            systems: gve-louvain nu-louvain vite grappolo networkit cugraph nido
+  compare   [--graphs quick|all] [--systems a,b,c] [--offset N] [--repeats R]
+  pjrt      --graph NAME [--offset N]         three-layer PJRT ν-Louvain
+  config    --file PATH                       run a configs/*.toml experiment
+"#
+    );
+}
+
+fn parse_system(s: &str) -> Result<System> {
+    Ok(match s {
+        "gve-louvain" | "gve" => System::GveLouvain,
+        "nu-louvain" | "nu" => System::NuLouvain,
+        "vite" => System::Vite,
+        "grappolo" => System::Grappolo,
+        "networkit" => System::NetworKit,
+        "cugraph" => System::CuGraph,
+        "nido" => System::Nido,
+        other => bail!("unknown system {other:?}"),
+    })
+}
+
+fn load_graph(opts: &Opts) -> Result<(gve_louvain::graph::Csr, String)> {
+    let seed = opts.get_i("seed", 42) as u64;
+    if let Some(path) = opts.flags.get("input") {
+        let g = io::load(&PathBuf::from(path))?;
+        return Ok((g, path.clone()));
+    }
+    let name = opts.get("graph", "");
+    if !name.is_empty() {
+        let entry = suite::find(&name).with_context(|| format!("unknown suite graph {name:?}"))?;
+        let offset = opts.get_i("offset", 0) as i32;
+        return Ok((entry.graph(offset, seed), name));
+    }
+    let fam = opts.get("family", "web");
+    let family = GraphFamily::parse(&fam).with_context(|| format!("unknown family {fam:?}"))?;
+    let scale = opts.get_i("scale", 12) as u32;
+    Ok((generate(family, scale, seed), format!("{fam}-s{scale}")))
+}
+
+fn cmd_suite(opts: &Opts) -> Result<()> {
+    let offset = opts.get_i("offset", 0) as i32;
+    let seed = opts.get_i("seed", 42) as u64;
+    let mut t = Table::new(
+        "Evaluation suite (Table 2 mirror)",
+        &["graph", "family", "|V|", "|E|", "D_avg", "paper |V|", "paper |E|"],
+    );
+    for e in &suite::SUITE {
+        let g = e.graph(offset, seed);
+        let p = GraphProperties::of(&g);
+        t.row(vec![
+            e.name.into(),
+            e.family.name().into(),
+            format!("{}", p.num_vertices),
+            format!("{}", p.num_edges),
+            format!("{:.1}", p.avg_degree),
+            gve_louvain::graph::properties::human(e.paper_v as f64),
+            gve_louvain::graph::properties::human(e.paper_e as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_generate(opts: &Opts) -> Result<()> {
+    let (g, name) = load_graph(opts)?;
+    let out = opts.flags.get("out").context("--out PATH required")?;
+    let path = PathBuf::from(out);
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => io::write_matrix_market(&g, &path)?,
+        _ => io::write_binary(&g, &path)?,
+    }
+    println!("wrote {name} ({} vertices, {} edges) to {out}", g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_run(opts: &Opts) -> Result<()> {
+    let system = parse_system(&opts.get("system", "gve-louvain"))?;
+    let (g, name) = load_graph(opts)?;
+    let threads = opts.get_i("threads", 1) as usize;
+    let seed = opts.get_i("seed", 42) as u64;
+    let out = run_system(system, &g, threads, seed);
+    println!(
+        "{} on {name}: Q={:.4} |Γ|={} passes={} wall={} modeled={} rate={:.1}M edges/s",
+        system.name(),
+        out.modularity,
+        out.num_communities,
+        out.passes,
+        fmt_ns(out.wall_ns),
+        out.modeled_ns.map(fmt_ns).unwrap_or_else(|| "OOM".into()),
+        edges_per_sec(g.num_edges(), out.wall_ns) / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_compare(opts: &Opts) -> Result<()> {
+    let systems: Vec<System> = opts
+        .get("systems", "gve-louvain,nu-louvain,vite,grappolo,networkit,cugraph,nido")
+        .split(',')
+        .map(parse_system)
+        .collect::<Result<_>>()?;
+    let entries: Vec<&suite::SuiteEntry> = match opts.get("graphs", "quick").as_str() {
+        "all" => suite::SUITE.iter().collect(),
+        "quick" => suite::quick(),
+        name => vec![suite::find(name).with_context(|| format!("unknown graph {name:?}"))?],
+    };
+    let offset = opts.get_i("offset", -2) as i32;
+    let repeats = opts.get_i("repeats", 1) as usize;
+    let threads = opts.get_i("threads", 1) as usize;
+    let seed = opts.get_i("seed", 42) as u64;
+
+    let mut t = Table::new(
+        "Cross-system comparison (Figs 11-13 rows)",
+        &["graph", "system", "modeled", "wall", "Q", "|Γ|", "passes"],
+    );
+    let mut all_cells = Vec::new();
+    for entry in entries {
+        let cells = compare_on_entry(entry, offset, &systems, threads, repeats, seed);
+        for c in &cells {
+            t.row(vec![
+                c.graph.into(),
+                c.system.name().into(),
+                c.modeled_ns.map(|x| fmt_ns(x as u64)).unwrap_or_else(|| "OOM".into()),
+                fmt_ns(c.wall_ns as u64),
+                format!("{:.4}", c.modularity),
+                format!("{}", c.num_communities),
+                format!("{}", c.passes),
+            ]);
+        }
+        all_cells.extend(cells);
+    }
+    print!("{}", t.render());
+    if systems.contains(&System::GveLouvain) {
+        for &other in &systems {
+            if other == System::GveLouvain {
+                continue;
+            }
+            if let Some(s) = mean_speedup(&all_cells, System::GveLouvain, other) {
+                println!("gve-louvain speedup vs {:<12}: {s:.1}x", other.name());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pjrt(opts: &Opts) -> Result<()> {
+    let (g, name) = load_graph(opts)?;
+    let exec = MoveExecutor::discover()?;
+    println!("PJRT platform: {} | tile classes {:?}", exec.platform(), exec.classes());
+    let out = PjrtLouvain::new(&exec, NuParams::default()).run(&g)?;
+    println!(
+        "pjrt nu-louvain on {name}: Q={:.4} (device Q={}) |Γ|={} passes={} wall={} dispatches={}",
+        out.modularity,
+        out.modularity_device.map(|q| format!("{q:.4}")).unwrap_or_else(|| "-".into()),
+        out.num_communities,
+        out.passes,
+        fmt_ns(out.wall_ns),
+        out.dispatches,
+    );
+    Ok(())
+}
+
+fn cmd_config(opts: &Opts) -> Result<()> {
+    let path = opts.flags.get("file").context("--file PATH required")?;
+    let cfg = Config::load(&PathBuf::from(path))?;
+    let name = cfg.get_str("", "name", "experiment");
+    println!("experiment: {name}");
+    let systems: Vec<System> = cfg
+        .get("run", "systems")
+        .and_then(|v| v.as_array().map(|a| a.to_vec()))
+        .unwrap_or_default()
+        .iter()
+        .filter_map(|v| v.as_str().map(|s| s.to_string()))
+        .map(|s| parse_system(&s))
+        .collect::<Result<_>>()?;
+    let systems = if systems.is_empty() { vec![System::GveLouvain] } else { systems };
+    let graphs = cfg.get_str("run", "graphs", "quick");
+    let args = vec![
+        "--systems".to_string(),
+        systems.iter().map(|s| s.name()).collect::<Vec<_>>().join(","),
+        "--graphs".to_string(),
+        graphs,
+        "--offset".to_string(),
+        cfg.get_int("run", "offset", -2).to_string(),
+        "--repeats".to_string(),
+        cfg.get_int("run", "repeats", 1).to_string(),
+        "--threads".to_string(),
+        cfg.get_int("run", "threads", 1).to_string(),
+        "--seed".to_string(),
+        cfg.get_int("run", "seed", 42).to_string(),
+    ];
+    cmd_compare(&Opts::parse(&args))
+}

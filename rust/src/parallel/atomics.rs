@@ -1,0 +1,158 @@
+//! Atomic floating-point accumulators (CAS loops over atomic bits).
+//!
+//! GVE-Louvain updates community totals `Σ'` atomically from many
+//! threads (Algorithm 2 line 11); std has no `AtomicF64`, so we build
+//! one on `AtomicU64` (and an f32 twin used by the GPU simulator's
+//! 32-bit hashtable values, Fig 8).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// `f64` cell supporting atomic add/sub/load/store.
+#[derive(Debug, Default)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self { bits: AtomicU64::new(v.to_bits()) }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed)
+    }
+
+    /// Atomically `self += v`; returns the previous value.
+    #[inline]
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur, next, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return f64::from_bits(cur),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn fetch_sub(&self, v: f64) -> f64 {
+        self.fetch_add(-v)
+    }
+}
+
+/// `f32` twin of [`AtomicF64`].
+#[derive(Debug, Default)]
+pub struct AtomicF32 {
+    bits: AtomicU32,
+}
+
+impl AtomicF32 {
+    pub fn new(v: f32) -> Self {
+        Self { bits: AtomicU32::new(v.to_bits()) }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f32) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn fetch_add(&self, v: f32) -> f32 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f32::from_bits(cur) + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur, next, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return f32::from_bits(cur),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// View a `&mut [f64]` as `&[AtomicF64]` for in-place parallel updates.
+///
+/// Sound because `AtomicF64` is `repr(transparent)`-compatible in layout
+/// (a single `u64`) and the mutable borrow guarantees exclusivity for
+/// the duration of the scope that splits it across threads.
+pub fn as_atomic_f64(v: &mut [f64]) -> &[AtomicF64] {
+    unsafe { &*(v as *mut [f64] as *const [AtomicF64]) }
+}
+
+/// View a `&mut [f32]` as `&[AtomicF32]`.
+pub fn as_atomic_f32(v: &mut [f32]) -> &[AtomicF32] {
+    unsafe { &*(v as *mut [f32] as *const [AtomicF32]) }
+}
+
+/// View a `&mut [u32]` as `&[AtomicU32]`.
+pub fn as_atomic_u32(v: &mut [u32]) -> &[AtomicU32] {
+    unsafe { &*(v as *mut [u32] as *const [AtomicU32]) }
+}
+
+/// View a `&mut [u64]` as `&[AtomicU64]`.
+pub fn as_atomic_u64(v: &mut [u64]) -> &[AtomicU64] {
+    unsafe { &*(v as *mut [u64] as *const [AtomicU64]) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_add_sub_round_trip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.fetch_add(2.5), 1.5);
+        assert_eq!(a.load(), 4.0);
+        a.fetch_sub(1.0);
+        assert_eq!(a.load(), 3.0);
+    }
+
+    #[test]
+    fn f32_add() {
+        let a = AtomicF32::new(0.0);
+        for _ in 0..100 {
+            a.fetch_add(0.5);
+        }
+        assert_eq!(a.load(), 50.0);
+    }
+
+    #[test]
+    fn concurrent_f64_sum_is_exactly_n() {
+        // Integral values => f64 addition is associative, so the sum is
+        // exact regardless of interleaving.
+        let cell = AtomicF64::new(0.0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        cell.fetch_add(1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(cell.load(), 40_000.0);
+    }
+
+    #[test]
+    fn slice_view_updates_underlying() {
+        let mut v = vec![0.0f64; 4];
+        {
+            let a = as_atomic_f64(&mut v);
+            a[2].fetch_add(7.0);
+        }
+        assert_eq!(v, vec![0.0, 0.0, 7.0, 0.0]);
+    }
+}

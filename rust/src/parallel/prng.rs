@@ -1,0 +1,171 @@
+//! Deterministic PRNGs: SplitMix64 (seeding) and xoshiro256** (streams).
+//!
+//! Every generator and tie-break in the crate draws from these so runs
+//! are reproducible from a single `--seed` (DESIGN.md §8).
+
+/// SplitMix64 — used to expand a user seed into stream seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the workhorse stream RNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 so any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's method, bias-free enough for
+    /// graph generation at our scales).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // 128-bit multiply-shift.
+        let x = self.next_u64();
+        ((x as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// Power-law (Zipf-ish) integer in `[1, max]` with exponent `alpha`
+    /// via inverse-transform on a truncated Pareto.
+    pub fn powerlaw(&mut self, max: u64, alpha: f64) -> u64 {
+        let u = self.unit_f64();
+        let one_minus = 1.0 - alpha;
+        let lo = 1.0f64;
+        let hi = max as f64;
+        let x = if (one_minus).abs() < 1e-9 {
+            // alpha ~ 1: logarithmic inverse transform.
+            (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+        } else {
+            let a = lo.powf(one_minus);
+            let b = hi.powf(one_minus);
+            (a + u * (b - a)).powf(1.0 / one_minus)
+        };
+        (x as u64).clamp(1, max)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(1);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(1);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn xoshiro_streams_differ_by_seed() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Xoshiro256::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn unit_f64_in_range() {
+        let mut r = Xoshiro256::new(4);
+        for _ in 0..10_000 {
+            let x = r.unit_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn powerlaw_bounds_and_skew() {
+        let mut r = Xoshiro256::new(5);
+        let mut small = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            let x = r.powerlaw(1000, 2.2);
+            assert!((1..=1000).contains(&x));
+            if x <= 3 {
+                small += 1;
+            }
+        }
+        // A 2.2-exponent power law is dominated by tiny values.
+        assert!(small > n / 2, "power law not skewed: {small}/{n}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(6);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

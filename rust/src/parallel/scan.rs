@@ -1,0 +1,129 @@
+//! Prefix sums (exclusive scan), serial and blocked-parallel.
+//!
+//! The aggregation phase builds both the community-vertices CSR and the
+//! holey super-vertex CSR from degree counts via exclusive scan
+//! (Algorithm 3, lines 4 & 9).  The parallel version is the standard
+//! three-phase blocked scan (local reduce → scan of block sums → local
+//! scan with offset).
+
+use super::pool::{parallel_for, ParallelOpts};
+use crate::parallel::atomics::as_atomic_u64;
+
+/// In-place exclusive scan; returns the grand total.
+pub fn exclusive_scan_serial(v: &mut [usize]) -> usize {
+    let mut acc = 0usize;
+    for x in v.iter_mut() {
+        let t = *x;
+        *x = acc;
+        acc += t;
+    }
+    acc
+}
+
+/// Blocked-parallel in-place exclusive scan; returns the grand total.
+///
+/// Falls back to serial when the input is small or `threads == 1`.
+pub fn exclusive_scan(v: &mut [usize], threads: usize) -> usize {
+    const MIN_PAR: usize = 1 << 14;
+    let n = v.len();
+    if threads <= 1 || n < MIN_PAR {
+        return exclusive_scan_serial(v);
+    }
+    let nblocks = threads * 4;
+    let bsz = n.div_ceil(nblocks);
+    let mut block_sums = vec![0u64; nblocks];
+
+    // Phase 1: per-block reduction.
+    {
+        let sums = as_atomic_u64(&mut block_sums);
+        let data = &*v;
+        parallel_for(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, |r| {
+            for b in r {
+                let lo = b * bsz;
+                if lo >= n {
+                    continue;
+                }
+                let hi = ((b + 1) * bsz).min(n);
+                let s: usize = data[lo..hi].iter().sum();
+                sums[b].store(s as u64, std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+    }
+
+    // Phase 2: scan block sums (serial; nblocks is tiny).
+    let mut acc = 0usize;
+    let mut offsets = vec![0usize; nblocks];
+    for b in 0..nblocks {
+        offsets[b] = acc;
+        acc += block_sums[b] as usize;
+    }
+    let total = acc;
+
+    // Phase 3: local exclusive scan with the block offset.
+    {
+        let offsets = &offsets;
+        // SAFETY of the split: blocks are disjoint ranges of `v`.
+        let ptr = SendPtr(v.as_mut_ptr());
+        parallel_for(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, move |r| {
+            let ptr = ptr; // capture the whole SendPtr (2021 disjoint capture)
+            for b in r {
+                let lo = b * bsz;
+                if lo >= n {
+                    continue;
+                }
+                let hi = ((b + 1) * bsz).min(n);
+                let mut acc = offsets[b];
+                // SAFETY: [lo, hi) is owned exclusively by block b.
+                let slice = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+                for x in slice {
+                    let t = *x;
+                    *x = acc;
+                    acc += t;
+                }
+            }
+        });
+    }
+    total
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut usize);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::prng::Xoshiro256;
+
+    #[test]
+    fn serial_scan_basic() {
+        let mut v = vec![3, 1, 4, 1, 5];
+        let total = exclusive_scan_serial(&mut v);
+        assert_eq!(v, vec![0, 3, 4, 8, 9]);
+        assert_eq!(total, 14);
+    }
+
+    #[test]
+    fn serial_scan_empty_and_singleton() {
+        let mut v: Vec<usize> = vec![];
+        assert_eq!(exclusive_scan_serial(&mut v), 0);
+        let mut v = vec![42];
+        assert_eq!(exclusive_scan_serial(&mut v), 42);
+        assert_eq!(v, vec![0]);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Xoshiro256::new(9);
+        for n in [0usize, 1, 100, (1 << 14) + 7, 100_000] {
+            let base: Vec<usize> = (0..n).map(|_| rng.below(10) as usize).collect();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let ta = exclusive_scan_serial(&mut a);
+            let tb = exclusive_scan(&mut b, 4);
+            assert_eq!(ta, tb, "n={n}");
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! OpenMP-style loop schedules (paper §4.1.1).
+//!
+//! The paper evaluates `static`, `dynamic`, `guided` and `auto` with a
+//! chunk size of 2048 and adopts **dynamic** (7% faster than auto on
+//! skewed degree distributions).  These are faithful re-implementations
+//! of the OpenMP semantics:
+//!
+//! * `Static`  — chunks assigned round-robin to threads up front;
+//! * `Dynamic` — threads grab the next chunk from a shared counter;
+//! * `Guided`  — chunk size decays with remaining work
+//!   (`max(remaining / (2T), chunk_min)`);
+//! * `Auto`    — implementation-defined in OpenMP; here (as in libgomp)
+//!   it maps to contiguous static blocks of `n / T`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The paper's default chunk size for static/dynamic/guided.
+pub const DEFAULT_CHUNK: usize = 2048;
+
+/// Loop schedule kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    Static,
+    Dynamic,
+    Guided,
+    Auto,
+}
+
+impl Schedule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Dynamic => "dynamic",
+            Schedule::Guided => "guided",
+            Schedule::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "static" => Some(Schedule::Static),
+            "dynamic" => Some(Schedule::Dynamic),
+            "guided" => Some(Schedule::Guided),
+            "auto" => Some(Schedule::Auto),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [Schedule; 4] =
+        [Schedule::Static, Schedule::Dynamic, Schedule::Guided, Schedule::Auto];
+}
+
+/// Shared state handing out chunks of `0..n` to `nthreads` workers.
+pub struct ChunkDealer {
+    n: usize,
+    nthreads: usize,
+    chunk: usize,
+    schedule: Schedule,
+    next: AtomicUsize,
+}
+
+impl ChunkDealer {
+    pub fn new(n: usize, nthreads: usize, schedule: Schedule, chunk: usize) -> Self {
+        Self { n, nthreads: nthreads.max(1), chunk: chunk.max(1), schedule, next: AtomicUsize::new(0) }
+    }
+
+    /// Next chunk for worker `tid`, or `None` when the range is drained.
+    ///
+    /// For `Static`/`Auto` the dealer is deterministic per `tid`; for
+    /// `Dynamic`/`Guided` it is first-come-first-served.
+    pub fn next_chunk(&self, tid: usize, static_cursor: &mut usize) -> Option<std::ops::Range<usize>> {
+        match self.schedule {
+            Schedule::Static => {
+                // Round-robin chunks: tid gets chunks tid, tid+T, tid+2T, ...
+                let idx = *static_cursor;
+                let start = (tid + idx * self.nthreads) * self.chunk;
+                if start >= self.n {
+                    return None;
+                }
+                *static_cursor += 1;
+                Some(start..(start + self.chunk).min(self.n))
+            }
+            Schedule::Auto => {
+                // One contiguous block per thread.
+                if *static_cursor > 0 {
+                    return None;
+                }
+                *static_cursor = 1;
+                let per = self.n.div_ceil(self.nthreads);
+                let start = tid * per;
+                if start >= self.n {
+                    return None;
+                }
+                Some(start..(start + per).min(self.n))
+            }
+            Schedule::Dynamic => {
+                let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+                if start >= self.n {
+                    return None;
+                }
+                Some(start..(start + self.chunk).min(self.n))
+            }
+            Schedule::Guided => {
+                // CAS loop: take max(remaining/(2T), chunk_min) from the cursor.
+                loop {
+                    let start = self.next.load(Ordering::Relaxed);
+                    if start >= self.n {
+                        return None;
+                    }
+                    let remaining = self.n - start;
+                    let take = (remaining / (2 * self.nthreads)).max(self.chunk).min(remaining);
+                    if self
+                        .next
+                        .compare_exchange_weak(start, start + take, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        return Some(start..start + take);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(n: usize, t: usize, s: Schedule, chunk: usize) -> Vec<std::ops::Range<usize>> {
+        let dealer = ChunkDealer::new(n, t, s, chunk);
+        let mut out = Vec::new();
+        // Emulate t workers taking turns (single-threaded drain covers all
+        // schedules deterministically for Static/Auto; Dynamic/Guided
+        // correctness here = full disjoint cover).
+        let mut cursors = vec![0usize; t];
+        let mut live: Vec<usize> = (0..t).collect();
+        while !live.is_empty() {
+            live.retain(|&tid| {
+                if let Some(r) = dealer.next_chunk(tid, &mut cursors[tid]) {
+                    out.push(r);
+                    true
+                } else {
+                    false
+                }
+            });
+        }
+        out
+    }
+
+    fn assert_cover(n: usize, chunks: &[std::ops::Range<usize>]) {
+        let mut seen = vec![false; n];
+        for r in chunks {
+            for i in r.clone() {
+                assert!(!seen[i], "index {i} covered twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "range not fully covered");
+    }
+
+    #[test]
+    fn all_schedules_cover_disjointly() {
+        for s in Schedule::ALL {
+            for (n, t, c) in [(100, 4, 8), (1, 1, 2048), (2048, 3, 100), (10_000, 8, 64)] {
+                let chunks = drain(n, t, s, c);
+                assert_cover(n, &chunks);
+            }
+        }
+    }
+
+    #[test]
+    fn static_round_robin_layout() {
+        let chunks = drain(40, 2, Schedule::Static, 10);
+        // tid0: [0,10) [20,30); tid1: [10,20) [30,40)
+        assert!(chunks.contains(&(0..10)));
+        assert!(chunks.contains(&(20..30)));
+    }
+
+    #[test]
+    fn auto_is_contiguous_blocks() {
+        let chunks = drain(100, 4, Schedule::Auto, 2048);
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().any(|r| *r == (0..25)));
+        assert!(chunks.iter().any(|r| *r == (75..100)));
+    }
+
+    #[test]
+    fn guided_chunks_decay() {
+        let chunks = drain(100_000, 4, Schedule::Guided, 64);
+        assert!(chunks[0].len() > chunks[chunks.len() - 1].len());
+        assert!(chunks.last().unwrap().len() >= 1);
+    }
+
+    #[test]
+    fn empty_range_yields_nothing() {
+        for s in Schedule::ALL {
+            assert!(drain(0, 4, s, 16).is_empty());
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! Mini property-testing framework (the offline registry has no
+//! proptest).  Deterministic: cases derive from a seed; on failure the
+//! case seed is reported so the exact input can be replayed.
+//!
+//! ```
+//! use gve_louvain::prop::{forall, Gen};
+//! forall("sum commutes", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.u64(0, 1000), g.u64(0, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::parallel::prng::Xoshiro256;
+
+/// Per-case random input source.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(case_seed), case_seed }
+    }
+
+    /// Uniform u64 in `[lo, hi]`.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.unit_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+
+    /// A vector of `len` values built by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Random membership vector over `n` vertices with ≤ `max_comms`
+    /// communities (dense ids not guaranteed).
+    pub fn membership(&mut self, n: usize, max_comms: usize) -> Vec<u32> {
+        let nc = self.usize(1, max_comms.max(1)) as u64;
+        (0..n).map(|_| self.rng.below(nc) as u32).collect()
+    }
+}
+
+/// Run `cases` cases of `body`; panics with the failing case seed.
+pub fn forall(name: &str, cases: usize, body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = 0x5eed_0000u64;
+    for case in 0..cases {
+        let case_seed = base + case as u64;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            body(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by its seed.
+pub fn replay(case_seed: u64, body: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("add-commutes", 50, |g| {
+            let (a, b) = (g.u64(0, 1 << 20), g.u64(0, 1 << 20));
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn forall_reports_failing_seed() {
+        let caught = std::panic::catch_unwind(|| {
+            forall("always-fails", 3, |_g| panic!("boom"));
+        });
+        let err = caught.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().unwrap_or(&"").to_string());
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..32 {
+            assert_eq!(a.u64(0, 1000), b.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(9);
+        for _ in 0..1000 {
+            let x = g.u64(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let m = g.membership(50, 8);
+        assert_eq!(m.len(), 50);
+        assert!(m.iter().all(|&c| c < 8));
+    }
+}

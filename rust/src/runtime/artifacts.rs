@@ -1,0 +1,158 @@
+//! Artifact manifest discovery.
+//!
+//! `python -m compile.aot` writes `manifest.txt` rows of
+//! `file<TAB>kind<TAB>params`; this module parses them and locates the
+//! artifacts directory (`$GVE_ARTIFACTS`, else `./artifacts`, walking up
+//! from the current directory so tests work from any workspace subdir).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Local-moving tile step: `(tv, md)` fixed shape.
+    MoveStep { tv: usize, md: usize },
+    /// Modularity chunk reduction over `c` communities.
+    Modularity { c: usize },
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kind: ArtifactKind,
+}
+
+/// Parsed manifest + base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+/// Locate the artifacts directory.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("GVE_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+impl Manifest {
+    /// Load the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let file = cols.next().context("file col")?.to_string();
+            let kind = cols.next().context("kind col")?;
+            let params = cols.next().unwrap_or("");
+            let kv: std::collections::HashMap<&str, usize> = params
+                .split_whitespace()
+                .filter_map(|p| {
+                    let (k, v) = p.split_once('=')?;
+                    Some((k, v.parse().ok()?))
+                })
+                .collect();
+            let kind = match kind {
+                "move_step" => ArtifactKind::MoveStep {
+                    tv: *kv.get("tv").with_context(|| format!("line {ln}: tv"))?,
+                    md: *kv.get("md").with_context(|| format!("line {ln}: md"))?,
+                },
+                "modularity" => ArtifactKind::Modularity {
+                    c: *kv.get("c").with_context(|| format!("line {ln}: c"))?,
+                },
+                other => bail!("unknown artifact kind {other:?} at line {ln}"),
+            };
+            entries.push(ArtifactEntry { file, kind });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Discover + load, or explain what to run.
+    pub fn discover() -> Result<Self> {
+        let dir = find_artifacts_dir()
+            .context("artifacts directory not found; run `make artifacts` first")?;
+        Self::load(&dir)
+    }
+
+    /// All move-step tile classes, sorted by ascending `md`.
+    pub fn tile_classes(&self) -> Vec<(usize, usize, PathBuf)> {
+        let mut v: Vec<(usize, usize, PathBuf)> = self
+            .entries
+            .iter()
+            .filter_map(|e| match e.kind {
+                ArtifactKind::MoveStep { tv, md } => Some((tv, md, self.dir.join(&e.file))),
+                _ => None,
+            })
+            .collect();
+        v.sort_by_key(|&(_, md, _)| md);
+        v
+    }
+
+    /// The modularity chunk artifact, if present.
+    pub fn modularity(&self) -> Option<(usize, PathBuf)> {
+        self.entries.iter().find_map(|e| match e.kind {
+            ArtifactKind::Modularity { c } => Some((c, self.dir.join(&e.file))),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(rows: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gve_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), rows).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_rows() {
+        let dir = write_manifest(
+            "a.hlo.txt\tmove_step\ttv=256 md=32\nb.hlo.txt\tmove_step\ttv=16 md=512\nq.hlo.txt\tmodularity\tc=4096\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let classes = m.tile_classes();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].1, 32); // sorted by md
+        assert_eq!(m.modularity().unwrap().0, 4096);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let dir = write_manifest("x\tbogus\t\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = std::env::temp_dir().join("gve_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

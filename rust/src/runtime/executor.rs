@@ -1,0 +1,129 @@
+//! Typed executors over the compiled artifacts.
+//!
+//! [`MoveExecutor`] owns one compiled executable per tile class plus the
+//! modularity chunk evaluator, and dispatches packed [`Tile`]s to the
+//! right executable.
+
+use super::artifacts::Manifest;
+use super::pjrt::{literal_f32, literal_i32, to_vec_f32, to_vec_i32, Executable, Runtime};
+use super::tile::Tile;
+use anyhow::{Context, Result};
+
+/// Result of one tile move step.
+#[derive(Clone, Debug)]
+pub struct TileMoves {
+    /// Per real row: (vertex, new_community, dq, accepted).
+    pub rows: Vec<(usize, u32, f32, bool)>,
+    /// Σ of accepted dq over the tile (device-reduced).
+    pub dq_total: f32,
+}
+
+/// Executor holding the compiled move-step executables + modularity.
+pub struct MoveExecutor {
+    runtime: Runtime,
+    /// `(tv, md, exe)` sorted by ascending md.
+    move_exes: Vec<(usize, usize, Executable)>,
+    modularity: Option<(usize, Executable)>,
+    /// PJRT dispatches performed (perf accounting).
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl MoveExecutor {
+    /// Compile all artifacts in the manifest.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let mut move_exes = Vec::new();
+        for (tv, md, path) in manifest.tile_classes() {
+            let exe = runtime.load_hlo_text(&path)?;
+            move_exes.push((tv, md, exe));
+        }
+        if move_exes.is_empty() {
+            anyhow::bail!("manifest has no move_step artifacts");
+        }
+        let modularity = match manifest.modularity() {
+            Some((c, path)) => Some((c, runtime.load_hlo_text(&path)?)),
+            None => None,
+        };
+        Ok(Self { runtime, move_exes, modularity, dispatches: std::cell::Cell::new(0) })
+    }
+
+    /// Discover artifacts and compile.
+    pub fn discover() -> Result<Self> {
+        Self::from_manifest(&Manifest::discover()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Tile classes available, `(tv, md)` ascending by md.
+    pub fn classes(&self) -> Vec<(usize, usize)> {
+        self.move_exes.iter().map(|&(tv, md, _)| (tv, md)).collect()
+    }
+
+    /// Run one packed tile through its executable.
+    ///
+    /// `m` — total edge weight; `pick_less` — the PL constraint flag.
+    pub fn move_step(&self, tile: &Tile, m: f64, pick_less: bool) -> Result<TileMoves> {
+        let (tv, md) = (tile.tv, tile.md);
+        let exe = &self
+            .move_exes
+            .iter()
+            .find(|&&(etv, emd, _)| etv == tv && emd == md)
+            .with_context(|| format!("no executable for tile class ({tv}, {md})"))?
+            .2;
+        let dims2 = [tv as i64, md as i64];
+        let dims1 = [tv as i64];
+        let inputs = [
+            literal_i32(&tile.nbr_comm, &dims2)?,
+            literal_f32(&tile.nbr_wt, &dims2)?,
+            literal_i32(&tile.self_comm, &dims1)?,
+            literal_f32(&tile.ktot, &dims1)?,
+            literal_f32(&tile.sigma_nbr, &dims2)?,
+            literal_f32(&tile.sigma_self, &dims1)?,
+            literal_f32(&[m as f32, if pick_less { 1.0 } else { 0.0 }], &[1, 2])?,
+        ];
+        let outs = exe.run(&inputs)?;
+        self.dispatches.set(self.dispatches.get() + 1);
+        anyhow::ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
+        let out_comm = to_vec_i32(&outs[0])?;
+        let dq = to_vec_f32(&outs[1])?;
+        let accept = to_vec_i32(&outs[2])?;
+        let dq_total = to_vec_f32(&outs[3])?[0];
+
+        let rows = tile
+            .vertices
+            .iter()
+            .enumerate()
+            .map(|(row, &v)| (v, out_comm[row] as u32, dq[row], accept[row] != 0))
+            .collect();
+        Ok(TileMoves { rows, dq_total })
+    }
+
+    /// Evaluate modularity from per-community (σ, Σ) via the device
+    /// reduction, chunked to the artifact's fixed width.
+    pub fn modularity(&self, sigma: &[f64], big_sigma: &[f64], m: f64) -> Result<f64> {
+        let (c, exe) = self.modularity.as_ref().context("no modularity artifact")?;
+        let minv = literal_f32(&[(1.0 / (2.0 * m)) as f32], &[1])?;
+        let mut q = 0f64;
+        let mut lo = 0usize;
+        while lo < sigma.len() {
+            let hi = (lo + c).min(sigma.len());
+            let mut s = vec![0f32; *c];
+            let mut b = vec![0f32; *c];
+            for i in lo..hi {
+                s[i - lo] = sigma[i] as f32;
+                b[i - lo] = big_sigma[i] as f32;
+            }
+            let outs = exe.run(&[
+                literal_f32(&s, &[*c as i64])?,
+                literal_f32(&b, &[*c as i64])?,
+                minv.clone(),
+            ])?;
+            self.dispatches.set(self.dispatches.get() + 1);
+            q += to_vec_f32(&outs[0])?[0] as f64;
+            lo = hi;
+        }
+        Ok(q)
+    }
+}

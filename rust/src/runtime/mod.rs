@@ -1,0 +1,25 @@
+//! PJRT runtime: the Rust side of the three-layer AOT bridge.
+//!
+//! `make artifacts` lowers the L2 jax graphs (which call the L1 Pallas
+//! community-scan kernel) to HLO *text*; this module loads those
+//! artifacts with the `xla` crate's PJRT CPU client and exposes them as
+//! typed executables.  Python never runs at serve time.
+//!
+//! * [`artifacts`] — manifest discovery (`artifacts/manifest.txt`);
+//! * [`pjrt`] — client + executable wrappers;
+//! * [`tile`] — packing vertices into fixed-shape `(TV, MD)` tiles
+//!   (degree-routed tile classes = the paper's thread/block kernel
+//!   partition re-expressed for a fixed-shape accelerator);
+//! * [`executor`] — typed `move_step` / `modularity_chunk` calls;
+//! * [`pjrt_louvain`] — ν-Louvain with its local-moving hot-spot
+//!   running on the real XLA executables.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+pub mod pjrt_louvain;
+pub mod tile;
+
+pub use artifacts::{ArtifactKind, Manifest};
+pub use executor::MoveExecutor;
+pub use pjrt::Runtime;

@@ -1,0 +1,142 @@
+//! ν-Louvain with its local-moving hot-spot on real XLA executables.
+//!
+//! This is the full three-layer path: the L1 Pallas community-scan
+//! kernel (lowered inside the L2 `move_step` graph) executes through
+//! PJRT for every tile, while the Rust coordinator owns Σ'/membership
+//! state, pruning, convergence, renumbering, dendrogram and the
+//! aggregation phase.  Lock-step semantics hold *within a tile* (all
+//! rows were scanned against the same state snapshot), mirroring the
+//! simulator's warp granularity — so Pick-Less is needed here too.
+
+use super::executor::MoveExecutor;
+use super::tile::TileBuilder;
+use crate::gpusim::nulouvain::{pick_less_active, NuParams};
+use crate::graph::Csr;
+use crate::louvain::aggregation::aggregate_csr;
+use crate::louvain::dendrogram;
+use crate::louvain::hashtable::TablePool;
+use crate::louvain::modularity::modularity;
+use crate::louvain::params::{LouvainParams, TableKind};
+use crate::louvain::renumber::renumber_communities;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Result of a PJRT-backed ν-Louvain run.
+#[derive(Debug, Default)]
+pub struct PjrtLouvainResult {
+    pub membership: Vec<u32>,
+    pub modularity: f64,
+    /// Modularity recomputed through the device reduction artifact
+    /// (cross-check against the host value).
+    pub modularity_device: Option<f64>,
+    pub num_communities: usize,
+    pub passes: usize,
+    pub wall_ns: u64,
+    /// PJRT dispatches (tiles + modularity chunks).
+    pub dispatches: u64,
+    /// Neighbour slots dropped by tile truncation (0 unless a vertex
+    /// exceeds the largest MD class).
+    pub truncated_slots: u64,
+}
+
+/// The PJRT-backed ν-Louvain driver.
+pub struct PjrtLouvain<'e> {
+    pub executor: &'e MoveExecutor,
+    pub params: NuParams,
+}
+
+impl<'e> PjrtLouvain<'e> {
+    pub fn new(executor: &'e MoveExecutor, params: NuParams) -> Self {
+        Self { executor, params }
+    }
+
+    pub fn run(&self, g: &Csr) -> Result<PjrtLouvainResult> {
+        let p = &self.params;
+        let t0 = Instant::now();
+        let n0 = g.num_vertices();
+        let m = g.total_weight();
+        let mut result = PjrtLouvainResult {
+            membership: (0..n0 as u32).collect(),
+            ..Default::default()
+        };
+        if n0 == 0 || m == 0.0 {
+            result.num_communities = n0;
+            return Ok(result);
+        }
+        let builder = TileBuilder::new(self.executor.classes());
+        let dispatches0 = self.executor.dispatches.get();
+        let mut owned: Option<Csr> = None;
+        let mut tau = p.tolerance;
+
+        for pass in 0..p.max_passes {
+            let gp: &Csr = owned.as_ref().unwrap_or(g);
+            let np = gp.num_vertices();
+            let k = gp.vertex_weights();
+            let mut sigma = k.clone();
+            let mut membership: Vec<u32> = (0..np as u32).collect();
+            let mut affected = vec![true; np];
+
+            let mut iterations = 0usize;
+            for li in 0..p.max_iterations {
+                let pl = pick_less_active(li, p.rho);
+                // Gather the active frontier.
+                let active: Vec<usize> = (0..np).filter(|&v| affected[v]).collect();
+                if active.is_empty() {
+                    break;
+                }
+                for &v in &active {
+                    affected[v] = false;
+                }
+                let (tiles, truncated) = builder.pack(gp, &active, &membership, &k, &sigma);
+                result.truncated_slots += truncated;
+                let mut dq_iter = 0f64;
+                for tile in &tiles {
+                    let moves = self.executor.move_step(tile, m, pl)?;
+                    // Lock-step apply: every row of the tile saw the same
+                    // snapshot; commit after the device call.
+                    for (v, c, dq, accepted) in moves.rows {
+                        if !accepted || membership[v] == c {
+                            continue;
+                        }
+                        let d = membership[v] as usize;
+                        sigma[d] -= k[v];
+                        sigma[c as usize] += k[v];
+                        membership[v] = c;
+                        dq_iter += dq as f64;
+                        for (t, _) in gp.neighbours(v) {
+                            affected[t as usize] = true;
+                        }
+                    }
+                }
+                iterations += 1;
+                if dq_iter <= tau {
+                    break;
+                }
+            }
+
+            let n_comm = renumber_communities(&mut membership);
+            let converged = iterations <= 1;
+            let low_shrink = (n_comm as f64) / (np as f64) > p.aggregation_tolerance;
+            dendrogram::lookup(&mut result.membership, &membership);
+            result.passes = pass + 1;
+            if converged || low_shrink || pass + 1 == p.max_passes {
+                break;
+            }
+            // Aggregation stays on the coordinator (CPU CSR path).
+            let pool = TablePool::new(TableKind::FarKv, n_comm, 1);
+            let lp = LouvainParams::default();
+            owned = Some(aggregate_csr(gp, &membership, n_comm, &pool, &lp).graph);
+            tau /= p.tolerance_drop;
+        }
+
+        result.num_communities = renumber_communities(&mut result.membership);
+        result.modularity = modularity(g, &result.membership);
+        // Device-side modularity cross-check (Eq. 1 through the artifact).
+        let (sigma_c, big_c) =
+            crate::louvain::modularity::community_weights(g, &result.membership);
+        result.modularity_device = self.executor.modularity(&sigma_c, &big_c, m).ok();
+        result.dispatches = self.executor.dispatches.get() - dispatches0;
+        result.wall_ns = t0.elapsed().as_nanos() as u64;
+        Ok(result)
+    }
+}

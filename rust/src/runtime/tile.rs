@@ -1,0 +1,243 @@
+//! Tile packing: fixed-shape `(TV, MD)` batches for the PJRT move step.
+//!
+//! The Pallas kernel runs on fixed shapes, so vertices are routed by
+//! degree to the smallest tile class whose `MD` fits (the
+//! thread/block-per-vertex switch of Figs 9–10 re-expressed as
+//! padding-class selection), packed `TV` at a time, and padded with
+//! `PAD` slots.  `sigma_nbr` / `sigma_self` are gathered host-side —
+//! the Σ' state lives with the Rust coordinator.
+
+use crate::graph::Csr;
+
+/// Padding community id (must match `ref.PAD` on the python side).
+pub const PAD: i32 = -1;
+
+/// One packed tile ready for the executor.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    pub tv: usize,
+    pub md: usize,
+    /// The real vertices in rows `0..vertices.len()` (rest is padding).
+    pub vertices: Vec<usize>,
+    pub nbr_comm: Vec<i32>,
+    pub nbr_wt: Vec<f32>,
+    pub self_comm: Vec<i32>,
+    pub ktot: Vec<f32>,
+    pub sigma_nbr: Vec<f32>,
+    pub sigma_self: Vec<f32>,
+}
+
+impl Tile {
+    fn empty(tv: usize, md: usize) -> Self {
+        Self {
+            tv,
+            md,
+            vertices: Vec::with_capacity(tv),
+            nbr_comm: vec![PAD; tv * md],
+            nbr_wt: vec![0.0; tv * md],
+            self_comm: vec![0; tv],
+            ktot: vec![0.0; tv],
+            sigma_nbr: vec![0.0; tv * md],
+            sigma_self: vec![0.0; tv],
+        }
+    }
+}
+
+/// Routes vertices into tile classes and packs tiles.
+pub struct TileBuilder {
+    /// `(tv, md)` classes sorted by ascending `md`.
+    pub classes: Vec<(usize, usize)>,
+}
+
+impl TileBuilder {
+    pub fn new(mut classes: Vec<(usize, usize)>) -> Self {
+        classes.sort_by_key(|&(_, md)| md);
+        assert!(!classes.is_empty(), "need at least one tile class");
+        Self { classes }
+    }
+
+    /// Class index for a vertex of degree `d` (smallest md ≥ d;
+    /// oversized vertices go to the largest class, truncated).
+    pub fn class_for_degree(&self, d: usize) -> usize {
+        for (ci, &(_, md)) in self.classes.iter().enumerate() {
+            if d <= md {
+                return ci;
+            }
+        }
+        self.classes.len() - 1
+    }
+
+    /// Pack `vertices` (with current membership/Σ state) into tiles.
+    ///
+    /// Self-loops are excluded from the slots (the kernel's move-scan
+    /// contract); degrees beyond the largest `MD` are truncated with a
+    /// count returned in `truncated`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        &self,
+        g: &Csr,
+        vertices: &[usize],
+        membership: &[u32],
+        ktot: &[f64],
+        sigma: &[f64],
+    ) -> (Vec<Tile>, u64) {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.classes.len()];
+        for &v in vertices {
+            if g.degree(v) == 0 {
+                continue;
+            }
+            buckets[self.class_for_degree(g.degree(v))].push(v);
+        }
+        let mut tiles = Vec::new();
+        let mut truncated = 0u64;
+        for (ci, bucket) in buckets.iter().enumerate() {
+            let (tv, md) = self.classes[ci];
+            for group in bucket.chunks(tv) {
+                let mut tile = Tile::empty(tv, md);
+                for (row, &v) in group.iter().enumerate() {
+                    tile.vertices.push(v);
+                    tile.self_comm[row] = membership[v] as i32;
+                    tile.ktot[row] = ktot[v] as f32;
+                    tile.sigma_self[row] = sigma[membership[v] as usize] as f32;
+                    let (ts, ws) = g.edges(v);
+                    let mut slot = 0usize;
+                    for (t, w) in ts.iter().zip(ws) {
+                        if *t as usize == v {
+                            continue; // self-loop excluded from move scan
+                        }
+                        if slot >= md {
+                            truncated += 1;
+                            break;
+                        }
+                        let c = membership[*t as usize];
+                        tile.nbr_comm[row * md + slot] = c as i32;
+                        tile.nbr_wt[row * md + slot] = *w;
+                        tile.sigma_nbr[row * md + slot] = sigma[c as usize] as f32;
+                        slot += 1;
+                    }
+                }
+                tiles.push(tile);
+            }
+        }
+        (tiles, truncated)
+    }
+
+    /// Padding efficiency of a packing: real rows / total rows.
+    pub fn occupancy(tiles: &[Tile]) -> f64 {
+        let real: usize = tiles.iter().map(|t| t.vertices.len()).sum();
+        let total: usize = tiles.iter().map(|t| t.tv).sum();
+        if total == 0 {
+            0.0
+        } else {
+            real as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    fn builder() -> TileBuilder {
+        TileBuilder::new(vec![(256, 32), (64, 128), (16, 512)])
+    }
+
+    #[test]
+    fn class_routing_by_degree() {
+        let b = builder();
+        assert_eq!(b.class_for_degree(1), 0);
+        assert_eq!(b.class_for_degree(32), 0);
+        assert_eq!(b.class_for_degree(33), 1);
+        assert_eq!(b.class_for_degree(128), 1);
+        assert_eq!(b.class_for_degree(129), 2);
+        assert_eq!(b.class_for_degree(10_000), 2); // truncates
+    }
+
+    #[test]
+    fn pack_simple_graph() {
+        let g = GraphBuilder::new(4)
+            .edge(0, 1, 1.0)
+            .edge(1, 2, 2.0)
+            .edge(2, 3, 1.0)
+            .build_undirected();
+        let b = builder();
+        let memb: Vec<u32> = (0..4).collect();
+        let k = g.vertex_weights();
+        let sigma = k.clone();
+        let (tiles, trunc) = b.pack(&g, &[0, 1, 2, 3], &memb, &k, &sigma);
+        assert_eq!(trunc, 0);
+        assert_eq!(tiles.len(), 1);
+        let t = &tiles[0];
+        assert_eq!(t.vertices, vec![0, 1, 2, 3]);
+        assert_eq!((t.tv, t.md), (256, 32));
+        // Row 1 = vertex 1: neighbours 0 (w1) and 2 (w2).
+        assert_eq!(t.nbr_comm[1 * 32], 0);
+        assert_eq!(t.nbr_wt[1 * 32], 1.0);
+        assert_eq!(t.nbr_comm[1 * 32 + 1], 2);
+        assert_eq!(t.nbr_wt[1 * 32 + 1], 2.0);
+        assert_eq!(t.nbr_comm[1 * 32 + 2], PAD);
+        assert_eq!(t.ktot[1], 3.0);
+    }
+
+    #[test]
+    fn self_loops_excluded() {
+        let g = GraphBuilder::new(2).edge(0, 0, 5.0).edge(0, 1, 1.0).build_undirected();
+        let b = builder();
+        let memb: Vec<u32> = vec![0, 1];
+        let k = g.vertex_weights();
+        let sigma = k.clone();
+        let (tiles, _) = b.pack(&g, &[0], &memb, &k, &sigma);
+        let t = &tiles[0];
+        assert_eq!(t.nbr_comm[0], 1); // only the real neighbour
+        assert_eq!(t.nbr_comm[1], PAD);
+        assert_eq!(t.ktot[0], 6.0); // K includes the self-loop weight
+    }
+
+    #[test]
+    fn pack_routes_realistic_graph_to_multiple_classes() {
+        let g = generate(GraphFamily::Web, 11, 3);
+        let b = builder();
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n as u32).collect();
+        let k = g.vertex_weights();
+        let sigma = k.clone();
+        let all: Vec<usize> = (0..n).collect();
+        let (tiles, _trunc) = b.pack(&g, &all, &memb, &k, &sigma);
+        let mds: std::collections::BTreeSet<usize> = tiles.iter().map(|t| t.md).collect();
+        assert!(mds.len() >= 2, "web graph should hit several classes: {mds:?}");
+        let packed: usize = tiles.iter().map(|t| t.vertices.len()).sum();
+        let isolated = (0..n).filter(|&v| g.degree(v) == 0).count();
+        assert_eq!(packed, n - isolated);
+        assert!(TileBuilder::occupancy(&tiles) > 0.2);
+    }
+
+    #[test]
+    fn sigma_gather_is_consistent() {
+        let g = generate(GraphFamily::Road, 8, 5);
+        let b = builder();
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n as u32).map(|v| v % 7).collect();
+        let k = g.vertex_weights();
+        let mut sigma = vec![0f64; n];
+        for v in 0..n {
+            sigma[memb[v] as usize] += k[v];
+        }
+        let all: Vec<usize> = (0..n).collect();
+        let (tiles, _) = b.pack(&g, &all, &memb, &k, &sigma);
+        for t in &tiles {
+            for (row, &v) in t.vertices.iter().enumerate() {
+                assert_eq!(t.self_comm[row], memb[v] as i32);
+                assert!((t.sigma_self[row] as f64 - sigma[memb[v] as usize]).abs() < 1e-3);
+                for slot in 0..t.md {
+                    let c = t.nbr_comm[row * t.md + slot];
+                    if c == PAD {
+                        break;
+                    }
+                    assert!((t.sigma_nbr[row * t.md + slot] as f64 - sigma[c as usize]).abs() < 1e-3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! GPU simulator vs CPU implementation cross-checks: the two paths
+//! implement the same mathematics through different execution models,
+//! so quality and aggregation structure must agree.
+
+use gve_louvain::gpusim::hashtable::{PerVertexTables, ProbeStrategy, TableRegion, ValueKind};
+use gve_louvain::gpusim::kernels::aggregate as gpu_aggregate;
+use gve_louvain::gpusim::{NuLouvain, NuParams};
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::aggregation::aggregate_csr;
+use gve_louvain::louvain::hashtable::TablePool;
+use gve_louvain::louvain::params::{LouvainParams, TableKind};
+use gve_louvain::louvain::renumber::renumber_communities;
+use gve_louvain::louvain::{gve::GveLouvain};
+use gve_louvain::prop::{forall, Gen};
+
+#[test]
+fn aggregation_identical_across_execution_models() {
+    forall("gpu-vs-cpu-aggregate", 30, |g: &mut Gen| {
+        let fam = *g.pick(&GraphFamily::ALL);
+        let graph = generate(fam, 8, g.u64(0, 1 << 40));
+        let n = graph.num_vertices();
+        let mut memb = g.membership(n, 24);
+        let nc = renumber_communities(&mut memb);
+        // CPU path.
+        let pool = TablePool::new(TableKind::FarKv, nc.max(1), 1);
+        let cpu = aggregate_csr(&graph, &memb, nc, &pool, &LouvainParams::default()).graph;
+        // GPU path (f64 values to match CPU numerics).
+        let mut tables = PerVertexTables::new(
+            graph.num_edges().max(1),
+            ValueKind::F64,
+            ProbeStrategy::QuadraticDouble,
+        );
+        let gpu = gpu_aggregate(&graph, &memb, nc, &mut tables, &NuParams::default()).graph;
+        assert_eq!(cpu.offsets, gpu.offsets, "{fam:?}");
+        assert_eq!(cpu.targets, gpu.targets, "{fam:?}");
+        for (a, b) in cpu.weights.iter().zip(&gpu.weights) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{fam:?}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn nu_and_gve_quality_within_one_percentish() {
+    // Paper Fig 13c: ν-Louvain averages 0.5% lower modularity.
+    let mut diffs = Vec::new();
+    for f in GraphFamily::ALL {
+        let g = generate(f, 10, 21);
+        let gve = GveLouvain::new(LouvainParams::default()).run(&g);
+        let nu = NuLouvain::new(NuParams::default()).run(&g);
+        let rel = (gve.modularity - nu.modularity) / gve.modularity.max(1e-9);
+        diffs.push(rel);
+        assert!(rel < 0.12, "{f:?}: gve={} nu={}", gve.modularity, nu.modularity);
+    }
+    let mean = diffs.iter().sum::<f64>() / diffs.len() as f64;
+    assert!(mean.abs() < 0.06, "mean relative gap {mean}");
+}
+
+#[test]
+fn probe_strategy_does_not_change_results_only_probes() {
+    let g = generate(GraphFamily::Social, 9, 23);
+    let mut base: Option<Vec<u32>> = None;
+    for s in ProbeStrategy::ALL {
+        let out = NuLouvain::new(NuParams { probe: s, ..Default::default() }).run(&g);
+        match &base {
+            None => base = Some(out.membership),
+            Some(b) => assert_eq!(
+                &out.membership, b,
+                "{s:?}: probe strategy changed communities"
+            ),
+        }
+    }
+}
+
+#[test]
+fn probe_costs_rank_as_fig7_expects() {
+    // Collision-heavy synthetic access pattern: linear probing must pay
+    // the most probes, the hybrid the least-or-equal.
+    let mut totals = std::collections::BTreeMap::new();
+    for s in ProbeStrategy::ALL {
+        let mut t = PerVertexTables::new(4096, ValueKind::F32, s);
+        let r = TableRegion::for_vertex(0, 1024); // p1 = 2047
+        let mut total = 0u64;
+        // Keys engineered to collide heavily at slots near 0.
+        for k in 0..700u32 {
+            total += t.accumulate(r, k * 2047 + (k % 5), 1.0).probes as u64;
+        }
+        totals.insert(s.name(), total);
+    }
+    assert!(
+        totals["linear"] >= totals["quadratic-double"],
+        "linear {} < hybrid {}",
+        totals["linear"],
+        totals["quadratic-double"]
+    );
+}
+
+#[test]
+fn f32_tables_cheaper_quality_equal() {
+    let g = generate(GraphFamily::Web, 10, 27);
+    let f32_run = NuLouvain::new(NuParams { values: ValueKind::F32, ..Default::default() }).run(&g);
+    let f64_run = NuLouvain::new(NuParams { values: ValueKind::F64, ..Default::default() }).run(&g);
+    assert!((f32_run.modularity - f64_run.modularity).abs() < 0.02);
+}
+
+#[test]
+fn occupancy_collapse_grows_with_pass_depth_on_sparse_families() {
+    // Road/k-mer graphs run many passes; occupancy in the last pass must
+    // be a small fraction of the first (the paper's §5.2.3 explanation).
+    for f in [GraphFamily::Road, GraphFamily::Kmer] {
+        let g = generate(f, 12, 29);
+        let out = NuLouvain::new(NuParams::default()).run(&g);
+        if out.passes < 2 {
+            continue;
+        }
+        let first = out.pass_stats.first().unwrap().occupancy;
+        let last = out.pass_stats.last().unwrap().occupancy;
+        assert!(
+            last < first * 0.9 + 1e-12,
+            "{f:?}: occupancy did not collapse ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn gpu_memory_model_scales_with_graph() {
+    use gve_louvain::gpusim::DeviceModel;
+    let d = DeviceModel::default();
+    let small = d.nu_louvain_bytes(1 << 10, 1 << 14);
+    let large = d.nu_louvain_bytes(1 << 20, 1 << 24);
+    assert!(large > small * 500);
+    assert!(d.nu_louvain_fits(1 << 20, 1 << 24));
+}

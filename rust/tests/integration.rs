@@ -1,0 +1,134 @@
+//! Cross-module integration tests: generators → IO → Louvain →
+//! aggregation → reports, plus the config-driven runner.
+
+use gve_louvain::baselines::System;
+use gve_louvain::coordinator::config::Config;
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::coordinator::runner::{compare_on_entry, mean_speedup};
+use gve_louvain::coordinator::suite;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::io;
+use gve_louvain::louvain::modularity::modularity;
+use gve_louvain::louvain::{gve::GveLouvain, LouvainParams};
+
+#[test]
+fn full_pipeline_generate_persist_reload_cluster() {
+    let dir = std::env::temp_dir().join("gve_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    for f in GraphFamily::ALL {
+        let g = generate(f, 9, 7);
+        let path = dir.join(format!("{}.bin", f.name()));
+        io::write_binary(&g, &path).unwrap();
+        let g2 = io::read_binary(&path).unwrap();
+        assert_eq!(g, g2);
+        let out = GveLouvain::new(LouvainParams::default()).run(&g2);
+        // Membership must be a valid dense clustering of the input.
+        assert_eq!(out.membership.len(), g.num_vertices());
+        let q = modularity(&g, &out.membership);
+        assert!((q - out.modularity).abs() < 1e-12);
+        assert!(q > 0.3, "{f:?}: q={q}");
+    }
+}
+
+#[test]
+fn suite_runs_all_entries_at_small_scale() {
+    for entry in &suite::SUITE {
+        let g = entry.graph(-4, 11);
+        g.validate().unwrap();
+        let out = GveLouvain::new(LouvainParams::default()).run(&g);
+        assert!(out.modularity > 0.2, "{}: q={}", entry.name, out.modularity);
+        assert!(out.passes >= 1);
+    }
+}
+
+#[test]
+fn mtx_round_trip_preserves_clustering() {
+    let g = generate(GraphFamily::Web, 9, 13);
+    let dir = std::env::temp_dir().join("gve_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("web.mtx");
+    io::write_matrix_market(&g, &path).unwrap();
+    let g2 = io::read_matrix_market(&path).unwrap();
+    let q1 = GveLouvain::new(LouvainParams::default()).run(&g).modularity;
+    let q2 = GveLouvain::new(LouvainParams::default()).run(&g2).modularity;
+    assert!((q1 - q2).abs() < 0.03, "q1={q1} q2={q2}");
+}
+
+#[test]
+fn runner_comparison_and_speedups() {
+    let entry = suite::find("com-Orkut").unwrap();
+    let systems = [System::GveLouvain, System::Grappolo];
+    let cells = compare_on_entry(entry, -3, &systems, 1, 2, 42);
+    assert_eq!(cells.len(), 2);
+    assert!(mean_speedup(&cells, System::GveLouvain, System::Grappolo).is_some());
+    // Render as a report table (arity checks).
+    let mut t = Table::new("integration", &["graph", "system", "q"]);
+    for c in &cells {
+        t.row(vec![c.graph.into(), c.system.name().into(), format!("{:.3}", c.modularity)]);
+    }
+    assert!(t.render().contains("com-Orkut"));
+}
+
+#[test]
+fn config_file_drives_runner() {
+    let cfg = Config::parse(
+        r#"
+name = "it"
+[run]
+systems = ["gve-louvain"]
+graphs = "asia_osm"
+offset = -4
+"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.get_str("run", "graphs", ""), "asia_osm");
+    let entry = suite::find(&cfg.get_str("run", "graphs", "")).unwrap();
+    let cells = compare_on_entry(
+        entry,
+        cfg.get_int("run", "offset", 0) as i32,
+        &[System::GveLouvain],
+        1,
+        1,
+        42,
+    );
+    assert_eq!(cells.len(), 1);
+    assert!(cells[0].modularity > 0.5);
+}
+
+#[test]
+fn repeated_runs_are_deterministic_end_to_end() {
+    let entry = suite::find("uk-2002").unwrap();
+    let g1 = entry.graph(-4, 42);
+    let g2 = entry.graph(-4, 42);
+    assert_eq!(g1, g2);
+    let a = GveLouvain::new(LouvainParams::default()).run(&g1);
+    let b = GveLouvain::new(LouvainParams::default()).run(&g2);
+    assert_eq!(a.membership, b.membership);
+}
+
+#[test]
+fn family_phase_split_shapes_match_fig14() {
+    // Web graphs: local-moving dominates; the first pass carries the
+    // bulk of the time (paper: 67% on average, driven by the high-degree
+    // families).
+    let g = generate(GraphFamily::Web, 12, 3);
+    let out = GveLouvain::new(LouvainParams::default()).run(&g);
+    let (mv, ag, _) = out.phase_split();
+    assert!(mv > ag, "web: local-moving should dominate ({mv:.2} vs {ag:.2})");
+    assert!(out.first_pass_fraction() > 0.5, "web: first pass should dominate");
+}
+
+#[test]
+fn dendrogram_membership_is_consistent_with_pass_counts() {
+    let g = generate(GraphFamily::Road, 11, 5);
+    let out = GveLouvain::new(LouvainParams::default()).run(&g);
+    // Every community id in range, community count consistent.
+    let max = *out.membership.iter().max().unwrap() as usize;
+    assert_eq!(max + 1, out.num_communities);
+    // Communities shrink monotonically across passes.
+    let mut prev = usize::MAX;
+    for p in &out.pass_stats {
+        assert!(p.communities <= prev);
+        prev = p.communities;
+    }
+}

@@ -1,0 +1,204 @@
+//! Property-based tests on the crate's core invariants, via the
+//! in-tree `prop` framework (proptest is unavailable offline).
+
+use gve_louvain::graph::builder::GraphBuilder;
+use gve_louvain::graph::generators::{planted_partition, PlantedPartition};
+use gve_louvain::louvain::aggregation::aggregate_csr;
+use gve_louvain::louvain::dendrogram;
+use gve_louvain::louvain::hashtable::TablePool;
+use gve_louvain::louvain::modularity::{community_weights, delta_modularity, modularity};
+use gve_louvain::louvain::params::{LouvainParams, TableKind};
+use gve_louvain::louvain::renumber::{count_communities, renumber_communities};
+use gve_louvain::parallel::scan::{exclusive_scan, exclusive_scan_serial};
+use gve_louvain::prop::{forall, Gen};
+
+/// Random small undirected graph.
+fn random_graph(g: &mut Gen) -> gve_louvain::graph::Csr {
+    let n = g.usize(2, 120);
+    let edges = g.usize(1, 400);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..edges {
+        let u = g.usize(0, n - 1) as u32;
+        let v = g.usize(0, n - 1) as u32;
+        b.push(u, v, g.f64(0.25, 4.0) as f32);
+    }
+    b.build_undirected()
+}
+
+#[test]
+fn prop_renumber_is_idempotent_and_dense() {
+    forall("renumber-idempotent", 200, |g| {
+        let n = g.usize(1, 200);
+        let mut m = g.membership(n, 50);
+        let n1 = renumber_communities(&mut m);
+        assert_eq!(n1, count_communities(&m));
+        let snapshot = m.clone();
+        let n2 = renumber_communities(&mut m);
+        assert_eq!(n1, n2);
+        assert_eq!(m, snapshot, "renumbering dense ids must be identity");
+        if !m.is_empty() {
+            assert_eq!(*m.iter().max().unwrap() as usize + 1, n1);
+        }
+    });
+}
+
+#[test]
+fn prop_modularity_in_valid_range() {
+    forall("modularity-range", 100, |g| {
+        let graph = random_graph(g);
+        let memb = {
+            let mut m = g.membership(graph.num_vertices(), 20);
+            renumber_communities(&mut m);
+            m
+        };
+        let q = modularity(&graph, &memb);
+        assert!((-0.5 - 1e-9..=1.0 + 1e-9).contains(&q), "q={q}");
+    });
+}
+
+#[test]
+fn prop_delta_modularity_matches_recompute() {
+    forall("dq-recompute", 100, |g| {
+        let graph = random_graph(g);
+        let n = graph.num_vertices();
+        let mut memb = g.membership(n, 8);
+        renumber_communities(&mut memb);
+        let m = graph.total_weight();
+        if m == 0.0 {
+            return;
+        }
+        let (_, big) = community_weights(&graph, &memb);
+        let i = g.usize(0, n - 1);
+        let d = memb[i] as usize;
+        // Candidate community from a random neighbour (or skip).
+        let (ts, _) = graph.edges(i);
+        if ts.is_empty() {
+            return;
+        }
+        let c = memb[ts[g.usize(0, ts.len() - 1)] as usize] as usize;
+        if c == d {
+            return;
+        }
+        let mut k_to = vec![0f64; big.len()];
+        for (t, w) in graph.neighbours(i) {
+            if t as usize != i {
+                k_to[memb[t as usize] as usize] += w as f64;
+            }
+        }
+        let k_i = graph.vertex_weight(i);
+        let dq = delta_modularity(k_to[c], k_to[d], k_i, big[c], big[d], m);
+        let q0 = modularity(&graph, &memb);
+        memb[i] = c as u32;
+        let q1 = modularity(&graph, &memb);
+        assert!(
+            (q1 - q0 - dq).abs() < 1e-7,
+            "Eq.2 violated: q0={q0} q1={q1} dq={dq} (seed {:#x})",
+            g.case_seed
+        );
+    });
+}
+
+#[test]
+fn prop_aggregation_preserves_total_weight_and_symmetry() {
+    forall("aggregation-weight", 60, |g| {
+        let graph = random_graph(g);
+        let n = graph.num_vertices();
+        let mut memb = g.membership(n, 12);
+        let nc = renumber_communities(&mut memb);
+        let pool = TablePool::new(TableKind::FarKv, nc.max(1), 1);
+        let out = aggregate_csr(&graph, &memb, nc, &pool, &LouvainParams::default());
+        let (gw, sw) = (graph.total_weight(), out.graph.total_weight());
+        assert!((gw - sw).abs() <= 1e-5 * (1.0 + gw), "m not preserved: {gw} vs {sw}");
+        assert!(out.graph.is_symmetric());
+        assert_eq!(out.graph.num_vertices(), nc);
+    });
+}
+
+#[test]
+fn prop_aggregated_modularity_is_preserved_under_identity() {
+    // Q of the partition on G equals Q of singletons on the aggregated
+    // graph (the fundamental Louvain invariant that makes passes
+    // composable).
+    forall("aggregate-q-invariant", 60, |g| {
+        let graph = random_graph(g);
+        let n = graph.num_vertices();
+        let mut memb = g.membership(n, 10);
+        let nc = renumber_communities(&mut memb);
+        if graph.total_weight() == 0.0 {
+            return;
+        }
+        let pool = TablePool::new(TableKind::FarKv, nc.max(1), 1);
+        let sg = aggregate_csr(&graph, &memb, nc, &pool, &LouvainParams::default()).graph;
+        let q_orig = modularity(&graph, &memb);
+        let singleton: Vec<u32> = (0..nc as u32).collect();
+        let q_super = modularity(&sg, &singleton);
+        assert!(
+            (q_orig - q_super).abs() < 1e-6,
+            "invariant violated: {q_orig} vs {q_super} (seed {:#x})",
+            g.case_seed
+        );
+    });
+}
+
+#[test]
+fn prop_dendrogram_flatten_equals_stepwise() {
+    forall("dendrogram-flatten", 150, |g| {
+        let n = g.usize(1, 100);
+        let mut levels = Vec::new();
+        let mut size = n;
+        for _ in 0..g.usize(1, 4) {
+            let next = g.usize(1, size);
+            levels.push(g.vec(size, |g| g.usize(0, next - 1) as u32));
+            size = next;
+        }
+        let flat = dendrogram::flatten(&levels);
+        let mut manual = levels[0].clone();
+        for l in &levels[1..] {
+            dendrogram::lookup(&mut manual, l);
+        }
+        assert_eq!(flat, manual);
+    });
+}
+
+#[test]
+fn prop_parallel_scan_matches_serial() {
+    forall("scan-parallel", 60, |g| {
+        let n = g.usize(0, 40_000);
+        let base = g.vec(n, |g| g.usize(0, 9));
+        let mut a = base.clone();
+        let mut b = base;
+        let ta = exclusive_scan_serial(&mut a);
+        let tb = exclusive_scan(&mut b, g.usize(1, 8));
+        assert_eq!(ta, tb);
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_gve_louvain_never_lowers_modularity_vs_singletons() {
+    forall("gve-vs-singletons", 25, |g| {
+        let p = PlantedPartition {
+            n: g.usize(32, 512),
+            n_communities: g.usize(2, 16),
+            avg_degree: g.f64(2.0, 16.0),
+            mixing: g.f64(0.0, 0.6),
+            degree_exponent: g.f64(2.0, 3.0),
+            max_degree: 64,
+            community_size_exponent: 1.1,
+            seed: g.u64(0, u64::MAX / 2),
+        };
+        let graph = planted_partition(&p);
+        if graph.total_weight() == 0.0 {
+            return;
+        }
+        let out = gve_louvain::louvain::gve::GveLouvain::new(LouvainParams::default()).run(&graph);
+        let singletons: Vec<u32> = (0..graph.num_vertices() as u32).collect();
+        let q0 = modularity(&graph, &singletons);
+        assert!(
+            out.modularity >= q0 - 1e-9,
+            "worse than singletons: {} < {q0} (seed {:#x})",
+            out.modularity,
+            g.case_seed
+        );
+    });
+}
