@@ -9,12 +9,13 @@
 use super::common::{cpu_modeled_ns, greedy_coloring, sync_sweep};
 use super::{BaselineOutcome, System};
 use crate::graph::Csr;
-use crate::louvain::aggregation::aggregate_csr;
+use crate::louvain::aggregation::{aggregate_csr_with, AggScratch};
 use crate::louvain::dendrogram;
 use crate::louvain::hashtable::TablePool;
 use crate::louvain::modularity::modularity;
 use crate::louvain::params::{LouvainParams, TableKind};
 use crate::louvain::renumber::renumber_communities;
+use crate::parallel::team::Exec;
 use std::time::Instant;
 
 const MAX_PASSES: usize = 10;
@@ -28,6 +29,10 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
     let mut owned: Option<Csr> = None;
     let mut passes = 0usize;
     let mut tau = 1e-2; // threshold scaling start
+    // Aggregation pool + scratch hoisted out of the pass loop and
+    // reused (the pass-workspace contract).
+    let mut agg_pool: Option<TablePool> = None;
+    let mut agg_scratch = AggScratch::new();
 
     for _pass in 0..MAX_PASSES {
         let gp: &Csr = owned.as_ref().unwrap_or(g);
@@ -57,9 +62,12 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
         if sweeps <= 1 || n_comm == np {
             break;
         }
-        let pool = TablePool::new(TableKind::Map, n_comm, 1);
+        let pool = TablePool::ensure(&mut agg_pool, TableKind::Map, n_comm, 1);
         let params = LouvainParams { table: TableKind::Map, threads: 1, ..Default::default() };
-        owned = Some(aggregate_csr(gp, &membership, n_comm, &pool, &params).graph);
+        owned = Some(
+            aggregate_csr_with(gp, &membership, n_comm, pool, &params, Exec::scoped(), &mut agg_scratch)
+                .graph,
+        );
         tau /= 10.0; // threshold scaling
     }
 

@@ -10,12 +10,13 @@
 use super::common::cpu_modeled_ns;
 use super::{BaselineOutcome, System};
 use crate::graph::Csr;
-use crate::louvain::aggregation::aggregate_csr;
+use crate::louvain::aggregation::{aggregate_csr_with, AggScratch};
 use crate::louvain::dendrogram;
 use crate::louvain::hashtable::TablePool;
 use crate::louvain::modularity::modularity;
 use crate::louvain::params::{LouvainParams, TableKind};
 use crate::louvain::renumber::renumber_communities;
+use crate::parallel::team::Exec;
 use std::time::Instant;
 
 const MAX_PASSES: usize = 10;
@@ -41,6 +42,12 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
     let mut owned: Option<Csr> = None;
     let mut passes = 0usize;
     let mut sweeps_total = 0u64;
+    // Aggregation resources hoisted out of the pass loop: the pool and
+    // scratch are sized by the first aggregation and reused afterwards
+    // (the pass-workspace contract; Vite itself keeps per-rank buffers
+    // alive across passes too).
+    let mut agg_pool: Option<TablePool> = None;
+    let mut agg_scratch = AggScratch::new();
 
     for _pass in 0..MAX_PASSES {
         let gp: &Csr = owned.as_ref().unwrap_or(g);
@@ -81,9 +88,12 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
         let _ = pass_dq;
         // Vite's aggregation is map-based; reuse the CSR path with the
         // slow Map tables to retain the signature's cost profile.
-        let pool = TablePool::new(TableKind::Map, n_comm, 1);
+        let pool = TablePool::ensure(&mut agg_pool, TableKind::Map, n_comm, 1);
         let params = LouvainParams { table: TableKind::Map, threads: 1, ..Default::default() };
-        owned = Some(aggregate_csr(gp, &membership, n_comm, &pool, &params).graph);
+        owned = Some(
+            aggregate_csr_with(gp, &membership, n_comm, pool, &params, Exec::scoped(), &mut agg_scratch)
+                .graph,
+        );
     }
 
     let wall = t0.elapsed().as_nanos() as u64;

@@ -1,0 +1,146 @@
+//! `bench_smoke` — the PR-1 perf-trajectory seed runner.
+//!
+//! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
+//! threads (warmup + repeats, median) and writes a `BENCH_PR1.json`
+//! with edges/sec per cell — the fixed yardstick future PRs compare
+//! against.  Hand-rolled JSON (the offline registry has no serde).
+//!
+//! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
+//! cargo alias):
+//!
+//! ```text
+//! bench_smoke [OUT.json]          # default BENCH_PR1.json
+//! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
+//! GVE_BENCH_REPEATS=5 bench_smoke
+//! ```
+//!
+//! To compare against a pre-change baseline, run the *same* binary on
+//! the baseline commit with a different output path and diff the
+//! `edges_per_sec` fields:
+//!
+//! ```text
+//! git stash && cargo bench-smoke BENCH_PR1_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR1.json
+//! ```
+
+use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::metrics::{edges_per_sec, median};
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Base scale before `GVE_BENCH_SCALE` shifting (2^13 vertices).
+const BASE_SCALE: i32 = 13;
+const THREADS: [usize; 2] = [1, 4];
+
+struct Cell {
+    family: &'static str,
+    threads: usize,
+    vertices: usize,
+    edges: usize,
+    median_ns: u64,
+    edges_per_sec: f64,
+    modularity: f64,
+    passes: usize,
+    spawned_workers: usize,
+}
+
+/// Median via the crate-wide convention (`coordinator::metrics`), so
+/// `BENCH_PR1.json` uses the same statistic as every other bench figure.
+fn median_ns(samples: &[u64]) -> u64 {
+    median(&samples.iter().map(|&x| x as f64).collect::<Vec<_>>()) as u64
+}
+
+fn main() {
+    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR1.json".into());
+    let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
+    let seed = bench_seed();
+    let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+        .max(1);
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for family in GraphFamily::ALL {
+        let g = generate(family, scale, seed);
+        for threads in THREADS {
+            // One algorithm object per cell: the persistent team and
+            // the pass workspace are reused across warmup + repeats,
+            // exactly like a long-lived service would run it.
+            let algo = GveLouvain::new(LouvainParams::with_threads(threads));
+            let _ = algo.run(&g); // warmup (also builds the workspace)
+            let mut samples = Vec::with_capacity(repeats);
+            let mut quality = 0.0;
+            let mut passes = 0;
+            for _ in 0..repeats {
+                let t0 = Instant::now();
+                let out = algo.run(&g);
+                samples.push(t0.elapsed().as_nanos() as u64);
+                quality = out.modularity;
+                passes = out.passes;
+            }
+            let med = median_ns(&samples);
+            let cell = Cell {
+                family: family.name(),
+                threads,
+                vertices: g.num_vertices(),
+                edges: g.num_edges(),
+                median_ns: med,
+                edges_per_sec: edges_per_sec(g.num_edges(), med),
+                modularity: quality,
+                passes,
+                spawned_workers: algo.spawned_workers(),
+            };
+            eprintln!(
+                "{:>8} t={} |V|={:>7} |E|={:>8} {:>12} ns  {:>10.0} e/s  Q={:.4}  spawns={}",
+                cell.family,
+                cell.threads,
+                cell.vertices,
+                cell.edges,
+                cell.median_ns,
+                cell.edges_per_sec,
+                cell.modularity,
+                cell.spawned_workers,
+            );
+            cells.push(cell);
+        }
+    }
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr1_smoke\",");
+    let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
+    let _ = writeln!(json, "  \"scale\": {scale},");
+    let _ = writeln!(json, "  \"seed\": {seed},");
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, c) in cells.iter().enumerate() {
+        let comma = if i + 1 < cells.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"family\": \"{}\", \"threads\": {}, \"vertices\": {}, \"edges\": {}, \
+             \"median_ns\": {}, \"edges_per_sec\": {:.1}, \"modularity\": {:.6}, \
+             \"passes\": {}, \"spawned_workers\": {}}}{}",
+            c.family,
+            c.threads,
+            c.vertices,
+            c.edges,
+            c.median_ns,
+            c.edges_per_sec,
+            c.modularity,
+            c.passes,
+            c.spawned_workers,
+            comma
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| {
+        eprintln!("error: cannot write {out_path}: {e}");
+        std::process::exit(1);
+    });
+    println!("{json}");
+    eprintln!("wrote {out_path}");
+}

@@ -9,6 +9,9 @@
 //!   edge/weight arrays have gaps; `compact()` squeezes it into a
 //!   [`Csr`]).
 
+use crate::parallel::pool::{ParallelOpts, RawSend, WorkStats};
+use crate::parallel::scan::exclusive_scan_exec;
+use crate::parallel::team::Exec;
 use crate::{EdgeWeight, VertexId};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -61,6 +64,34 @@ impl Csr {
     /// `K_v` for every vertex.
     pub fn vertex_weights(&self) -> Vec<f64> {
         (0..self.num_vertices()).map(|v| self.vertex_weight(v)).collect()
+    }
+
+    /// `K_v` for every vertex, computed in parallel chunks into `out`
+    /// (resized in place, so a workspace-owned buffer is reused without
+    /// reallocating).  This is the K'-init hot path of Algorithm 1
+    /// line 4; the returned stats feed the Fig 16 scaling replay.
+    pub fn vertex_weights_into(&self, out: &mut Vec<f64>, opts: ParallelOpts, exec: Exec) -> WorkStats {
+        let n = self.num_vertices();
+        // No clear(): every index of 0..n is written by the loop below
+        // (disjoint exact cover), so only growth needs the zero-fill.
+        out.resize(n, 0.0);
+        exec.run_disjoint_mut(out, opts, |r, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = self.vertex_weight(r.start + k);
+            }
+        })
+    }
+
+    /// Convenience wrapper over [`Self::vertex_weights_into`] for
+    /// callers with a thread count but no persistent team.
+    pub fn vertex_weights_par(&self, threads: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.vertex_weights_into(
+            &mut out,
+            ParallelOpts { threads, ..ParallelOpts::default() },
+            Exec::scoped(),
+        );
+        out
     }
 
     /// Total edge weight `m = Σ_ij w_ij / 2` (self-loops count once per
@@ -196,24 +227,72 @@ impl HoleyCsr {
         (&self.targets[lo..hi], &self.weights[lo..hi])
     }
 
-    /// Squeeze out the holes into an immutable [`Csr`].
+    /// Reuse this holey CSR's storage for a new shape: swap in
+    /// `offsets` (already exclusive-scanned; the old offsets vector is
+    /// handed back through the argument so the caller's scratch keeps
+    /// its capacity), reset every fill cursor and logically shrink the
+    /// slot arrays.  Nothing is reallocated when the new capacity fits
+    /// the old one — the zero-allocation pass-workspace contract.
+    pub fn reset_with_offsets(&mut self, offsets: &mut Vec<usize>) {
+        std::mem::swap(&mut self.offsets, offsets);
+        let cap = *self.offsets.last().unwrap_or(&0);
+        let n = self.offsets.len().saturating_sub(1);
+        self.fill.clear();
+        self.fill.resize_with(n, || AtomicUsize::new(0));
+        // No clear() on the slot arrays: readers only ever see
+        // [offsets[v], offsets[v] + fill[v]), and every slot in that
+        // range is freshly written by push_edge — zeroing all `cap`
+        // slots here would be a dead O(|E'|) memset per pass.
+        self.targets.resize(cap, 0);
+        self.weights.resize(cap, 0.0);
+    }
+
+    /// Squeeze out the holes into an immutable [`Csr`] (single thread).
     pub fn compact(&self) -> Csr {
+        self.compact_with(ParallelOpts::default(), Exec::scoped()).0
+    }
+
+    /// Parallel compaction: prefix-sum over the *used* degrees, then a
+    /// chunked row copy (disjoint target regions per vertex chunk).
+    /// The paper's aggregation is parallel end to end; the stats feed
+    /// the scaling replay.
+    pub fn compact_with(&self, opts: ParallelOpts, exec: Exec) -> (Csr, WorkStats) {
         let n = self.num_vertices();
-        let mut offsets = Vec::with_capacity(n + 1);
-        offsets.push(0usize);
-        let mut total = 0usize;
-        for v in 0..n {
-            total += self.degree(v);
-            offsets.push(total);
+        // Used degree per vertex, then exclusive scan (the trailing 0
+        // slot becomes the grand total).
+        let mut offsets = vec![0usize; n + 1];
+        {
+            // Not recorded: the PR-0 gather was a serial loop, so the
+            // Fig 16 replay expects exactly one recorded loop (the row
+            // copy) from compaction — and this loop's stats would be
+            // dropped below anyway.
+            let gather_opts = ParallelOpts { record: false, ..opts };
+            let fill = &self.fill;
+            exec.run_disjoint_mut(&mut offsets[..n], gather_opts, |r, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = fill[r.start + k].load(Ordering::Relaxed);
+                }
+            });
         }
-        let mut targets = Vec::with_capacity(total);
-        let mut weights = Vec::with_capacity(total);
-        for v in 0..n {
-            let (t, w) = self.edges(v);
-            targets.extend_from_slice(t);
-            weights.extend_from_slice(w);
-        }
-        Csr { offsets, targets, weights }
+        let total = exclusive_scan_exec(&mut offsets, opts.threads, exec);
+        let mut targets = vec![0u32; total];
+        let mut weights = vec![0f32; total];
+        let tp = RawSend(targets.as_mut_ptr());
+        let wp = RawSend(weights.as_mut_ptr());
+        let offs = &offsets;
+        let stats = exec.run(n, opts, move |range| {
+            let (tp, wp) = (tp, wp);
+            for v in range {
+                let (ts, ws) = self.edges(v);
+                let lo = offs[v];
+                // SAFETY: [lo, lo+len) regions are disjoint per vertex.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(ts.as_ptr(), tp.0.add(lo), ts.len());
+                    std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
+                }
+            }
+        });
+        (Csr { offsets, targets, weights }, stats)
     }
 }
 
@@ -287,6 +366,69 @@ mod tests {
         assert_eq!(c.num_edges(), 4);
         assert_eq!(c.edges(1).0, &[0, 2]);
         assert_eq!(c.edges(1).1, &[1.0, 2.5]);
+    }
+
+    #[test]
+    fn vertex_weights_into_matches_serial_and_reuses_storage() {
+        use crate::parallel::team::{Exec, Team};
+        let g = triangle();
+        assert_eq!(g.vertex_weights_par(4), g.vertex_weights());
+
+        let team = Team::new(2);
+        let mut buf = Vec::new();
+        g.vertex_weights_into(
+            &mut buf,
+            ParallelOpts { threads: 2, ..ParallelOpts::default() },
+            Exec::team(&team),
+        );
+        assert_eq!(buf, g.vertex_weights());
+        let ptr = buf.as_ptr();
+        // Second fill reuses the allocation (same or smaller n).
+        g.vertex_weights_into(&mut buf, ParallelOpts::default(), Exec::team(&team));
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(buf, g.vertex_weights());
+    }
+
+    #[test]
+    fn compact_parallel_matches_serial_structure() {
+        use crate::parallel::team::{Exec, Team};
+        // Holey CSR with gaps: capacities 4, used degrees vary.
+        let h = HoleyCsr::with_offsets((0..=50).map(|i| i * 4).collect());
+        for v in 0..50usize {
+            for e in 0..(v % 4) {
+                h.push_edge(v, e as u32, e as f32 + 0.5);
+            }
+        }
+        let serial = h.compact();
+        serial.validate().unwrap();
+        let team = Team::new(4);
+        let opts = ParallelOpts { threads: 4, chunk: 8, ..ParallelOpts::default() };
+        let (par, _) = h.compact_with(opts, Exec::team(&team));
+        assert_eq!(serial, par);
+        let (scoped, _) = h.compact_with(opts, Exec::scoped());
+        assert_eq!(serial, scoped);
+    }
+
+    #[test]
+    fn holey_reset_reuses_storage() {
+        let mut h = HoleyCsr::with_offsets(vec![0, 8, 16, 24]);
+        h.push_edge(0, 1, 1.0);
+        h.push_edge(2, 0, 2.0);
+        let cap_ptr = h.targets.as_ptr();
+        // Shrink to two vertices with smaller capacity: no realloc.
+        let mut offsets = vec![0usize, 4, 8];
+        h.reset_with_offsets(&mut offsets);
+        assert_eq!(h.num_vertices(), 2);
+        assert_eq!(h.degree(0), 0);
+        assert_eq!(h.degree(1), 0);
+        assert_eq!(h.targets.as_ptr(), cap_ptr, "targets reallocated on shrink");
+        // The old offsets vector is handed back for scratch reuse.
+        assert_eq!(offsets, vec![0, 8, 16, 24]);
+        h.push_edge(1, 0, 3.0);
+        let c = h.compact();
+        c.validate().unwrap();
+        assert_eq!(c.edges(1).0, &[0]);
+        assert_eq!(c.edges(1).1, &[3.0]);
     }
 
     #[test]

@@ -9,10 +9,12 @@
 //!
 //! * [`graph`] — weighted CSR / holey-CSR graph substrate, synthetic
 //!   generators mirroring the paper's four dataset families, and IO.
-//! * [`parallel`] — an OpenMP-like scheduling substrate (static /
-//!   dynamic / guided / auto chunk schedules), parallel scan, atomic
-//!   f64, deterministic PRNGs, and a replay model used for the
-//!   strong-scaling study on this single-core testbed.
+//! * [`parallel`] — an OpenMP-like scheduling substrate: a persistent
+//!   worker team (spawn-once, park between loops; the hot path) plus a
+//!   scoped fork-join reference pool, static / dynamic / guided / auto
+//!   chunk schedules, parallel scan, atomic f64, deterministic PRNGs,
+//!   and a replay model used for the strong-scaling study on this
+//!   single-core testbed.
 //! * [`louvain`] — the paper's CPU contribution: **GVE-Louvain** with
 //!   per-thread collision-free hashtables (std-map / Close-KV /
 //!   Far-KV), vertex pruning, threshold scaling, aggregation tolerance

@@ -12,15 +12,24 @@
 //! Both scan with `self = true` (Algorithm 3 line 15): the weight to
 //! the own community becomes the super-vertex self-loop, carrying
 //! `σ_c` forward so later passes see correct internal weights.
+//!
+//! The `_with` variants take an [`Exec`] (so the pass loop's persistent
+//! worker team is reused instead of spawning threads per sub-loop) and,
+//! for the CSR path, an [`AggScratch`] whose count arrays and holey
+//! CSRs are *logically shrunk* across passes instead of reallocated —
+//! the zero-allocation pass-workspace contract.  The plain wrappers
+//! keep the original spawn-per-loop, allocate-per-call signatures for
+//! baselines and tests.
 
 use super::hashtable::TablePool;
 use super::params::LouvainParams;
 use super::Counters;
 use crate::graph::csr::HoleyCsr;
 use crate::graph::Csr;
-use crate::parallel::pool::{parallel_for, parallel_for_ctx, ChunkRecord, ParallelOpts};
-use crate::parallel::scan::exclusive_scan;
+use crate::parallel::pool::{ChunkRecord, ParallelOpts, RawSend};
+use crate::parallel::scan::exclusive_scan_exec;
 use crate::parallel::schedule::Schedule;
+use crate::parallel::team::Exec;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Result of an aggregation phase.
@@ -30,13 +39,56 @@ pub struct AggOutcome {
     pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
 }
 
-/// CSR + prefix-sum aggregation (the adopted design).
+/// Reusable aggregation scratch: the community-count and total-degree
+/// arrays plus both holey CSRs (community-vertices and super-vertex).
+/// The first pass (the largest graph) sizes every buffer; later passes
+/// reuse the allocations.
+pub struct AggScratch {
+    counts: Vec<usize>,
+    tot_deg: Vec<usize>,
+    comm_vertices: HoleyCsr,
+    holey: HoleyCsr,
+}
+
+impl AggScratch {
+    pub fn new() -> Self {
+        Self {
+            counts: Vec::new(),
+            tot_deg: Vec::new(),
+            comm_vertices: HoleyCsr::with_offsets(vec![0]),
+            holey: HoleyCsr::with_offsets(vec![0]),
+        }
+    }
+}
+
+impl Default for AggScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// CSR + prefix-sum aggregation with fresh scratch on the scoped pool
+/// (the original signature; baselines and tests use this).
 pub fn aggregate_csr(
     g: &Csr,
     membership: &[u32],
     n_comm: usize,
     pool: &TablePool,
     params: &LouvainParams,
+) -> AggOutcome {
+    aggregate_csr_with(g, membership, n_comm, pool, params, Exec::scoped(), &mut AggScratch::new())
+}
+
+/// CSR + prefix-sum aggregation (the adopted design) on `exec`,
+/// reusing `scratch` across calls.
+pub fn aggregate_csr_with(
+    g: &Csr,
+    membership: &[u32],
+    n_comm: usize,
+    pool: &TablePool,
+    params: &LouvainParams,
+    exec: Exec,
+    scratch: &mut AggScratch,
 ) -> AggOutcome {
     let n = g.num_vertices();
     let opts = ParallelOpts {
@@ -49,11 +101,13 @@ pub fn aggregate_csr(
     let mut loops = Vec::new();
 
     // --- Community-vertices CSR G'_{C'} (lines 3-6).
-    let mut counts = vec![0usize; n_comm + 1];
+    scratch.counts.clear();
+    scratch.counts.resize(n_comm + 1, 0);
     {
-        let counts_at: &[AtomicUsize] =
-            unsafe { &*(counts.as_mut_slice() as *mut [usize] as *const [AtomicUsize]) };
-        let s = parallel_for(n, opts, |range| {
+        let counts_at: &[AtomicUsize] = unsafe {
+            &*(scratch.counts.as_mut_slice() as *mut [usize] as *const [AtomicUsize])
+        };
+        let s = exec.run(n, opts, |range| {
             for i in range {
                 counts_at[membership[i] as usize].fetch_add(1, Ordering::Relaxed);
             }
@@ -62,11 +116,11 @@ pub fn aggregate_csr(
             loops.push((params.schedule, s.chunks));
         }
     }
-    exclusive_scan(&mut counts, params.threads);
-    let comm_vertices = HoleyCsr::with_offsets(counts);
+    exclusive_scan_exec(&mut scratch.counts, params.threads, exec);
+    scratch.comm_vertices.reset_with_offsets(&mut scratch.counts);
     {
-        let cv = &comm_vertices;
-        let s = parallel_for(n, opts, |range| {
+        let cv = &scratch.comm_vertices;
+        let s = exec.run(n, opts, |range| {
             for i in range {
                 cv.push_edge(membership[i] as usize, i as u32, 0.0);
             }
@@ -77,11 +131,13 @@ pub fn aggregate_csr(
     }
 
     // --- Super-vertex graph offsets: community total degree (lines 8-9).
-    let mut tot_deg = vec![0usize; n_comm + 1];
+    scratch.tot_deg.clear();
+    scratch.tot_deg.resize(n_comm + 1, 0);
     {
-        let td: &[AtomicUsize] =
-            unsafe { &*(tot_deg.as_mut_slice() as *mut [usize] as *const [AtomicUsize]) };
-        let s = parallel_for(n, opts, |range| {
+        let td: &[AtomicUsize] = unsafe {
+            &*(scratch.tot_deg.as_mut_slice() as *mut [usize] as *const [AtomicUsize])
+        };
+        let s = exec.run(n, opts, |range| {
             for i in range {
                 td[membership[i] as usize].fetch_add(g.degree(i), Ordering::Relaxed);
             }
@@ -90,16 +146,16 @@ pub fn aggregate_csr(
             loops.push((params.schedule, s.chunks));
         }
     }
-    exclusive_scan(&mut tot_deg, params.threads);
-    let holey = HoleyCsr::with_offsets(tot_deg);
+    exclusive_scan_exec(&mut scratch.tot_deg, params.threads, exec);
+    scratch.holey.reset_with_offsets(&mut scratch.tot_deg);
 
     // --- Fill the holey CSR (lines 11-17).
     let scanned = AtomicU64::new(0);
     let ops = AtomicU64::new(0);
     {
-        let cv = &comm_vertices;
-        let holey = &holey;
-        let s = parallel_for_ctx(
+        let cv = &scratch.comm_vertices;
+        let holey = &scratch.holey;
+        let s = exec.run_ctx(
             n_comm,
             opts,
             |tid| pool.table(tid),
@@ -135,8 +191,10 @@ pub fn aggregate_csr(
     counters.edges_scanned_agg = scanned.load(Ordering::Relaxed);
     counters.table_ops = ops.load(Ordering::Relaxed);
 
-    let (mut graph, s_compact) = compact_parallel(&holey, opts, params.threads);
-    let s = sort_rows_parallel(&mut graph, opts);
+    // --- Compact + normalize row order (prefix-sum over used degrees,
+    // then chunked copy; both on `exec`).
+    let (mut graph, s_compact) = scratch.holey.compact_with(opts, exec);
+    let s = sort_rows_parallel(&mut graph, opts, exec);
     if params.record_chunks {
         loops.push((params.schedule, s_compact.chunks));
         loops.push((params.schedule, s.chunks));
@@ -144,79 +202,61 @@ pub fn aggregate_csr(
     AggOutcome { graph, counters, loops }
 }
 
-/// Parallel compaction of a holey CSR (offsets via parallel scan, rows
-/// copied in parallel) — the paper's aggregation is parallel end to end.
-fn compact_parallel(
-    h: &HoleyCsr,
-    opts: ParallelOpts,
-    threads: usize,
-) -> (Csr, crate::parallel::pool::WorkStats) {
-    struct SendPtr<T>(*mut T);
-    unsafe impl<T> Send for SendPtr<T> {}
-    unsafe impl<T> Sync for SendPtr<T> {}
-    let n = h.num_vertices();
-    let mut offsets = vec![0usize; n + 1];
-    for v in 0..n {
-        offsets[v] = h.degree(v);
-    }
-    let total = exclusive_scan(&mut offsets, threads);
-    let mut targets = vec![0u32; total];
-    let mut weights = vec![0f32; total];
-    let tp = SendPtr(targets.as_mut_ptr());
-    let wp = SendPtr(weights.as_mut_ptr());
-    let offsets_ref = &offsets;
-    let stats = parallel_for(n, opts, |range| {
-        let (tp, wp) = (&tp, &wp);
-        for v in range {
-            let (ts, ws) = h.edges(v);
-            let lo = offsets_ref[v];
-            // SAFETY: [lo, lo+len) regions are disjoint per vertex.
-            unsafe {
-                std::ptr::copy_nonoverlapping(ts.as_ptr(), tp.0.add(lo), ts.len());
-                std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
-            }
-        }
-    });
-    (Csr { offsets, targets, weights }, stats)
-}
-
 /// Parallel per-row sort (rows are disjoint slices; embarrassingly
-/// parallel, recorded for the scaling replay).
-fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts) -> crate::parallel::pool::WorkStats {
-    struct SendPtr<T>(*mut T);
-    unsafe impl<T> Send for SendPtr<T> {}
-    unsafe impl<T> Sync for SendPtr<T> {}
+/// parallel, recorded for the scaling replay).  The pair buffer lives
+/// in the per-thread context, so steady-state sorting allocates only
+/// when a row outgrows every previous row on that worker.
+fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts, exec: Exec) -> crate::parallel::pool::WorkStats {
     let n = g.num_vertices();
     let offsets = &g.offsets;
-    let tp = SendPtr(g.targets.as_mut_ptr());
-    let wp = SendPtr(g.weights.as_mut_ptr());
-    parallel_for(n, ParallelOpts { chunk: opts.chunk.min(512), ..opts }, |range| {
-        let (tp, wp) = (&tp, &wp);
-        let mut buf: Vec<(u32, f32)> = Vec::new();
-        for v in range {
-            let (lo, hi) = (offsets[v], offsets[v + 1]);
-            // SAFETY: rows are disjoint; each v visited by one chunk.
-            let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(lo), hi - lo) };
-            let ws = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
-            buf.clear();
-            buf.extend(ts.iter().copied().zip(ws.iter().copied()));
-            buf.sort_unstable_by_key(|p| p.0);
-            for (k, (t, w)) in buf.iter().enumerate() {
-                ts[k] = *t;
-                ws[k] = *w;
+    let tp = RawSend(g.targets.as_mut_ptr());
+    let wp = RawSend(g.weights.as_mut_ptr());
+    exec.run_ctx(
+        n,
+        ParallelOpts { chunk: opts.chunk.min(512), ..opts },
+        |_tid| Vec::<(u32, f32)>::new(),
+        move |buf, range| {
+            let (tp, wp) = (tp, wp);
+            for v in range {
+                let (lo, hi) = (offsets[v], offsets[v + 1]);
+                // SAFETY: rows are disjoint; each v visited by one chunk.
+                let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(lo), hi - lo) };
+                let ws = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+                buf.clear();
+                buf.extend(ts.iter().copied().zip(ws.iter().copied()));
+                buf.sort_unstable_by_key(|p| p.0);
+                for (k, (t, w)) in buf.iter().enumerate() {
+                    ts[k] = *t;
+                    ws[k] = *w;
+                }
             }
-        }
-    })
+        },
+    )
 }
 
-/// 2-D array (`Vec<Vec>`) aggregation — the Fig 2 ablation baseline.
-/// Allocates per-community vectors during the algorithm.
+/// 2-D array aggregation with fresh allocations on the scoped pool
+/// (the original signature).
 pub fn aggregate_2d(
     g: &Csr,
     membership: &[u32],
     n_comm: usize,
     pool: &TablePool,
     params: &LouvainParams,
+) -> AggOutcome {
+    aggregate_2d_with(g, membership, n_comm, pool, params, Exec::scoped())
+}
+
+/// 2-D array (`Vec<Vec>`) aggregation — the Fig 2 ablation baseline.
+/// Allocates per-community vectors during the algorithm (that *is* the
+/// ablated behaviour, so no scratch reuse here), but still runs its
+/// loops on `exec`.
+pub fn aggregate_2d_with(
+    g: &Csr,
+    membership: &[u32],
+    n_comm: usize,
+    pool: &TablePool,
+    params: &LouvainParams,
+    exec: Exec,
 ) -> AggOutcome {
     let n = g.num_vertices();
     let mut counters = Counters::default();
@@ -238,7 +278,7 @@ pub fn aggregate_2d(
         record: false,
     };
     let members_ref = &members;
-    parallel_for_ctx(
+    exec.run_ctx(
         n_comm,
         opts,
         |tid| pool.table(tid),
@@ -308,6 +348,7 @@ mod tests {
     use crate::graph::builder::GraphBuilder;
     use crate::graph::generators::{generate, GraphFamily};
     use crate::louvain::params::TableKind;
+    use crate::parallel::team::Team;
 
     fn params() -> LouvainParams {
         LouvainParams::default()
@@ -390,6 +431,32 @@ mod tests {
         let a = aggregate_csr(&g, &memb, 97, &pool1, &LouvainParams { threads: 1, ..params() });
         let b = aggregate_csr(&g, &memb, 97, &pool4, &LouvainParams { threads: 4, ..params() });
         assert_eq!(a.graph, b.graph);
+    }
+
+    #[test]
+    fn team_path_with_scratch_reuse_matches_scoped() {
+        // The pass-loop configuration: one team + one scratch reused
+        // across shrinking "passes"; output must equal the fresh-scratch
+        // scoped path every time.
+        let team = Team::new(4);
+        let mut scratch = AggScratch::new();
+        let g = generate(GraphFamily::Web, 10, 31);
+        let n = g.num_vertices();
+        let p = LouvainParams { threads: 4, ..params() };
+        for ncomm in [211usize, 97, 13] {
+            let memb: Vec<u32> = (0..n).map(|v| (v % ncomm) as u32).collect();
+            let mut pool_slot = None;
+            let pool = TablePool::ensure(&mut pool_slot, TableKind::FarKv, ncomm, 4);
+            let fresh = aggregate_csr(&g, &memb, ncomm, pool, &p);
+            let reused = aggregate_csr_with(
+                &g, &memb, ncomm, pool, &p, Exec::team(&team), &mut scratch,
+            );
+            assert_eq!(fresh.graph, reused.graph, "ncomm={ncomm}");
+            assert_eq!(
+                fresh.counters.edges_scanned_agg,
+                reused.counters.edges_scanned_agg
+            );
+        }
     }
 
     #[test]

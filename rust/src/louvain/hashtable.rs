@@ -80,6 +80,54 @@ impl TablePool {
         self.kind
     }
 
+    /// Largest community id (exclusive) the tables can hold.
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    /// Number of per-thread tables.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Reuse `slot`'s pool when its kind, capacity and thread count
+    /// suffice; otherwise (re)build it.  This is how the pass loops
+    /// keep `TablePool` allocation O(1) per run: the first pass (the
+    /// largest graph) sizes the pool, later passes reuse it.
+    ///
+    /// Correctness of reuse rests on the table contract: users call
+    /// `clear()` before each scan, and `clear()` zeroes exactly the
+    /// slots recorded in the key list, so leftover keys from a previous
+    /// (larger) pass are wiped on first touch.
+    pub fn ensure<'a>(
+        slot: &'a mut Option<TablePool>,
+        kind: TableKind,
+        n: usize,
+        threads: usize,
+    ) -> &'a TablePool {
+        let reusable = slot
+            .as_ref()
+            .map(|p| p.kind == kind && p.n >= n && p.threads >= threads.max(1))
+            .unwrap_or(false);
+        if !reusable {
+            *slot = Some(TablePool::new(kind, n, threads));
+        }
+        slot.as_ref().unwrap()
+    }
+
+    /// Address of thread `tid`'s value storage (null for `Map`, which
+    /// owns no pooled storage).  Tests use this to assert the pool is
+    /// *reused*, not reallocated, across passes and runs.
+    #[doc(hidden)]
+    pub fn storage_ptr(&self, tid: usize) -> *const f64 {
+        assert!(tid < self.threads, "tid {tid} >= threads {}", self.threads);
+        match self.kind {
+            TableKind::Map => std::ptr::null(),
+            TableKind::CloseKv => self.close_values[tid * self.n..].as_ptr(),
+            TableKind::FarKv => self.far[tid].values.as_ptr(),
+        }
+    }
+
     /// Hand out thread `tid`'s table view.
     ///
     /// Contract: at most one live view per `tid` at a time (the
@@ -287,6 +335,44 @@ mod tests {
                 t.clear();
             }
         }
+    }
+
+    #[test]
+    fn ensure_reuses_when_capacity_suffices() {
+        for kind in [TableKind::CloseKv, TableKind::FarKv] {
+            let mut slot: Option<TablePool> = None;
+            let p0 = TablePool::ensure(&mut slot, kind, 100, 2).storage_ptr(0);
+            assert!(!p0.is_null());
+            // Smaller pass: storage must be reused, not reallocated.
+            let p1 = TablePool::ensure(&mut slot, kind, 40, 2).storage_ptr(0);
+            assert_eq!(p0, p1, "{kind:?} reallocated on shrink");
+            // Larger pass: must grow.
+            let pool = TablePool::ensure(&mut slot, kind, 200, 2);
+            assert!(pool.capacity() >= 200);
+            // Kind change: must rebuild.
+            TablePool::ensure(&mut slot, TableKind::Map, 10, 1);
+            assert_eq!(slot.as_ref().unwrap().kind(), TableKind::Map);
+        }
+    }
+
+    #[test]
+    fn reused_pool_is_clean_after_dirty_use() {
+        // Simulate a pass leaving dirty keys behind, then a smaller
+        // "next pass" reusing the pool: first clear() wipes the dirt.
+        let mut slot: Option<TablePool> = None;
+        {
+            let pool = TablePool::ensure(&mut slot, TableKind::FarKv, 100, 1);
+            let mut t = pool.table(0);
+            t.accumulate(7, 1.0);
+            t.accumulate(93, 2.0); // key beyond the next pass's n
+        }
+        let pool = TablePool::ensure(&mut slot, TableKind::FarKv, 10, 1);
+        let mut t = pool.table(0);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.get(7), 0.0);
+        t.accumulate(3, 4.0);
+        assert_eq!(t.get(3), 4.0);
     }
 
     #[test]

@@ -12,8 +12,9 @@ use super::params::LouvainParams;
 use super::Counters;
 use crate::graph::Csr;
 use crate::parallel::atomics::{as_atomic_f64, as_atomic_u32, AtomicF64};
-use crate::parallel::pool::{parallel_for_ctx, ChunkRecord, ParallelOpts};
+use crate::parallel::pool::{ChunkRecord, ParallelOpts};
 use crate::parallel::schedule::Schedule;
+use crate::parallel::team::Exec;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Result of one local-moving phase.
@@ -37,7 +38,10 @@ pub struct MoveOutcome {
 /// * `affected` — pruning flags (1 = process); all-1 on entry for a
 ///   fresh pass. Ignored (all vertices processed) when
 ///   `params.pruning` is false.
-/// * `tau` — this pass's convergence tolerance.
+/// * `tau` — this pass's convergence tolerance;
+/// * `exec` — the executor: the pass loop hands in its persistent
+///   [`Team`](crate::parallel::team::Team); tests may use
+///   [`Exec::scoped`] for the spawn-per-loop reference path.
 #[allow(clippy::too_many_arguments)]
 pub fn local_moving(
     g: &Csr,
@@ -49,6 +53,7 @@ pub fn local_moving(
     params: &LouvainParams,
     m: f64,
     tau: f64,
+    exec: Exec,
 ) -> MoveOutcome {
     let n = g.num_vertices();
     let memb = as_atomic_u32(membership);
@@ -71,7 +76,7 @@ pub fn local_moving(
         let processed = AtomicU64::new(0);
         let pruned = AtomicU64::new(0);
 
-        let stats = parallel_for_ctx(
+        let stats = exec.run_ctx(
             n,
             opts,
             |tid| pool.table(tid),
@@ -201,7 +206,7 @@ mod tests {
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, 6, 1);
         let m = g.total_weight();
-        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
         assert!(out.iterations >= 1);
         assert_eq!(memb[0], memb[1]);
         assert_eq!(memb[1], memb[2]);
@@ -221,7 +226,7 @@ mod tests {
             let params = LouvainParams::default();
             let pool = TablePool::new(TableKind::FarKv, n, 1);
             let m = g.total_weight();
-            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
             let q1 = modularity(&g, &memb);
             assert!(q1 >= q0 - 1e-9, "{f:?}: q0={q0} q1={q1}");
         }
@@ -235,7 +240,7 @@ mod tests {
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, n, 1);
         let m = g.total_weight();
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
         // Σ'[c] must equal the sum of K over members of c.
         let mut want = vec![0f64; n];
         for v in 0..n {
@@ -256,7 +261,7 @@ mod tests {
             let (mut memb, k, mut sigma, mut aff) = setup(&g);
             let params = LouvainParams { table: kind, ..Default::default() };
             let pool = TablePool::new(kind, n, 1);
-            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
             results.push(modularity(&g, &memb));
         }
         // Map iterates keys in ascending order, KV in first-touch order:
@@ -275,7 +280,7 @@ mod tests {
             let (mut memb, k, mut sigma, mut aff) = setup(&g);
             let params = LouvainParams { pruning, ..Default::default() };
             let pool = TablePool::new(TableKind::FarKv, n, 1);
-            let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+            let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
             if pruning {
                 assert!(out.counters.vertices_pruned > 0, "pruning never skipped a vertex");
             }
@@ -291,7 +296,7 @@ mod tests {
         let (mut memb, k, mut sigma, mut aff) = setup(&g);
         let params = LouvainParams { max_iterations: 3, ..Default::default() };
         let pool = TablePool::new(TableKind::FarKv, n, 1);
-        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 0.0);
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 0.0, Exec::scoped());
         assert!(out.iterations <= 3);
     }
 
@@ -303,7 +308,7 @@ mod tests {
         let params = LouvainParams { threads: 4, ..Default::default() };
         let pool = TablePool::new(TableKind::FarKv, n, 4);
         let m = g.total_weight();
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9);
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
         let q = modularity(&g, &memb);
         assert!(q > 0.4, "multithreaded local-moving broke quality: q={q}");
         // Σ invariant still holds after concurrent updates.
@@ -317,12 +322,59 @@ mod tests {
     }
 
     #[test]
+    fn team_path_matches_scoped_path_exactly_single_thread() {
+        use crate::parallel::team::Team;
+        // One thread is deterministic on both executors: membership,
+        // Σ' and total ΔQ must agree bit-for-bit.
+        let team = Team::new(1);
+        for f in [GraphFamily::Web, GraphFamily::Social] {
+            let g = generate(f, 9, 43);
+            let n = g.num_vertices();
+            let m = g.total_weight();
+            let params = LouvainParams::default();
+
+            let (mut memb_a, k, mut sigma_a, mut aff_a) = setup(&g);
+            let pool_a = TablePool::new(TableKind::FarKv, n, 1);
+            let a = local_moving(&g, &mut memb_a, &k, &mut sigma_a, &mut aff_a, &pool_a, &params, m, 1e-9, Exec::scoped());
+
+            let (mut memb_b, _, mut sigma_b, mut aff_b) = setup(&g);
+            let pool_b = TablePool::new(TableKind::FarKv, n, 1);
+            let b = local_moving(&g, &mut memb_b, &k, &mut sigma_b, &mut aff_b, &pool_b, &params, m, 1e-9, Exec::team(&team));
+
+            assert_eq!(memb_a, memb_b, "{f:?}");
+            assert_eq!(sigma_a, sigma_b, "{f:?}");
+            assert_eq!(a.dq_total, b.dq_total, "{f:?}");
+            assert_eq!(a.iterations, b.iterations, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn team_path_quality_matches_scoped_multithreaded() {
+        use crate::parallel::team::Team;
+        let team = Team::new(4);
+        let g = generate(GraphFamily::Web, 10, 47);
+        let n = g.num_vertices();
+        let m = g.total_weight();
+        let params = LouvainParams { threads: 4, ..Default::default() };
+        let mut qs = Vec::new();
+        for exec in [Exec::scoped(), Exec::team(&team)] {
+            let (mut memb, k, mut sigma, mut aff) = setup(&g);
+            let pool = TablePool::new(TableKind::FarKv, n, 4);
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, exec);
+            qs.push(modularity(&g, &memb));
+        }
+        // Benign races make 4-thread runs nondeterministic on both
+        // paths; quality must still agree closely.
+        assert!((qs[0] - qs[1]).abs() < 0.02, "{qs:?}");
+    }
+
+    #[test]
     fn isolated_vertices_stay_put() {
         let g = GraphBuilder::new(5).edge(0, 1, 1.0).build_undirected();
         let (mut memb, k, mut sigma, mut aff) = setup(&g);
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, 5, 1);
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 1e-9);
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 1e-9, Exec::scoped());
         for v in 2..5 {
             assert_eq!(memb[v], v as u32);
         }

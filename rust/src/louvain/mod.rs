@@ -13,6 +13,8 @@
 //!   2-D-array ablation variant (§4.1.7–4.1.8);
 //! * [`renumber`] / [`dendrogram`] — community renumbering and
 //!   dendrogram lookup;
+//! * [`workspace`] — the zero-allocation pass workspace: persistent
+//!   worker team, table pool and pass buffers reused across passes;
 //! * [`gve`] — the pass loop (Algorithm 1) with phase/pass metrics.
 
 pub mod aggregation;
@@ -23,9 +25,11 @@ pub mod local_moving;
 pub mod modularity;
 pub mod params;
 pub mod renumber;
+pub mod workspace;
 
 pub use gve::{GveLouvain, LouvainResult, PassStats};
 pub use params::LouvainParams;
+pub use workspace::LouvainWorkspace;
 
 /// Work counters shared by CPU and GPU paths; they feed the device cost
 /// models and the phase-split reports.

@@ -1,0 +1,167 @@
+//! Zero-allocation pass workspace for the GVE-Louvain pass loop.
+//!
+//! The paper's hot path (§4.1.9, Far-KV) preallocates every per-thread
+//! hashtable once and reuses OpenMP's persistent thread team; the PR-0
+//! driver instead rebuilt the [`TablePool`] plus all K'/Σ'/C'/affected
+//! buffers from scratch on **every pass** and forked fresh OS threads
+//! on every loop.  [`LouvainWorkspace`] is the fix:
+//!
+//! * the persistent worker [`Team`] is built once (O(1) OS-thread
+//!   spawns per run, not O(passes × iterations × loops));
+//! * the [`TablePool`] and the K'/Σ'/C'/affected vectors are sized by
+//!   the first pass (the largest graph — pass graphs only shrink) and
+//!   *logically shrunk* afterwards;
+//! * the aggregation scratch ([`AggScratch`]: count arrays + both
+//!   holey CSRs) is likewise reused.
+//!
+//! ## Contract
+//!
+//! * [`LouvainWorkspace::prepare`] is called once per run with the
+//!   input size; it (re)builds the team/pool only when the thread
+//!   count, table kind or capacity requirement changed — repeated runs
+//!   on the same [`GveLouvain`](super::gve::GveLouvain) object reuse
+//!   everything.
+//! * [`LouvainWorkspace::begin_pass`] resizes the pass buffers for the
+//!   current super-vertex graph without reallocating (capacity is
+//!   retained from the first pass).
+//! * Fields are `pub(crate)` so the pass loop can split-borrow the
+//!   team, pool, buffers and scratch simultaneously.
+
+use super::aggregation::AggScratch;
+use super::hashtable::TablePool;
+use super::params::LouvainParams;
+use crate::parallel::team::Team;
+
+/// Reusable runtime resources of one [`GveLouvain`](super::gve::GveLouvain).
+pub struct LouvainWorkspace {
+    /// Persistent worker team (spawned once per thread-count change).
+    pub(crate) team: Option<Team>,
+    /// Per-thread community tables, sized by the largest pass.
+    pub(crate) pool: Option<TablePool>,
+    /// K': weighted degrees of the current pass graph.
+    pub(crate) k: Vec<f64>,
+    /// Σ': community weight totals.
+    pub(crate) sigma: Vec<f64>,
+    /// C': pass-local membership.
+    pub(crate) membership: Vec<u32>,
+    /// Pruning flags (1 = process).
+    pub(crate) affected: Vec<u32>,
+    /// Aggregation scratch (counts / total-degree / holey buffers).
+    pub(crate) agg: AggScratch,
+}
+
+impl LouvainWorkspace {
+    pub fn new() -> Self {
+        Self {
+            team: None,
+            pool: None,
+            k: Vec::new(),
+            sigma: Vec::new(),
+            membership: Vec::new(),
+            affected: Vec::new(),
+            agg: AggScratch::new(),
+        }
+    }
+
+    /// Ensure the team and table pool exist and fit this run.
+    ///
+    /// `n_cap` is the input graph's vertex count — an upper bound for
+    /// every later pass, so the pool allocated here is never regrown
+    /// within the run.
+    pub fn prepare(&mut self, params: &LouvainParams, n_cap: usize) {
+        let threads = params.threads.max(1);
+        if self.team.as_ref().map(Team::threads) != Some(threads) {
+            self.team = Some(Team::new(threads));
+        }
+        TablePool::ensure(&mut self.pool, params.table, n_cap, threads);
+    }
+
+    /// Size the pass buffers for an `np`-vertex pass graph.  After the
+    /// first pass this never allocates: pass graphs only shrink.
+    ///
+    /// On return: `membership` is the identity and `affected` is all-1
+    /// (the Algorithm 1 lines 4-5 initial state).  `k` and `sigma` are
+    /// *not* touched here — the pass loop overwrites both in full
+    /// (`vertex_weights_into`, then the Σ' copy), so pre-zeroing them
+    /// would just be two dead O(np) sweeps on the hot path.
+    pub fn begin_pass(&mut self, np: usize) {
+        self.membership.clear();
+        self.membership.extend(0..np as u32);
+        self.affected.clear();
+        self.affected.resize(np, 1);
+    }
+
+    /// OS worker threads spawned by this workspace's team so far.
+    pub fn spawned_workers(&self) -> usize {
+        self.team.as_ref().map(Team::spawned_workers).unwrap_or(0)
+    }
+}
+
+impl Default for LouvainWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::louvain::params::TableKind;
+
+    #[test]
+    fn prepare_reuses_team_and_pool_across_runs() {
+        let mut ws = LouvainWorkspace::new();
+        let p = LouvainParams { threads: 3, ..Default::default() };
+        ws.prepare(&p, 1000);
+        assert_eq!(ws.spawned_workers(), 2);
+        let pool_ptr = ws.pool.as_ref().unwrap().storage_ptr(0);
+        let team_ptr = ws.team.as_ref().unwrap() as *const Team;
+
+        // A second (smaller) run must reuse both.
+        ws.prepare(&p, 100);
+        assert_eq!(ws.spawned_workers(), 2);
+        assert_eq!(ws.pool.as_ref().unwrap().storage_ptr(0), pool_ptr);
+        assert_eq!(ws.team.as_ref().unwrap() as *const Team, team_ptr);
+
+        // Changing the thread count rebuilds the team (only then).
+        let p4 = LouvainParams { threads: 4, ..Default::default() };
+        ws.prepare(&p4, 100);
+        assert_eq!(ws.spawned_workers(), 3);
+    }
+
+    #[test]
+    fn prepare_rebuilds_pool_on_kind_or_capacity_change() {
+        let mut ws = LouvainWorkspace::new();
+        let p = LouvainParams::default();
+        ws.prepare(&p, 100);
+        assert_eq!(ws.pool.as_ref().unwrap().kind(), TableKind::FarKv);
+        let ptr = ws.pool.as_ref().unwrap().storage_ptr(0);
+        // Larger input: must grow.
+        ws.prepare(&p, 10_000);
+        assert!(ws.pool.as_ref().unwrap().capacity() >= 10_000);
+        // Different table kind: must rebuild.
+        let pm = LouvainParams { table: TableKind::Map, ..Default::default() };
+        ws.prepare(&pm, 100);
+        assert_eq!(ws.pool.as_ref().unwrap().kind(), TableKind::Map);
+        let _ = ptr;
+    }
+
+    #[test]
+    fn begin_pass_shrinks_without_reallocating() {
+        let mut ws = LouvainWorkspace::new();
+        ws.begin_pass(1000);
+        assert_eq!(ws.membership.len(), 1000);
+        assert_eq!(ws.membership[999], 999);
+        assert!(ws.affected.iter().all(|&a| a == 1));
+        let (mp, ap) = (ws.membership.as_ptr(), ws.affected.as_ptr());
+        // Later (smaller) passes keep the same allocations.
+        for np in [400, 50, 7] {
+            ws.begin_pass(np);
+            assert_eq!(ws.membership.len(), np);
+            assert_eq!(ws.affected.len(), np);
+            assert_eq!(ws.membership.as_ptr(), mp);
+            assert_eq!(ws.affected.as_ptr(), ap);
+            assert_eq!(ws.membership.last().copied(), Some(np as u32 - 1));
+        }
+    }
+}

@@ -3,8 +3,10 @@
 //! The paper parallelizes with OpenMP and *ablates the loop schedule*
 //! (§4.1.1: static / dynamic / guided / auto, chunk 2048).  The offline
 //! registry has no rayon, so this module provides the substrate from
-//! scratch: a scoped fork-join [`pool`], chunk [`schedule`]s matching
-//! OpenMP semantics, a parallel prefix [`scan`], CAS-loop [`atomics`]
+//! scratch: a persistent worker [`team`] (spawn-once, park between
+//! loops — the hot path), a scoped fork-join [`pool`] kept as the
+//! reference path, chunk [`schedule`]s matching OpenMP semantics, a
+//! parallel prefix [`scan`], CAS-loop [`atomics`]
 //! for `f64`, deterministic [`prng`]s, and a [`replay`] model that
 //! list-schedules measured chunk costs onto `T` modeled cores for the
 //! strong-scaling study (this testbed exposes a single core; see
@@ -16,6 +18,8 @@ pub mod prng;
 pub mod replay;
 pub mod scan;
 pub mod schedule;
+pub mod team;
 
-pub use pool::{parallel_for, parallel_for_ctx, ParallelOpts, WorkStats};
+pub use pool::{parallel_for, parallel_for_ctx, parallel_for_disjoint_mut, ParallelOpts, WorkStats};
 pub use schedule::Schedule;
+pub use team::{Exec, Team};

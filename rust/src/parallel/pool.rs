@@ -1,7 +1,11 @@
 //! Scoped fork-join `parallel_for` with OpenMP-style schedules.
 //!
-//! Each invocation forks `threads` workers over `0..n`, deals chunks per
-//! the chosen [`Schedule`], and joins.  Workers own a per-thread context
+//! This is the **reference path**: each invocation forks `threads`
+//! workers over `0..n`, deals chunks per the chosen [`Schedule`], and
+//! joins.  The Louvain hot loops run on the persistent
+//! [`Team`](super::team::Team) runtime instead (same dealing, no
+//! per-loop spawns); this module stays as the spawn-per-loop oracle the
+//! team is tested against, and for one-shot callers.  Workers own a per-thread context
 //! (GVE-Louvain hangs its per-thread hashtable there) created by an
 //! `init` closure — the Far-KV vs Close-KV distinction (§4.1.9) lives in
 //! *how* those contexts are allocated, not here.
@@ -159,6 +163,33 @@ where
     parallel_for_ctx(n, opts, |_| (), |_, r| body(r))
 }
 
+/// Raw-pointer wrapper for disjoint-chunk parallel loops.
+///
+/// The one place (instead of per-call-site `SendPtr` blocks) carrying
+/// the safety contract: the [`ChunkDealer`] hands each index of `0..n`
+/// to exactly one chunk (asserted by the schedule tests), so writes
+/// through this pointer at chunk-local indices never alias.
+#[derive(Clone, Copy)]
+pub(crate) struct RawSend<T>(pub *mut T);
+unsafe impl<T: Send> Send for RawSend<T> {}
+unsafe impl<T: Send> Sync for RawSend<T> {}
+
+/// Parallel loop that hands each chunk a `&mut` sub-slice of `data`.
+///
+/// The safe replacement for the ad-hoc `SendPtr` blocks that used to
+/// live at call sites: `body(range, chunk)` receives `data[range]`
+/// exclusively (ranges are disjoint by the dealer contract), so callers
+/// write plain safe code.  The single unsafe wrapper lives in
+/// [`Exec::run_disjoint_mut`](super::team::Exec::run_disjoint_mut);
+/// this is its scoped-path spelling.
+pub fn parallel_for_disjoint_mut<T, F>(data: &mut [T], opts: ParallelOpts, body: F) -> WorkStats
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    super::team::Exec::scoped().run_disjoint_mut(data, opts, body)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +256,58 @@ mod tests {
     fn zero_length_loop_is_noop() {
         let stats = parallel_for(0, ParallelOpts::default(), |_r| panic!("must not run"));
         assert_eq!(stats.total_ns(), 0);
+    }
+
+    #[test]
+    fn disjoint_mut_covers_every_slot_exactly_once() {
+        for s in Schedule::ALL {
+            for t in [1, 2, 4] {
+                let n = 10_001;
+                let mut data = vec![0u32; n];
+                parallel_for_disjoint_mut(
+                    &mut data,
+                    ParallelOpts { threads: t, schedule: s, chunk: 64, record: false },
+                    |r, chunk| {
+                        assert_eq!(chunk.len(), r.len());
+                        for (k, x) in chunk.iter_mut().enumerate() {
+                            *x += (r.start + k) as u32 + 1;
+                        }
+                    },
+                );
+                assert!(
+                    data.iter().enumerate().all(|(i, &x)| x == i as u32 + 1),
+                    "{s:?} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_empty_slice_is_noop() {
+        let mut data: Vec<u8> = Vec::new();
+        let stats = parallel_for_disjoint_mut(&mut data, ParallelOpts::default(), |_r, _c| {
+            panic!("must not run")
+        });
+        assert_eq!(stats.total_ns(), 0);
+    }
+
+    #[test]
+    fn disjoint_mut_reads_shared_state() {
+        // The pattern gve.rs uses for the membership fold: chunk-local
+        // writes driven by a shared read-only lookup table.
+        let lut: Vec<u32> = (0..100).map(|i| i * 10).collect();
+        let mut data: Vec<u32> = (0..100).collect();
+        let lut_ref = &lut;
+        parallel_for_disjoint_mut(
+            &mut data,
+            ParallelOpts { threads: 4, schedule: Schedule::Dynamic, chunk: 7, record: false },
+            |_r, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = lut_ref[*x as usize];
+                }
+            },
+        );
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32 * 10));
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! holey super-vertex CSR from degree counts via exclusive scan
 //! (Algorithm 3, lines 4 & 9).  The parallel version is the standard
 //! three-phase blocked scan (local reduce → scan of block sums → local
-//! scan with offset).
+//! scan with offset), runnable on either the persistent worker
+//! [`Team`](super::team::Team) (via [`exclusive_scan_exec`]) or the
+//! scoped fork-join pool.
 
-use super::pool::{parallel_for, ParallelOpts};
+use super::pool::{ParallelOpts, RawSend};
+use super::team::Exec;
 use crate::parallel::atomics::as_atomic_u64;
 
 /// In-place exclusive scan; returns the grand total.
@@ -20,10 +23,17 @@ pub fn exclusive_scan_serial(v: &mut [usize]) -> usize {
     acc
 }
 
-/// Blocked-parallel in-place exclusive scan; returns the grand total.
-///
-/// Falls back to serial when the input is small or `threads == 1`.
+/// Blocked-parallel in-place exclusive scan on the scoped pool;
+/// returns the grand total.  See [`exclusive_scan_exec`] for the
+/// team-backed variant used on the Louvain hot path.
 pub fn exclusive_scan(v: &mut [usize], threads: usize) -> usize {
+    exclusive_scan_exec(v, threads, Exec::scoped())
+}
+
+/// Blocked-parallel in-place exclusive scan on `exec`; returns the
+/// grand total.  Falls back to serial when the input is small or
+/// `threads == 1`.
+pub fn exclusive_scan_exec(v: &mut [usize], threads: usize, exec: Exec) -> usize {
     const MIN_PAR: usize = 1 << 14;
     let n = v.len();
     if threads <= 1 || n < MIN_PAR {
@@ -37,7 +47,7 @@ pub fn exclusive_scan(v: &mut [usize], threads: usize) -> usize {
     {
         let sums = as_atomic_u64(&mut block_sums);
         let data = &*v;
-        parallel_for(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, |r| {
+        exec.run(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, |r| {
             for b in r {
                 let lo = b * bsz;
                 if lo >= n {
@@ -63,9 +73,9 @@ pub fn exclusive_scan(v: &mut [usize], threads: usize) -> usize {
     {
         let offsets = &offsets;
         // SAFETY of the split: blocks are disjoint ranges of `v`.
-        let ptr = SendPtr(v.as_mut_ptr());
-        parallel_for(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, move |r| {
-            let ptr = ptr; // capture the whole SendPtr (2021 disjoint capture)
+        let ptr = RawSend(v.as_mut_ptr());
+        exec.run(nblocks, ParallelOpts { threads, chunk: 1, ..Default::default() }, move |r| {
+            let ptr = ptr; // capture the whole RawSend (2021 disjoint capture)
             for b in r {
                 let lo = b * bsz;
                 if lo >= n {
@@ -86,15 +96,11 @@ pub fn exclusive_scan(v: &mut [usize], threads: usize) -> usize {
     total
 }
 
-#[derive(Clone, Copy)]
-struct SendPtr(*mut usize);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::parallel::prng::Xoshiro256;
+    use crate::parallel::team::Team;
 
     #[test]
     fn serial_scan_basic() {
@@ -122,6 +128,21 @@ mod tests {
             let mut b = base.clone();
             let ta = exclusive_scan_serial(&mut a);
             let tb = exclusive_scan(&mut b, 4);
+            assert_eq!(ta, tb, "n={n}");
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn team_scan_matches_serial_under_reuse() {
+        let team = Team::new(4);
+        let mut rng = Xoshiro256::new(11);
+        for n in [(1 << 14) + 3, 60_000, 100_000] {
+            let base: Vec<usize> = (0..n).map(|_| rng.below(7) as usize).collect();
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let ta = exclusive_scan_serial(&mut a);
+            let tb = exclusive_scan_exec(&mut b, 4, Exec::team(&team));
             assert_eq!(ta, tb, "n={n}");
             assert_eq!(a, b, "n={n}");
         }

@@ -1,0 +1,622 @@
+//! Persistent worker-team runtime: OpenMP-style thread reuse.
+//!
+//! The scoped [`super::pool`] forks and joins fresh OS threads on
+//! *every* loop invocation — one spawn/join barrier per local-moving
+//! iteration, per init loop and per aggregation sub-loop, every pass.
+//! The paper's 560 M-edges/s headline rests on OpenMP's *persistent*
+//! thread team (§4.1.9): workers are spawned once and parked between
+//! parallel regions.  [`Team`] reproduces that contract:
+//!
+//! * `Team::new(T)` spawns `T - 1` OS workers **once**; the caller
+//!   participates as tid 0 (like the OpenMP master), so `T == 1` never
+//!   spawns at all.
+//! * Each job carries a fresh [`ChunkDealer`] over the existing
+//!   [`Schedule`](super::schedule::Schedule) kinds, so chunk dealing is
+//!   bit-for-bit identical to the scoped path — the Fig 16 scaling
+//!   replay keeps consuming the same [`ChunkRecord`] streams.
+//! * Per-chunk costs land in **per-worker slots** (cache-line padded,
+//!   locked once per job) merged at join, replacing the scoped path's
+//!   single contended `Mutex<WorkStats>`.
+//! * Between jobs workers sleep on a condvar; dispatch is one mutex
+//!   round-trip plus `notify_all`.
+//!
+//! Soundness: a job is a type-erased borrow of the dispatcher's stack
+//! frame.  [`Team::dispatch`] never returns (and never unwinds) until
+//! every worker has finished the job, so the borrow outlives every
+//! dereference; worker panics are caught and the first payload is
+//! re-raised on the caller after the barrier (message preserved, like
+//! the scoped path).
+//!
+//! [`Exec`] is the call-site handle: `Exec::team(&team)` runs loops on
+//! the persistent team, `Exec::scoped()` keeps the PR-0 spawn-per-loop
+//! reference path alive for tests and verification.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Lock ignoring poisoning: panics inside job bodies are caught before
+/// any team lock is taken, so a poisoned flag never indicates a broken
+/// invariant here — and honouring it would kill the team after the
+/// first caught panic.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+use super::pool::{parallel_for_ctx, ChunkRecord, ParallelOpts, RawSend, WorkStats};
+use super::schedule::ChunkDealer;
+
+/// Total OS threads ever spawned by [`Team`]s in this process (tests
+/// assert spawns per `GveLouvain::run` are O(1) in passes/iterations).
+static OS_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide [`Team`] worker spawn count so far.
+pub fn os_threads_spawned() -> usize {
+    OS_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// A type-erased parallel job: worker `tid` runs `call(ptr, tid)`.
+#[derive(Clone, Copy)]
+struct Job {
+    ptr: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: `ptr` points at a `Sync` closure on the dispatching thread's
+// stack; `Team::dispatch` blocks (even through panics) until every
+// worker has finished the job, so workers only dereference it while
+// the closure is alive.
+unsafe impl Send for Job {}
+
+struct TeamState {
+    /// Bumped once per dispatched job; workers run a job exactly once.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still running the current job.
+    remaining: usize,
+    /// First worker panic payload of the current job, re-raised on the
+    /// caller (payload preserved for parity with the scoped path).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct TeamShared {
+    state: Mutex<TeamState>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The dispatcher waits here for `remaining == 0`.
+    done_cv: Condvar,
+    /// Serializes dispatchers: a `Team` is `Sync`, so two threads could
+    /// otherwise publish jobs concurrently and corrupt the
+    /// epoch/remaining protocol the job-lifetime safety rests on.
+    run_lock: Mutex<()>,
+}
+
+thread_local! {
+    /// Address of the `TeamShared` whose job this thread is currently
+    /// executing (0 = none).  Turns the nested-dispatch deadlock into
+    /// an immediate panic naming the contract.
+    static ACTIVE_TEAM: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn worker_loop(shared: &TeamShared, tid: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_ignore_poison(&shared.state);
+            while !st.shutdown && st.epoch == seen {
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+            st.job.expect("epoch bumped without a published job")
+        };
+        // SAFETY: see `Job` — the dispatcher keeps the closure alive
+        // until `remaining` hits zero below.
+        let prev_team = ACTIVE_TEAM.replace(shared as *const TeamShared as usize);
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ptr, tid) }));
+        ACTIVE_TEAM.set(prev_team);
+        let mut st = lock_ignore_poison(&shared.state);
+        if let Err(payload) = result {
+            st.panic_payload.get_or_insert(payload);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// A persistent worker team (workers spawned once, parked between jobs).
+pub struct Team {
+    shared: Arc<TeamShared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Team {
+    /// Spawn `threads - 1` parked workers (the caller is tid 0).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(TeamShared {
+            state: Mutex::new(TeamState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            run_lock: Mutex::new(()),
+        });
+        let workers = (1..threads)
+            .map(|tid| {
+                let sh = Arc::clone(&shared);
+                OS_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("gve-team-{tid}"))
+                    .spawn(move || worker_loop(&sh, tid))
+                    .expect("spawn team worker")
+            })
+            .collect();
+        Self { shared, workers, threads }
+    }
+
+    /// Team width (including the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS workers this team spawned (`threads - 1`; stable for the
+    /// team's whole life — the O(1)-spawn guarantee).
+    pub fn spawned_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f(tid)` on every team member; caller participates as tid 0.
+    /// Returns only after *all* members finished, re-raising any panic.
+    fn dispatch<F: Fn(usize) + Sync>(&self, f: &F) {
+        if self.workers.is_empty() {
+            f(0);
+            return;
+        }
+        unsafe fn trampoline<F: Fn(usize) + Sync>(p: *const (), tid: usize) {
+            (*(p as *const F))(tid);
+        }
+        let team_id = Arc::as_ptr(&self.shared) as *const TeamShared as usize;
+        assert!(
+            ACTIVE_TEAM.get() != team_id,
+            "nested Team dispatch: a job body launched another multi-threaded \
+             loop on the same team (run it single-threaded or on Exec::scoped)"
+        );
+        let _dispatcher = lock_ignore_poison(&self.shared.run_lock);
+        {
+            let mut st = lock_ignore_poison(&self.shared.state);
+            st.job = Some(Job { ptr: f as *const F as *const (), call: trampoline::<F> });
+            st.epoch += 1;
+            st.remaining = self.workers.len();
+        }
+        self.shared.work_cv.notify_all();
+        // Save/restore (not reset): clobbering an enclosing team's
+        // marker on cross-team nesting would disarm the guard.
+        let prev_team = ACTIVE_TEAM.replace(team_id);
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        ACTIVE_TEAM.set(prev_team);
+        // The completion barrier must hold even when the caller's share
+        // panicked: workers still borrow this stack frame.
+        let mut st = lock_ignore_poison(&self.shared.state);
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let worker_panic = st.panic_payload.take();
+        drop(st);
+        match (caller, worker_panic) {
+            (Err(payload), _) => resume_unwind(payload),
+            (Ok(()), Some(payload)) => resume_unwind(payload),
+            (Ok(()), None) => {}
+        }
+    }
+
+    /// Parallel loop over `0..n` with a per-thread context — the
+    /// persistent-team equivalent of
+    /// [`parallel_for_ctx`](super::pool::parallel_for_ctx), with
+    /// identical chunk dealing and [`ChunkRecord`] semantics.
+    ///
+    /// `opts.threads` is clamped to the team width; members beyond the
+    /// effective count skip the job.
+    ///
+    /// Dispatch is serialized and **non-reentrant**: a job body must
+    /// not launch another multi-threaded loop on the *same* team (a
+    /// runtime guard panics with a clear message instead of
+    /// deadlocking on the dispatcher lock).  Run nested loops
+    /// single-threaded or on [`Exec::scoped`] instead — the Louvain
+    /// kernels only ever issue loops sequentially from the pass loop.
+    pub fn run_ctx<C, I, F>(&self, n: usize, opts: ParallelOpts, init: I, body: F) -> WorkStats
+    where
+        C: Send,
+        I: Fn(usize) -> C + Sync,
+        F: Fn(&mut C, Range<usize>) + Sync,
+    {
+        let effective = opts.threads.max(1).min(self.threads);
+        let dealer = ChunkDealer::new(n, effective, opts.schedule, opts.chunk);
+        // Result slots exist only on the instrumentation path: without
+        // `record`, stats are all zeros in both runtimes, so the common
+        // case allocates nothing per loop.
+        let slots: Vec<Slot> =
+            if opts.record { (0..effective).map(|_| Slot::default()).collect() } else { Vec::new() };
+        let job = |tid: usize| {
+            if tid >= effective {
+                return;
+            }
+            let mut ctx = init(tid);
+            let mut cursor = 0usize;
+            if opts.record {
+                let mut busy = 0u64;
+                let mut local: Vec<ChunkRecord> = Vec::new();
+                while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
+                    let t0 = Instant::now();
+                    let (start, len) = (r.start, r.len());
+                    body(&mut ctx, r);
+                    let ns = t0.elapsed().as_nanos() as u64;
+                    busy += ns;
+                    local.push(ChunkRecord { thread: tid, start, len, ns });
+                }
+                // One uncontended lock per member per job (vs the
+                // scoped path's shared Mutex<WorkStats>).
+                let mut s = lock_ignore_poison(&slots[tid].0);
+                s.busy = busy;
+                s.chunks = local;
+            } else {
+                while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
+                    body(&mut ctx, r);
+                }
+            }
+        };
+        if effective == 1 {
+            job(0); // inline: no wakeup, no barrier
+        } else {
+            self.dispatch(&job);
+        }
+        let mut out = WorkStats { chunks: Vec::new(), busy_ns: vec![0; effective] };
+        for (tid, slot) in slots.iter().enumerate() {
+            let mut s = lock_ignore_poison(&slot.0);
+            out.busy_ns[tid] = s.busy;
+            out.chunks.append(&mut s.chunks);
+        }
+        out
+    }
+
+    /// Context-free loop on the team.
+    pub fn run<F>(&self, n: usize, opts: ParallelOpts, body: F) -> WorkStats
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.run_ctx(n, opts, |_| (), |_, r| body(r))
+    }
+
+    /// Disjoint-chunk mutation on the team — see
+    /// [`parallel_for_disjoint_mut`](super::pool::parallel_for_disjoint_mut).
+    pub fn run_disjoint_mut<T, F>(&self, data: &mut [T], opts: ParallelOpts, body: F) -> WorkStats
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        Exec::team(self).run_disjoint_mut(data, opts, body)
+    }
+}
+
+impl Drop for Team {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_ignore_poison(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-worker result slot; the alignment keeps neighbouring slots off
+/// each other's cache lines (the Far-KV lesson applied to stats).
+#[repr(align(64))]
+#[derive(Default)]
+struct Slot(Mutex<SlotData>);
+
+#[derive(Default)]
+struct SlotData {
+    busy: u64,
+    chunks: Vec<ChunkRecord>,
+}
+
+/// Executor handle threaded through the Louvain kernels: either a
+/// persistent [`Team`] (the fast path) or the scoped spawn-per-loop
+/// reference path in [`super::pool`], kept for verification.
+#[derive(Clone, Copy, Default)]
+pub struct Exec<'t> {
+    team: Option<&'t Team>,
+}
+
+impl<'t> Exec<'t> {
+    /// Spawn-per-loop reference path (PR-0 semantics).
+    pub fn scoped() -> Self {
+        Self { team: None }
+    }
+
+    /// Run loops on a persistent team.
+    pub fn team(team: &'t Team) -> Self {
+        Self { team: Some(team) }
+    }
+
+    /// True when backed by a persistent team.
+    pub fn is_team(self) -> bool {
+        self.team.is_some()
+    }
+
+    /// [`parallel_for_ctx`]-compatible loop on this executor.
+    pub fn run_ctx<C, I, F>(self, n: usize, opts: ParallelOpts, init: I, body: F) -> WorkStats
+    where
+        C: Send,
+        I: Fn(usize) -> C + Sync,
+        F: Fn(&mut C, Range<usize>) + Sync,
+    {
+        match self.team {
+            Some(t) => t.run_ctx(n, opts, init, body),
+            None => parallel_for_ctx(n, opts, init, body),
+        }
+    }
+
+    /// Context-free loop on this executor.
+    pub fn run<F>(self, n: usize, opts: ParallelOpts, body: F) -> WorkStats
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        self.run_ctx(n, opts, |_| (), |_, r| body(r))
+    }
+
+    /// Disjoint-chunk mutation on this executor: `body(range, chunk)`
+    /// receives `data[range]` exclusively.  This is the one place that
+    /// turns the dealer's disjoint-cover contract into `&mut` slices;
+    /// [`Team::run_disjoint_mut`] and
+    /// [`parallel_for_disjoint_mut`](super::pool::parallel_for_disjoint_mut)
+    /// are thin wrappers over it.
+    pub fn run_disjoint_mut<T, F>(self, data: &mut [T], opts: ParallelOpts, body: F) -> WorkStats
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        let ptr = RawSend(data.as_mut_ptr());
+        self.run(n, opts, move |r| {
+            let p = ptr;
+            // SAFETY: the dealer hands each index of 0..n to exactly one
+            // chunk (asserted by the schedule tests), so these slices
+            // never alias.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(p.0.add(r.start), r.len()) };
+            body(r, chunk);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::schedule::Schedule;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn opts(threads: usize, schedule: Schedule, chunk: usize, record: bool) -> ParallelOpts {
+        ParallelOpts { threads, schedule, chunk, record }
+    }
+
+    #[test]
+    fn covers_all_indices_every_schedule_under_reuse() {
+        // ONE team reused across every schedule kind and width — the
+        // persistent-runtime contract the Louvain pass loop relies on.
+        let team = Team::new(4);
+        for round in 0..3 {
+            for s in Schedule::ALL {
+                for t in [1, 2, 4] {
+                    let n = 10_001;
+                    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    team.run(n, opts(t, s, 64, false), |r| {
+                        for i in r {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    assert!(
+                        hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                        "{s:?} t={t} round={round}"
+                    );
+                }
+            }
+        }
+        assert_eq!(team.spawned_workers(), 3);
+    }
+
+    #[test]
+    fn chunk_records_match_scoped_path() {
+        // Chunk (start, len) sequences are schedule-deterministic, so
+        // team and scoped runs must produce the same chunk multiset —
+        // the Fig 16 replay depends on this.
+        let team = Team::new(3);
+        for s in Schedule::ALL {
+            let o = opts(3, s, 128, true);
+            let body = |r: Range<usize>| {
+                std::hint::black_box(r.sum::<usize>());
+            };
+            let a = team.run(5000, o, body);
+            let b = parallel_for_ctx(5000, o, |_| (), |_, r| body(r));
+            let key = |st: &WorkStats| {
+                let mut v: Vec<(usize, usize)> =
+                    st.chunks.iter().map(|c| (c.start, c.len)).collect();
+                v.sort_unstable();
+                v
+            };
+            assert_eq!(key(&a), key(&b), "{s:?}");
+            assert_eq!(a.busy_ns.len(), b.busy_ns.len(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn per_thread_contexts_are_isolated() {
+        let team = Team::new(4);
+        let n = 5000;
+        let collected = Mutex::new(Vec::<usize>::new());
+        team.run_ctx(
+            n,
+            opts(4, Schedule::Dynamic, 17, false),
+            |_tid| Vec::<usize>::new(),
+            |ctx, r| {
+                ctx.extend(r.clone());
+                collected.lock().unwrap().extend(r);
+            },
+        );
+        let mut v = collected.into_inner().unwrap();
+        v.sort_unstable();
+        assert_eq!(v, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawns_once_and_never_again() {
+        let before = os_threads_spawned();
+        let team = Team::new(4);
+        // Other tests may spawn their own teams concurrently, so the
+        // global counter only admits a lower bound.
+        assert!(os_threads_spawned() - before >= 3);
+        for _ in 0..50 {
+            team.run(1000, opts(4, Schedule::Dynamic, 64, false), |r| {
+                std::hint::black_box(r.len());
+            });
+        }
+        // 50 loops, zero additional OS threads (other tests may spawn
+        // their own teams concurrently, so only assert on this team).
+        assert_eq!(team.spawned_workers(), 3);
+    }
+
+    #[test]
+    fn single_thread_team_never_spawns() {
+        let team = Team::new(1);
+        team.run(100, ParallelOpts::default(), |r| {
+            std::hint::black_box(r.len());
+        });
+        assert_eq!(team.spawned_workers(), 0);
+    }
+
+    #[test]
+    fn opts_threads_clamped_to_team_width() {
+        let team = Team::new(2);
+        let n = 4097;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let stats = team.run(n, opts(8, Schedule::Static, 64, true), |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(stats.busy_ns.len(), 2);
+    }
+
+    #[test]
+    fn zero_length_loop_is_noop() {
+        let team = Team::new(2);
+        let stats = team.run(0, opts(2, Schedule::Dynamic, 64, false), |_r| {
+            panic!("must not run")
+        });
+        assert_eq!(stats.total_ns(), 0);
+    }
+
+    #[test]
+    fn record_collects_chunk_costs() {
+        let team = Team::new(2);
+        let stats = team.run(1000, opts(2, Schedule::Dynamic, 100, true), |r| {
+            std::hint::black_box(r.sum::<usize>());
+        });
+        let total: usize = stats.chunks.iter().map(|c| c.len).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(stats.busy_ns.len(), 2);
+        assert!(stats.critical_ns() <= stats.total_ns());
+    }
+
+    #[test]
+    fn team_survives_worker_panic() {
+        let team = Team::new(2);
+        let hit = catch_unwind(AssertUnwindSafe(|| {
+            team.run(100, opts(2, Schedule::Static, 1, false), |r| {
+                if r.start == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err());
+        // The team is still usable after the panic round-trip.
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        team.run(n, opts(2, Schedule::Dynamic, 64, false), |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_same_team_dispatch_panics_not_deadlocks() {
+        let team = Team::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            team.run(10, opts(2, Schedule::Static, 1, false), |_r| {
+                // Illegal: a multi-threaded loop on the same team from
+                // inside a job body.
+                team.run(10, opts(2, Schedule::Static, 1, false), |_r2| {});
+            });
+        }));
+        assert!(result.is_err(), "nested dispatch must panic, not hang");
+        // The team survives and still works.
+        let n = 100;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        team.run(n, opts(2, Schedule::Dynamic, 8, false), |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_mut_writes_every_slot_once() {
+        let team = Team::new(4);
+        let mut data = vec![0u64; 9001];
+        team.run_disjoint_mut(&mut data, opts(4, Schedule::Guided, 32, false), |r, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x += (r.start + k) as u64 + 1;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64 + 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn exec_dispatches_both_paths_identically() {
+        let team = Team::new(3);
+        for exec in [Exec::scoped(), Exec::team(&team)] {
+            let n = 3000;
+            let mut out = vec![0u32; n];
+            exec.run_disjoint_mut(&mut out, opts(3, Schedule::Dynamic, 128, false), |r, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (r.start + k) as u32 * 2;
+                }
+            });
+            assert!(out.iter().enumerate().all(|(i, &x)| x == i as u32 * 2));
+        }
+        assert!(Exec::team(&team).is_team());
+        assert!(!Exec::scoped().is_team());
+    }
+}

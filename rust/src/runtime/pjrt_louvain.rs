@@ -12,12 +12,13 @@ use super::executor::MoveExecutor;
 use super::tile::TileBuilder;
 use crate::gpusim::nulouvain::{pick_less_active, NuParams};
 use crate::graph::Csr;
-use crate::louvain::aggregation::aggregate_csr;
+use crate::louvain::aggregation::{aggregate_csr_with, AggScratch};
 use crate::louvain::dendrogram;
 use crate::louvain::hashtable::TablePool;
 use crate::louvain::modularity::modularity;
 use crate::louvain::params::{LouvainParams, TableKind};
 use crate::louvain::renumber::renumber_communities;
+use crate::parallel::team::Exec;
 use anyhow::Result;
 use std::time::Instant;
 
@@ -67,6 +68,10 @@ impl<'e> PjrtLouvain<'e> {
         let dispatches0 = self.executor.dispatches.get();
         let mut owned: Option<Csr> = None;
         let mut tau = p.tolerance;
+        // CPU-side aggregation resources, hoisted out of the pass loop
+        // and reused (the pass-workspace contract).
+        let mut agg_pool: Option<TablePool> = None;
+        let mut agg_scratch = AggScratch::new();
 
         for pass in 0..p.max_passes {
             let gp: &Csr = owned.as_ref().unwrap_or(g);
@@ -123,9 +128,12 @@ impl<'e> PjrtLouvain<'e> {
                 break;
             }
             // Aggregation stays on the coordinator (CPU CSR path).
-            let pool = TablePool::new(TableKind::FarKv, n_comm, 1);
+            let pool = TablePool::ensure(&mut agg_pool, TableKind::FarKv, n_comm, 1);
             let lp = LouvainParams::default();
-            owned = Some(aggregate_csr(gp, &membership, n_comm, &pool, &lp).graph);
+            owned = Some(
+                aggregate_csr_with(gp, &membership, n_comm, pool, &lp, Exec::scoped(), &mut agg_scratch)
+                    .graph,
+            );
             tau /= p.tolerance_drop;
         }
 
