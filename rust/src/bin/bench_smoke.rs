@@ -1,15 +1,18 @@
-//! `bench_smoke` — the PR-1 perf-trajectory seed runner.
+//! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
+//! cells, PR 2 dynamic cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
-//! threads (warmup + repeats, median) and writes a `BENCH_PR1.json`
-//! with edges/sec per cell — the fixed yardstick future PRs compare
-//! against.  Hand-rolled JSON (the offline registry has no serde).
+//! threads (warmup + repeats, median) and — since PR 2 — replays a
+//! 10-batch / 1%-churn dynamic timeline per [`SeedStrategy`], writing a
+//! `BENCH_PR2.json` with edges/sec per cell — the fixed yardstick
+//! future PRs compare against.  Hand-rolled JSON (the offline registry
+//! has no serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR1.json
+//! bench_smoke [OUT.json]          # default BENCH_PR2.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! ```
@@ -19,13 +22,15 @@
 //! `edges_per_sec` fields:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR1_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR1.json
+//! git stash && cargo bench-smoke BENCH_PR2_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR2.json
 //! ```
 
 use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::dynamic::{churn_timeline, replay_timeline, summarize};
 use gve_louvain::coordinator::metrics::{edges_per_sec, median};
 use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -33,6 +38,9 @@ use std::time::Instant;
 /// Base scale before `GVE_BENCH_SCALE` shifting (2^13 vertices).
 const BASE_SCALE: i32 = 13;
 const THREADS: [usize; 2] = [1, 4];
+/// Dynamic scenario shape (PR 2): batches per timeline, churn fraction.
+const DYN_BATCHES: usize = 10;
+const DYN_FRAC: f64 = 0.01;
 
 struct Cell {
     family: &'static str,
@@ -46,14 +54,24 @@ struct Cell {
     spawned_workers: usize,
 }
 
+struct DynCell {
+    strategy: &'static str,
+    threads: usize,
+    batches: usize,
+    median_batch_ns: u64,
+    edges_per_sec: f64,
+    final_modularity: f64,
+    mean_affected: f64,
+}
+
 /// Median via the crate-wide convention (`coordinator::metrics`), so
-/// `BENCH_PR1.json` uses the same statistic as every other bench figure.
+/// `BENCH_PR2.json` uses the same statistic as every other bench figure.
 fn median_ns(samples: &[u64]) -> u64 {
     median(&samples.iter().map(|&x| x as f64).collect::<Vec<_>>()) as u64
 }
 
 fn main() {
-    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR1.json".into());
+    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR2.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -108,9 +126,45 @@ fn main() {
         }
     }
 
+    // --- Dynamic scenario (PR 2): one web-family churn timeline per
+    // thread count, replayed per seeding strategy.  edges/sec is the
+    // sustained per-batch throughput (final |E| over the median batch
+    // wall time).
+    let mut dyn_cells: Vec<DynCell> = Vec::new();
+    {
+        let g0 = generate(GraphFamily::Web, scale, seed);
+        let tl = churn_timeline(&g0, DYN_BATCHES, DYN_FRAC, seed);
+        let final_edges = tl.graphs.last().map(|g| g.num_edges()).unwrap_or(0);
+        for threads in THREADS {
+            let params = LouvainParams::with_threads(threads);
+            let cells = replay_timeline(&g0, &tl, &SeedStrategy::ALL, &params);
+            for s in summarize(&cells) {
+                let cell = DynCell {
+                    strategy: s.strategy.name(),
+                    threads,
+                    batches: s.batches,
+                    median_batch_ns: s.median_wall_ns,
+                    edges_per_sec: edges_per_sec(final_edges, s.median_wall_ns),
+                    final_modularity: s.final_modularity,
+                    mean_affected: s.mean_affected,
+                };
+                eprintln!(
+                    "dyn {:>15} t={} {:>12} ns/batch  {:>10.0} e/s  Q={:.4}  affected~{:.0}",
+                    cell.strategy,
+                    cell.threads,
+                    cell.median_batch_ns,
+                    cell.edges_per_sec,
+                    cell.final_modularity,
+                    cell.mean_affected,
+                );
+                dyn_cells.push(cell);
+            }
+        }
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr1_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr2_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -134,7 +188,29 @@ fn main() {
             comma
         );
     }
-    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"dynamic\": {{\"family\": \"web\", \"batches\": {DYN_BATCHES}, \"frac\": {DYN_FRAC}, \"results\": ["
+    );
+    for (i, c) in dyn_cells.iter().enumerate() {
+        let comma = if i + 1 < dyn_cells.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"strategy\": \"{}\", \"threads\": {}, \"batches\": {}, \
+             \"median_batch_ns\": {}, \"edges_per_sec\": {:.1}, \
+             \"final_modularity\": {:.6}, \"mean_affected\": {:.1}}}{}",
+            c.strategy,
+            c.threads,
+            c.batches,
+            c.median_batch_ns,
+            c.edges_per_sec,
+            c.final_modularity,
+            c.mean_affected,
+            comma
+        );
+    }
+    let _ = writeln!(json, "  ]}}");
     let _ = writeln!(json, "}}");
 
     std::fs::write(&out_path, &json).unwrap_or_else(|e| {

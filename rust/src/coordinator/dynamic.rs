@@ -1,0 +1,169 @@
+//! Batch-timeline replay: the dynamic-graph counterpart of
+//! [`runner::compare_on_graph`](super::runner::compare_on_graph).
+//!
+//! A churn timeline (a start graph plus a sequence of
+//! [`EdgeBatch`]es, each ~`frac` of the edges) is replayed once per
+//! [`SeedStrategy`]; every batch yields a [`BatchCell`] with the
+//! measured wall time, modularity, pass count and seeded-affected
+//! count, so reports can show per-batch runtime vs. full recompute —
+//! the Fig-style comparison of arXiv:2301.12390 on this testbed's
+//! planted graphs.
+
+use crate::graph::delta::{DeltaScratch, EdgeBatch};
+use crate::graph::generators::churn_batch;
+use crate::graph::Csr;
+use crate::louvain::dynamic::{DynamicLouvain, SeedStrategy};
+use crate::louvain::params::LouvainParams;
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::team::Exec;
+use std::time::Instant;
+
+/// A generated churn workload: `graphs[i]` is the state after
+/// `batches[i]` was applied (all strategies replay identical inputs).
+pub struct ChurnTimeline {
+    pub batches: Vec<EdgeBatch>,
+    pub graphs: Vec<Csr>,
+}
+
+/// Generate `n_batches` sequential churn batches of `frac` mutated
+/// edges each, starting from `g0`.  Deterministic in `(g0, frac, seed)`.
+pub fn churn_timeline(g0: &Csr, n_batches: usize, frac: f64, seed: u64) -> ChurnTimeline {
+    let mut batches = Vec::with_capacity(n_batches);
+    let mut graphs = Vec::with_capacity(n_batches);
+    let mut scratch = DeltaScratch::new();
+    let mut cur = g0.clone();
+    for i in 0..n_batches {
+        let b = churn_batch(&cur, frac, seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut next = Csr::default();
+        cur.apply_batch_into(&b, &mut scratch, &mut next, ParallelOpts::default(), Exec::scoped());
+        cur = next;
+        graphs.push(cur.clone());
+        batches.push(b);
+    }
+    ChurnTimeline { batches, graphs }
+}
+
+/// One (strategy × batch) measurement.
+#[derive(Clone, Debug)]
+pub struct BatchCell {
+    pub strategy: SeedStrategy,
+    /// 1-based batch index within the timeline.
+    pub batch: usize,
+    /// Wall time of the update, including screening + seeding overhead.
+    pub wall_ns: u64,
+    pub modularity: f64,
+    pub passes: usize,
+    pub affected_seeded: usize,
+    /// Directed edge slots of the graph at this point.
+    pub edges: usize,
+}
+
+/// Replay `timeline` once per strategy with a fresh [`DynamicLouvain`]
+/// (initial full run excluded from the cells — every strategy pays it
+/// identically).
+pub fn replay_timeline(
+    g0: &Csr,
+    timeline: &ChurnTimeline,
+    strategies: &[SeedStrategy],
+    params: &LouvainParams,
+) -> Vec<BatchCell> {
+    let mut cells = Vec::with_capacity(strategies.len() * timeline.batches.len());
+    for &strategy in strategies {
+        let mut dl = DynamicLouvain::new(params.clone(), strategy);
+        dl.run_initial(g0);
+        for (i, batch) in timeline.batches.iter().enumerate() {
+            let g = &timeline.graphs[i];
+            let t0 = Instant::now();
+            let out = dl.update(g, batch);
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            cells.push(BatchCell {
+                strategy,
+                batch: i + 1,
+                wall_ns,
+                modularity: out.result.modularity,
+                passes: out.result.passes,
+                affected_seeded: out.affected_seeded,
+                edges: g.num_edges(),
+            });
+        }
+    }
+    cells
+}
+
+/// Per-strategy aggregate over a replay's cells.
+#[derive(Clone, Debug)]
+pub struct StrategySummary {
+    pub strategy: SeedStrategy,
+    pub batches: usize,
+    pub total_wall_ns: u64,
+    pub median_wall_ns: u64,
+    /// Modularity after the final batch.
+    pub final_modularity: f64,
+    pub mean_affected: f64,
+}
+
+/// Aggregate `cells` per strategy (median via the crate-wide metric).
+pub fn summarize(cells: &[BatchCell]) -> Vec<StrategySummary> {
+    use super::metrics::median;
+    let mut out = Vec::new();
+    for strategy in SeedStrategy::ALL {
+        let mine: Vec<&BatchCell> = cells.iter().filter(|c| c.strategy == strategy).collect();
+        if mine.is_empty() {
+            continue;
+        }
+        let walls: Vec<f64> = mine.iter().map(|c| c.wall_ns as f64).collect();
+        out.push(StrategySummary {
+            strategy,
+            batches: mine.len(),
+            total_wall_ns: mine.iter().map(|c| c.wall_ns).sum(),
+            median_wall_ns: median(&walls) as u64,
+            final_modularity: mine.last().unwrap().modularity,
+            mean_affected: mine.iter().map(|c| c.affected_seeded as f64).sum::<f64>()
+                / mine.len() as f64,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{generate, GraphFamily};
+
+    #[test]
+    fn timeline_is_deterministic_and_consistent() {
+        let g0 = generate(GraphFamily::Web, 9, 21);
+        let a = churn_timeline(&g0, 3, 0.01, 5);
+        let b = churn_timeline(&g0, 3, 0.01, 5);
+        assert_eq!(a.graphs, b.graphs);
+        assert_eq!(a.batches.len(), 3);
+        for g in &a.graphs {
+            g.validate().unwrap();
+            assert!(g.is_symmetric());
+            assert_eq!(g.num_vertices(), g0.num_vertices());
+        }
+        // Batches actually mutate the graph.
+        assert_ne!(a.graphs[0], g0);
+        assert_ne!(a.graphs[1], a.graphs[0]);
+    }
+
+    #[test]
+    fn replay_produces_cells_for_every_strategy_and_batch() {
+        let g0 = generate(GraphFamily::Web, 9, 23);
+        let tl = churn_timeline(&g0, 3, 0.01, 9);
+        let cells = replay_timeline(&g0, &tl, &SeedStrategy::ALL, &LouvainParams::default());
+        assert_eq!(cells.len(), 9);
+        for c in &cells {
+            assert!(c.modularity > 0.5, "{:?} batch {} q={}", c.strategy, c.batch, c.modularity);
+            assert!(c.wall_ns > 0);
+            assert!(c.affected_seeded <= g0.num_vertices());
+        }
+        let summaries = summarize(&cells);
+        assert_eq!(summaries.len(), 3);
+        let q_full = summaries[0].final_modularity;
+        for s in &summaries {
+            assert_eq!(s.batches, 3);
+            assert!((s.final_modularity - q_full).abs() < 0.02, "{:?}", s.strategy);
+        }
+    }
+}

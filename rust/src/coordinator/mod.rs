@@ -6,10 +6,13 @@
 //! * [`config`] — a TOML-subset parser for `configs/*.toml` experiment
 //!   definitions (offline registry has no serde/toml);
 //! * [`runner`] — cross-system comparison runs with repeats;
+//! * [`dynamic`] — churn-timeline replay: per-batch runtime + quality
+//!   of the dynamic seeding strategies vs. full recompute (PR 2);
 //! * [`metrics`] — stopwatch + aggregate helpers (geomean et al.);
 //! * [`report`] — markdown / CSV emitters used by benches and the CLI.
 
 pub mod config;
+pub mod dynamic;
 pub mod metrics;
 pub mod report;
 pub mod runner;

@@ -252,15 +252,30 @@ impl HoleyCsr {
         self.compact_with(ParallelOpts::default(), Exec::scoped()).0
     }
 
-    /// Parallel compaction: prefix-sum over the *used* degrees, then a
-    /// chunked row copy (disjoint target regions per vertex chunk).
-    /// The paper's aggregation is parallel end to end; the stats feed
-    /// the scaling replay.
+    /// Parallel compaction into a fresh [`Csr`] — see [`Self::compact_into`].
     pub fn compact_with(&self, opts: ParallelOpts, exec: Exec) -> (Csr, WorkStats) {
+        let mut out = Csr::default();
+        let stats = self.compact_into(&mut out, opts, exec);
+        (out, stats)
+    }
+
+    /// Parallel compaction into a caller-owned [`Csr`]: prefix-sum over
+    /// the *used* degrees, then a chunked row copy (disjoint target
+    /// regions per vertex chunk).  The paper's aggregation is parallel
+    /// end to end; the stats feed the scaling replay.
+    ///
+    /// `out`'s vectors are resized in place, so a workspace-owned
+    /// ping-pong buffer is reused across Louvain passes without
+    /// reallocating once sized by the largest pass (the last per-pass
+    /// allocation on the aggregation path, removed in PR 2).
+    pub fn compact_into(&self, out: &mut Csr, opts: ParallelOpts, exec: Exec) -> WorkStats {
         let n = self.num_vertices();
         // Used degree per vertex, then exclusive scan (the trailing 0
-        // slot becomes the grand total).
-        let mut offsets = vec![0usize; n + 1];
+        // slot becomes the grand total).  No clear() before the resize:
+        // the gather overwrites 0..n and only the trailing slot needs
+        // an explicit zero, so stale contents never leak.
+        out.offsets.resize(n + 1, 0);
+        out.offsets[n] = 0;
         {
             // Not recorded: the PR-0 gather was a serial loop, so the
             // Fig 16 replay expects exactly one recorded loop (the row
@@ -268,19 +283,21 @@ impl HoleyCsr {
             // dropped below anyway.
             let gather_opts = ParallelOpts { record: false, ..opts };
             let fill = &self.fill;
-            exec.run_disjoint_mut(&mut offsets[..n], gather_opts, |r, chunk| {
+            exec.run_disjoint_mut(&mut out.offsets[..n], gather_opts, |r, chunk| {
                 for (k, x) in chunk.iter_mut().enumerate() {
                     *x = fill[r.start + k].load(Ordering::Relaxed);
                 }
             });
         }
-        let total = exclusive_scan_exec(&mut offsets, opts.threads, exec);
-        let mut targets = vec![0u32; total];
-        let mut weights = vec![0f32; total];
-        let tp = RawSend(targets.as_mut_ptr());
-        let wp = RawSend(weights.as_mut_ptr());
-        let offs = &offsets;
-        let stats = exec.run(n, opts, move |range| {
+        let total = exclusive_scan_exec(&mut out.offsets, opts.threads, exec);
+        // resize (not clear+resize): every slot of 0..total is written
+        // by the row copy below, so only growth needs the zero-fill.
+        out.targets.resize(total, 0);
+        out.weights.resize(total, 0.0);
+        let tp = RawSend(out.targets.as_mut_ptr());
+        let wp = RawSend(out.weights.as_mut_ptr());
+        let offs = &out.offsets;
+        exec.run(n, opts, move |range| {
             let (tp, wp) = (tp, wp);
             for v in range {
                 let (ts, ws) = self.edges(v);
@@ -291,8 +308,7 @@ impl HoleyCsr {
                     std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
                 }
             }
-        });
-        (Csr { offsets, targets, weights }, stats)
+        })
     }
 }
 
@@ -407,6 +423,46 @@ mod tests {
         assert_eq!(serial, par);
         let (scoped, _) = h.compact_with(opts, Exec::scoped());
         assert_eq!(serial, scoped);
+    }
+
+    #[test]
+    fn compact_into_reuses_storage_and_matches_fresh() {
+        // Big holey CSR sizes the output once; a smaller one compacted
+        // into the same Csr must not reallocate (the ping-pong pass
+        // contract) and must equal a fresh compaction.
+        let big = HoleyCsr::with_offsets((0..=100).map(|i| i * 4).collect());
+        for v in 0..100usize {
+            for e in 0..(v % 4) {
+                big.push_edge(v, e as u32, e as f32);
+            }
+        }
+        let mut out = Csr::default();
+        big.compact_into(&mut out, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out, big.compact());
+        let (op, tp, wp) = (out.offsets.as_ptr(), out.targets.as_ptr(), out.weights.as_ptr());
+
+        let small = HoleyCsr::with_offsets((0..=20).map(|i| i * 3).collect());
+        for v in 0..20usize {
+            small.push_edge(v, (v % 5) as u32, 1.5);
+        }
+        big_stale_guard(&mut out); // poison so stale reuse would show
+        small.compact_into(&mut out, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out, small.compact());
+        assert_eq!(out.offsets.as_ptr(), op, "offsets reallocated on shrink");
+        assert_eq!(out.targets.as_ptr(), tp, "targets reallocated on shrink");
+        assert_eq!(out.weights.as_ptr(), wp, "weights reallocated on shrink");
+        out.validate().unwrap();
+    }
+
+    /// Overwrite `out`'s live slots with sentinel garbage (keeps the
+    /// allocations) so the next compact_into must rewrite everything.
+    fn big_stale_guard(out: &mut Csr) {
+        for x in out.offsets.iter_mut() {
+            *x = usize::MAX / 2;
+        }
+        for t in out.targets.iter_mut() {
+            *t = u32::MAX;
+        }
     }
 
     #[test]

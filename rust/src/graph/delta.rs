@@ -1,0 +1,419 @@
+//! Batch edge updates for evolving graphs: [`EdgeBatch`] +
+//! [`Csr::apply_batch`].
+//!
+//! The paper evaluates GVE-Louvain on frozen snapshots; the ROADMAP
+//! north star is a service watching graphs that *change*.  This module
+//! is the mutation half of the PR-2 dynamic subsystem (the seeding half
+//! lives in [`louvain::dynamic`](crate::louvain::dynamic)): a batch of
+//! undirected insertions and deletions is applied to a CSR in parallel,
+//! producing the updated CSR without touching untouched rows'
+//! *contents* (their slots are copied, not re-derived).
+//!
+//! ## Batch semantics
+//!
+//! * The vertex set is fixed: every endpoint must be `< |V|` (growing
+//!   the graph is a separate concern — see ROADMAP).
+//! * **Insertion** `(u, v, w)` adds `w` to the edge's weight, creating
+//!   the edge if absent — the same duplicate-merge convention as
+//!   [`GraphBuilder`](super::builder::GraphBuilder).  Both directions
+//!   are updated (a self-loop lands once, builder-style).
+//! * **Deletion** `(u, v)` removes the edge entirely (both directions);
+//!   deleting an absent edge is a no-op.
+//! * Within one batch, deletions apply *before* insertions on the same
+//!   pair: delete + insert replaces the weight rather than accumulating
+//!   into the old one.
+//!
+//! ## Pipeline (all on the team runtime via [`Exec`])
+//!
+//! 1. Mirror the batch into directed per-endpoint ops and sort by
+//!    `(src, dst)` — serial, O(B log B) in the batch size only.
+//! 2. Per-vertex op counts via the parallel
+//!    [`scatter_count`](crate::parallel::scatter::scatter_count)
+//!    helper, prefix-summed into op ranges.
+//! 3. Per-vertex capacity upper bounds (`degree + ops`) → exclusive
+//!    scan → a reused *holey* CSR, exactly the aggregation-phase
+//!    machinery ([`AggScratch`](crate::louvain::aggregation::AggScratch)
+//!    style: [`DeltaScratch`] keeps every buffer across batches).
+//! 4. Chunked per-vertex sorted merge of the old row with its ops into
+//!    the holey CSR (rows stay target-sorted, the crate-wide contract).
+//! 5. [`HoleyCsr::compact_into`](super::csr::HoleyCsr::compact_into)
+//!    squeezes out deletion holes into the output CSR.
+
+use super::csr::{Csr, HoleyCsr};
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::scan::exclusive_scan_exec;
+use crate::parallel::scatter::scatter_count;
+use crate::parallel::team::Exec;
+use crate::{EdgeWeight, VertexId};
+
+/// A batch of undirected edge mutations against a fixed vertex set.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeBatch {
+    /// Undirected weight additions (edge created if absent).
+    pub insertions: Vec<(VertexId, VertexId, EdgeWeight)>,
+    /// Undirected removals (no-op if absent).
+    pub deletions: Vec<(VertexId, VertexId)>,
+}
+
+impl EdgeBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue an undirected insertion / weight addition.
+    pub fn insert(&mut self, u: VertexId, v: VertexId, w: EdgeWeight) {
+        self.insertions.push((u, v, w));
+    }
+
+    /// Queue an undirected deletion.
+    pub fn delete(&mut self, u: VertexId, v: VertexId) {
+        self.deletions.push((u, v));
+    }
+
+    /// Total queued operations (undirected count).
+    pub fn len(&self) -> usize {
+        self.insertions.len() + self.deletions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insertions.is_empty() && self.deletions.is_empty()
+    }
+}
+
+/// One directed mutation slot (internal: batches are mirrored like the
+/// builder mirrors undirected edges).
+#[derive(Clone, Copy, Debug)]
+struct DirectedOp {
+    src: VertexId,
+    dst: VertexId,
+    w: EdgeWeight,
+    del: bool,
+}
+
+/// Reusable batch-application scratch: directed op list, the op-count /
+/// capacity arrays and the holey merge target.  The first batch sizes
+/// everything; later batches reuse the allocations (the zero-allocation
+/// pass-workspace contract, extended to the mutation path).
+pub struct DeltaScratch {
+    ops: Vec<DirectedOp>,
+    src_keys: Vec<u32>,
+    op_off: Vec<usize>,
+    cap: Vec<usize>,
+    holey: HoleyCsr,
+}
+
+impl DeltaScratch {
+    pub fn new() -> Self {
+        Self {
+            ops: Vec::new(),
+            src_keys: Vec::new(),
+            op_off: Vec::new(),
+            cap: Vec::new(),
+            holey: HoleyCsr::with_offsets(vec![0]),
+        }
+    }
+}
+
+impl Default for DeltaScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Csr {
+    /// Apply `batch`, returning the updated graph (fresh scratch, fresh
+    /// output).  Convenience wrapper over [`Self::apply_batch_into`].
+    pub fn apply_batch(&self, batch: &EdgeBatch, opts: ParallelOpts, exec: Exec) -> Csr {
+        let mut out = Csr::default();
+        self.apply_batch_into(batch, &mut DeltaScratch::new(), &mut out, opts, exec);
+        out
+    }
+
+    /// Apply `batch` into `out`, reusing `scratch` across batches.
+    ///
+    /// See the [module docs](self) for semantics; panics if an endpoint
+    /// is out of range.  `out`'s storage is resized in place, so a
+    /// timeline replay allocates only while the graph grows.
+    pub fn apply_batch_into(
+        &self,
+        batch: &EdgeBatch,
+        scratch: &mut DeltaScratch,
+        out: &mut Csr,
+        opts: ParallelOpts,
+        exec: Exec,
+    ) {
+        let n = self.num_vertices();
+
+        // --- 1. Directed op list, sorted by (src, dst).
+        scratch.ops.clear();
+        scratch.src_keys.clear();
+        for &(u, v) in &batch.deletions {
+            assert!((u as usize) < n && (v as usize) < n, "deletion ({u},{v}) out of range (n={n})");
+            scratch.ops.push(DirectedOp { src: u, dst: v, w: 0.0, del: true });
+            if u != v {
+                scratch.ops.push(DirectedOp { src: v, dst: u, w: 0.0, del: true });
+            }
+        }
+        for &(u, v, w) in &batch.insertions {
+            assert!((u as usize) < n && (v as usize) < n, "insertion ({u},{v}) out of range (n={n})");
+            scratch.ops.push(DirectedOp { src: u, dst: v, w, del: false });
+            if u != v {
+                scratch.ops.push(DirectedOp { src: v, dst: u, w, del: false });
+            }
+        }
+        // Stable sort: repeated insertions of one pair keep batch order
+        // in *both* mirrored (src, dst) groups, so the two directions
+        // sum their f32 weights in the same order and stay bit-equal.
+        scratch
+            .ops
+            .sort_by_key(|o| ((o.src as u64) << 32) | o.dst as u64);
+        scratch.src_keys.extend(scratch.ops.iter().map(|o| o.src));
+
+        let scan_opts = ParallelOpts { record: false, ..opts };
+
+        // --- 2. Per-vertex op ranges (scatter histogram → prefix sum).
+        scratch.op_off.clear();
+        scratch.op_off.resize(n + 1, 0);
+        scatter_count(&scratch.src_keys, &mut scratch.op_off[..n], scan_opts, exec);
+        exclusive_scan_exec(&mut scratch.op_off, opts.threads, exec);
+
+        // --- 3. Capacity upper bounds (degree + ops; deletions only
+        // ever shrink, so this never overflows the holey rows).
+        scratch.cap.clear();
+        scratch.cap.resize(n + 1, 0);
+        {
+            let op_off = &scratch.op_off;
+            exec.run_disjoint_mut(&mut scratch.cap[..n], scan_opts, |r, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    let v = r.start + k;
+                    *x = self.degree(v) + (op_off[v + 1] - op_off[v]);
+                }
+            });
+        }
+        exclusive_scan_exec(&mut scratch.cap, opts.threads, exec);
+        scratch.holey.reset_with_offsets(&mut scratch.cap);
+
+        // --- 4. Chunked sorted merge: old row × its ops.  Each vertex
+        // is owned by exactly one chunk, so its holey row fills in
+        // ascending target order.
+        {
+            let ops = &scratch.ops;
+            let op_off = &scratch.op_off;
+            let holey = &scratch.holey;
+            exec.run(n, scan_opts, |range| {
+                for v in range {
+                    let row_ops = &ops[op_off[v]..op_off[v + 1]];
+                    let (ts, ws) = self.edges(v);
+                    if row_ops.is_empty() {
+                        for (&t, &w) in ts.iter().zip(ws) {
+                            holey.push_edge(v, t, w);
+                        }
+                        continue;
+                    }
+                    let (mut ei, mut oi) = (0usize, 0usize);
+                    while ei < ts.len() || oi < row_ops.len() {
+                        if oi >= row_ops.len() || (ei < ts.len() && ts[ei] < row_ops[oi].dst) {
+                            holey.push_edge(v, ts[ei], ws[ei]);
+                            ei += 1;
+                            continue;
+                        }
+                        // All ops on one target, plus the old slot if present.
+                        let t = row_ops[oi].dst;
+                        let mut deleted = false;
+                        let mut added = 0.0f32;
+                        let mut has_insert = false;
+                        while oi < row_ops.len() && row_ops[oi].dst == t {
+                            if row_ops[oi].del {
+                                deleted = true;
+                            } else {
+                                added += row_ops[oi].w;
+                                has_insert = true;
+                            }
+                            oi += 1;
+                        }
+                        let old = if ei < ts.len() && ts[ei] == t {
+                            let w = ws[ei];
+                            ei += 1;
+                            Some(w)
+                        } else {
+                            None
+                        };
+                        // Deletions apply first: delete + insert replaces.
+                        let base = if deleted { None } else { old };
+                        match (base, has_insert) {
+                            (Some(b), true) => holey.push_edge(v, t, b + added),
+                            (Some(b), false) => holey.push_edge(v, t, b),
+                            (None, true) => holey.push_edge(v, t, added),
+                            (None, false) => {} // pure delete (or absent)
+                        }
+                    }
+                }
+            });
+        }
+
+        // --- 5. Squeeze out the deletion holes.
+        scratch.holey.compact_into(out, scan_opts, exec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::parallel::team::Team;
+    use std::collections::BTreeMap;
+
+    /// Reference implementation: replay the batch on an edge map and
+    /// rebuild the CSR from scratch.
+    fn rebuild(g: &Csr, batch: &EdgeBatch) -> Csr {
+        let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+        for v in 0..g.num_vertices() {
+            for (t, w) in g.neighbours(v) {
+                map.insert((v as u32, t), w);
+            }
+        }
+        for &(u, v) in &batch.deletions {
+            map.remove(&(u, v));
+            map.remove(&(v, u));
+        }
+        for &(u, v, w) in &batch.insertions {
+            *map.entry((u, v)).or_insert(0.0) += w;
+            if u != v {
+                *map.entry((v, u)).or_insert(0.0) += w;
+            }
+        }
+        let mut b = GraphBuilder::new(g.num_vertices());
+        for (&(u, v), &w) in &map {
+            b.push(u, v, w);
+        }
+        b.build_directed()
+    }
+
+    #[test]
+    fn empty_batch_is_identity() {
+        let g = generate(GraphFamily::Web, 8, 3);
+        let out = g.apply_batch(&EdgeBatch::new(), ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn insert_delete_update_matches_rebuild() {
+        // 0-1, 1-2, 0-2 triangle; delete the bridge, re-weight an edge,
+        // add a new one, and delete+reinsert another.
+        let g = GraphBuilder::new(4)
+            .edge(0, 1, 1.0)
+            .edge(1, 2, 2.0)
+            .edge(0, 2, 3.0)
+            .build_undirected();
+        let mut b = EdgeBatch::new();
+        b.delete(1, 2);
+        b.insert(0, 1, 4.0); // weight update: 1 + 4
+        b.insert(2, 3, 1.0); // new edge
+        b.delete(0, 2);
+        b.insert(0, 2, 7.0); // delete + insert replaces: 7, not 10
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        out.validate().unwrap();
+        assert!(out.is_symmetric());
+        assert_eq!(out, rebuild(&g, &b));
+        assert_eq!(out.edges(0).0, &[1, 2]);
+        assert_eq!(out.edges(0).1, &[5.0, 7.0]);
+        assert_eq!(out.edges(3).0, &[2]);
+        assert_eq!(out.degree(1), 1); // 1-2 gone
+    }
+
+    #[test]
+    fn random_batches_match_rebuild_across_families() {
+        use crate::parallel::prng::Xoshiro256;
+        for f in GraphFamily::ALL {
+            let g = generate(f, 9, 11);
+            let n = g.num_vertices();
+            let mut rng = Xoshiro256::new(77);
+            let mut b = EdgeBatch::new();
+            // Deletions of existing edges (integer weights keep f32 sums exact).
+            for _ in 0..40 {
+                let e = rng.below(g.num_edges() as u64) as usize;
+                let v = g.offsets.partition_point(|&o| o <= e) - 1;
+                b.delete(v as u32, g.targets[e]);
+            }
+            // Random insertions, including duplicates within the batch.
+            for _ in 0..40 {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                b.insert(u, v, 2.0);
+            }
+            let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+            out.validate().unwrap();
+            assert_eq!(out, rebuild(&g, &b), "{f:?}");
+            assert!(out.is_symmetric(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_and_scratch_is_reused() {
+        let g = generate(GraphFamily::Social, 9, 5);
+        let mut b = EdgeBatch::new();
+        b.insert(1, 2, 1.0);
+        b.insert(10, 200, 3.0);
+        b.delete(0, 1);
+        let serial = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+
+        let team = Team::new(4);
+        let opts = ParallelOpts { threads: 4, chunk: 64, ..Default::default() };
+        let mut scratch = DeltaScratch::new();
+        let mut out = Csr::default();
+        g.apply_batch_into(&b, &mut scratch, &mut out, opts, Exec::team(&team));
+        assert_eq!(out, serial);
+
+        // A second (smaller) batch through the same scratch + output.
+        let tp = out.targets.as_ptr();
+        let mut b2 = EdgeBatch::new();
+        b2.delete(1, 2);
+        let g2 = out.clone();
+        g2.apply_batch_into(&b2, &mut scratch, &mut out, opts, Exec::team(&team));
+        assert_eq!(out, g2.apply_batch(&b2, ParallelOpts::default(), Exec::scoped()));
+        assert_eq!(out.targets.as_ptr(), tp, "output reallocated on a shrinking batch");
+    }
+
+    #[test]
+    fn repeated_inserts_sum_bit_identically_in_both_directions() {
+        // Non-associative f32 weights: the stable op sort keeps batch
+        // order in both mirrored groups, so the two directed slots of
+        // the pair must stay bit-equal (not just within tolerance).
+        let g = GraphBuilder::new(3).edge(0, 1, 1.0).build_undirected();
+        let mut b = EdgeBatch::new();
+        b.insert(0, 2, 0.1);
+        b.insert(0, 2, 0.2);
+        b.insert(0, 2, 0.3);
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        let w_fwd = out.edges(0).1[out.edges(0).0.iter().position(|&t| t == 2).unwrap()];
+        let w_rev = out.edges(2).1[out.edges(2).0.iter().position(|&t| t == 0).unwrap()];
+        assert_eq!(w_fwd.to_bits(), w_rev.to_bits());
+    }
+
+    #[test]
+    fn self_loops_insert_and_delete_once() {
+        let g = GraphBuilder::new(2).edge(0, 1, 1.0).build_undirected();
+        let mut b = EdgeBatch::new();
+        b.insert(0, 0, 5.0);
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out.edges(0).0, &[0, 1]);
+        assert_eq!(out.edges(0).1, &[5.0, 1.0]);
+        let mut b2 = EdgeBatch::new();
+        b2.delete(0, 0);
+        let back = out.apply_batch(&b2, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn deleting_absent_edges_is_noop() {
+        let g = generate(GraphFamily::Road, 8, 2);
+        let mut b = EdgeBatch::new();
+        b.delete(0, (g.num_vertices() - 1) as u32);
+        b.delete(1, 1);
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        // Those pairs are (almost surely) absent in a lattice; if they
+        // exist the rebuild oracle still agrees.
+        assert_eq!(out, rebuild(&g, &b));
+    }
+}

@@ -231,6 +231,49 @@ pub fn kmer(n: usize, seed: u64) -> Csr {
     b.build_undirected()
 }
 
+/// Churn workload generator (PR 2, dynamic subsystem): a batch mutating
+/// roughly `frac` of `g`'s undirected edges **in total** — half uniform
+/// deletions of existing edges, half uniform random unit-weight
+/// insertions, `frac / 2` each side (the naive-dynamic /
+/// delta-screening evaluation protocol of arXiv:2301.12390).
+/// Deterministic in `(g, frac, seed)`.
+pub fn churn_batch(g: &Csr, frac: f64, seed: u64) -> super::delta::EdgeBatch {
+    use std::collections::HashSet;
+    let mut rng = Xoshiro256::new(seed ^ 0xC4A2_D17A);
+    let n = g.num_vertices();
+    let slots = g.num_edges();
+    let per_side = (((slots / 2) as f64 * frac * 0.5).round() as usize).max(1);
+    let mut batch = super::delta::EdgeBatch::new();
+
+    // Deletions: sample directed slots, canonicalize to unordered
+    // pairs, dedupe.  Bounded tries so pathological graphs terminate.
+    let mut seen: HashSet<(u32, u32)> = HashSet::new();
+    let mut tries = 0usize;
+    while slots > 0 && batch.deletions.len() < per_side && tries < per_side * 20 {
+        tries += 1;
+        let e = rng.below(slots as u64) as usize;
+        let v = g.offsets.partition_point(|&o| o <= e) - 1;
+        let t = g.targets[e] as usize;
+        let (a, b) = if v <= t { (v as u32, t as u32) } else { (t as u32, v as u32) };
+        if seen.insert((a, b)) {
+            batch.delete(a, b);
+        }
+    }
+
+    // Insertions: uniform random non-self pairs (an existing pair gets
+    // its weight bumped — still churn, and `apply_batch` handles it).
+    let mut itries = 0usize;
+    while n > 1 && batch.insertions.len() < per_side && itries < per_side * 20 {
+        itries += 1;
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u != v {
+            batch.insert(u, v, 1.0);
+        }
+    }
+    batch
+}
+
 /// RMAT(a=0.57, b=0.19, c=0.19, d=0.05) with `2^scale` vertices and
 /// `edgefactor · 2^scale` undirected edges.
 pub fn rmat(scale: u32, edgefactor: usize, seed: u64) -> Csr {
@@ -312,6 +355,40 @@ mod tests {
         let median = degs[degs.len() / 2];
         let max = *degs.last().unwrap();
         assert!(max > 8 * median.max(1), "no skew: median={median} max={max}");
+    }
+
+    #[test]
+    fn churn_batch_is_deterministic_and_sized() {
+        let g = generate(GraphFamily::Web, 10, 4);
+        let a = churn_batch(&g, 0.01, 9);
+        let b = churn_batch(&g, 0.01, 9);
+        assert_eq!(a.insertions, b.insertions);
+        assert_eq!(a.deletions, b.deletions);
+        let c = churn_batch(&g, 0.01, 10);
+        assert!(a.insertions != c.insertions || a.deletions != c.deletions);
+        // frac is the TOTAL churn: ~0.5% of undirected edges per side.
+        let per_side = g.num_edges() / 2 / 200;
+        assert!(a.deletions.len() >= per_side / 2 && a.deletions.len() <= per_side * 2);
+        assert!(a.insertions.len() >= per_side / 2 && a.insertions.len() <= per_side * 2);
+        let total = a.deletions.len() + a.insertions.len();
+        let budget = g.num_edges() / 2 / 100;
+        assert!(total >= budget / 2 && total <= budget * 2, "total churn {total} vs budget {budget}");
+        // Deletions name existing edges.
+        for &(u, v) in &a.deletions {
+            assert!(g.edges(u as usize).0.contains(&v), "deletion ({u},{v}) not in graph");
+        }
+    }
+
+    #[test]
+    fn churn_batch_applies_cleanly() {
+        use crate::parallel::pool::ParallelOpts;
+        use crate::parallel::team::Exec;
+        let g = generate(GraphFamily::Social, 9, 6);
+        let batch = churn_batch(&g, 0.02, 1);
+        let out = g.apply_batch(&batch, ParallelOpts::default(), Exec::scoped());
+        out.validate().unwrap();
+        assert!(out.is_symmetric());
+        assert_eq!(out.num_vertices(), g.num_vertices());
     }
 
     #[test]

@@ -1,13 +1,19 @@
-//! Graph substrate: weighted CSR, holey CSR, builders, generators, IO.
+//! Graph substrate: weighted CSR, holey CSR, builders, generators,
+//! batch deltas, IO.
 //!
 //! The paper stores the input graph and every super-vertex graph in
 //! CSR; the aggregation phase writes into a *holey* CSR whose offsets
 //! over-estimate each super-vertex degree (Algorithm 3 / Fig 4).
+//! [`delta`] (PR 2) applies batches of edge insertions/deletions to a
+//! CSR in parallel — the mutation substrate of the dynamic-Louvain
+//! subsystem.
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod generators;
 pub mod io;
 pub mod properties;
 
 pub use csr::{Csr, HoleyCsr};
+pub use delta::{DeltaScratch, EdgeBatch};

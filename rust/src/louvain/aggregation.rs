@@ -17,9 +17,12 @@
 //! worker team is reused instead of spawning threads per sub-loop) and,
 //! for the CSR path, an [`AggScratch`] whose count arrays and holey
 //! CSRs are *logically shrunk* across passes instead of reallocated —
-//! the zero-allocation pass-workspace contract.  The plain wrappers
-//! keep the original spawn-per-loop, allocate-per-call signatures for
-//! baselines and tests.
+//! the zero-allocation pass-workspace contract.  [`aggregate_csr_into`]
+//! goes one step further and compacts the super-vertex graph into a
+//! caller-owned `Csr` (the pass loop's ping-pong pair), removing the
+//! last per-pass allocation on this path.  The plain wrappers keep the
+//! original spawn-per-loop, allocate-per-call signatures for baselines
+//! and tests.
 
 use super::hashtable::TablePool;
 use super::params::LouvainParams;
@@ -35,6 +38,14 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 /// Result of an aggregation phase.
 pub struct AggOutcome {
     pub graph: Csr,
+    pub counters: Counters,
+    pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
+}
+
+/// Result of an aggregation into a caller-owned output graph
+/// ([`aggregate_csr_into`]): everything of [`AggOutcome`] except the
+/// graph, which the caller already holds.
+pub struct AggInfo {
     pub counters: Counters,
     pub loops: Vec<(Schedule, Vec<ChunkRecord>)>,
 }
@@ -80,7 +91,7 @@ pub fn aggregate_csr(
 }
 
 /// CSR + prefix-sum aggregation (the adopted design) on `exec`,
-/// reusing `scratch` across calls.
+/// reusing `scratch` across calls and allocating a fresh output graph.
 pub fn aggregate_csr_with(
     g: &Csr,
     membership: &[u32],
@@ -90,6 +101,28 @@ pub fn aggregate_csr_with(
     exec: Exec,
     scratch: &mut AggScratch,
 ) -> AggOutcome {
+    let mut graph = Csr::default();
+    let info = aggregate_csr_into(g, membership, n_comm, pool, params, exec, scratch, &mut graph);
+    AggOutcome { graph, counters: info.counters, loops: info.loops }
+}
+
+/// CSR + prefix-sum aggregation into a caller-owned output graph: the
+/// pass loop hands in one slot of its ping-pong pair
+/// ([`LouvainWorkspace`](super::workspace::LouvainWorkspace)), so the
+/// super-vertex `Csr` is compacted in place and steady-state passes
+/// allocate nothing (PR 2 satellite; previously every pass built a
+/// fresh graph here).
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate_csr_into(
+    g: &Csr,
+    membership: &[u32],
+    n_comm: usize,
+    pool: &TablePool,
+    params: &LouvainParams,
+    exec: Exec,
+    scratch: &mut AggScratch,
+    out: &mut Csr,
+) -> AggInfo {
     let n = g.num_vertices();
     let opts = ParallelOpts {
         threads: params.threads,
@@ -192,21 +225,25 @@ pub fn aggregate_csr_with(
     counters.table_ops = ops.load(Ordering::Relaxed);
 
     // --- Compact + normalize row order (prefix-sum over used degrees,
-    // then chunked copy; both on `exec`).
-    let (mut graph, s_compact) = scratch.holey.compact_with(opts, exec);
-    let s = sort_rows_parallel(&mut graph, opts, exec);
+    // then chunked copy; both on `exec`, into the caller's graph).
+    let s_compact = scratch.holey.compact_into(out, opts, exec);
+    let s = sort_rows_parallel(out, opts, exec);
     if params.record_chunks {
         loops.push((params.schedule, s_compact.chunks));
         loops.push((params.schedule, s.chunks));
     }
-    AggOutcome { graph, counters, loops }
+    AggInfo { counters, loops }
 }
 
 /// Parallel per-row sort (rows are disjoint slices; embarrassingly
-/// parallel, recorded for the scaling replay).  The pair buffer lives
-/// in the per-thread context, so steady-state sorting allocates only
-/// when a row outgrows every previous row on that worker.
+/// parallel, recorded for the scaling replay).  Rows of degree ≤ 8 —
+/// which dominate late passes, where super-vertices are near-singleton
+/// — take an in-place insertion sort with no buffer traffic (PR 2
+/// satellite); longer rows go through the per-thread pair buffer, so
+/// steady-state sorting allocates only when a row outgrows every
+/// previous row on that worker.
 fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts, exec: Exec) -> crate::parallel::pool::WorkStats {
+    const SMALL_ROW: usize = 8;
     let n = g.num_vertices();
     let offsets = &g.offsets;
     let tp = RawSend(g.targets.as_mut_ptr());
@@ -222,6 +259,21 @@ fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts, exec: Exec) -> crate::par
                 // SAFETY: rows are disjoint; each v visited by one chunk.
                 let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(lo), hi - lo) };
                 let ws = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+                if ts.len() <= SMALL_ROW {
+                    // Insertion sort keeping (target, weight) in step.
+                    for a in 1..ts.len() {
+                        let (t, w) = (ts[a], ws[a]);
+                        let mut b = a;
+                        while b > 0 && ts[b - 1] > t {
+                            ts[b] = ts[b - 1];
+                            ws[b] = ws[b - 1];
+                            b -= 1;
+                        }
+                        ts[b] = t;
+                        ws[b] = w;
+                    }
+                    continue;
+                }
                 buf.clear();
                 buf.extend(ts.iter().copied().zip(ws.iter().copied()));
                 buf.sort_unstable_by_key(|p| p.0);
@@ -457,6 +509,51 @@ mod tests {
                 reused.counters.edges_scanned_agg
             );
         }
+    }
+
+    #[test]
+    fn aggregate_into_reuses_output_graph() {
+        // The ping-pong contract: aggregating a smaller pass into an
+        // already-sized output must not reallocate and must equal the
+        // fresh-output path.
+        let team = Team::new(2);
+        let mut scratch = AggScratch::new();
+        let mut out = Csr::default();
+        let g = generate(GraphFamily::Web, 10, 37);
+        let n = g.num_vertices();
+        let p = LouvainParams { threads: 2, ..params() };
+        let mut ptrs = None;
+        for ncomm in [301usize, 97, 11] {
+            let memb: Vec<u32> = (0..n).map(|v| (v % ncomm) as u32).collect();
+            let mut pool_slot = None;
+            let pool = TablePool::ensure(&mut pool_slot, TableKind::FarKv, ncomm, 2);
+            let fresh = aggregate_csr(&g, &memb, ncomm, pool, &p);
+            aggregate_csr_into(&g, &memb, ncomm, pool, &p, Exec::team(&team), &mut scratch, &mut out);
+            assert_eq!(fresh.graph, out, "ncomm={ncomm}");
+            match ptrs {
+                None => ptrs = Some((out.offsets.as_ptr(), out.targets.as_ptr())),
+                Some((op, tp)) => {
+                    assert_eq!(out.offsets.as_ptr(), op, "offsets realloc at ncomm={ncomm}");
+                    assert_eq!(out.targets.as_ptr(), tp, "targets realloc at ncomm={ncomm}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_row_fast_path_sorts_like_buffer_path() {
+        // Mixed small (≤8) and large rows through the public path: all
+        // rows must come out target-sorted with weights in step.
+        let g = generate(GraphFamily::Road, 10, 41); // degree ≈ 2: small rows
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 700) as u32).collect();
+        let pool = TablePool::new(TableKind::FarKv, 700, 1);
+        let out = aggregate_csr(&g, &memb, 700, &pool, &params());
+        for c in 0..out.graph.num_vertices() {
+            let ts = out.graph.edges(c).0;
+            assert!(ts.windows(2).all(|w| w[0] < w[1]), "row {c} unsorted: {ts:?}");
+        }
+        assert!((out.graph.total_weight() - g.total_weight()).abs() < 1e-6 * g.total_weight());
     }
 
     #[test]

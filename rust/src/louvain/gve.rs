@@ -9,15 +9,16 @@
 //! buffers sized by the first pass and logically shrunk afterwards.
 //! Repeated `run` calls on the same object reuse all of it.
 
-use super::aggregation::{aggregate_2d_with, aggregate_csr_with};
+use super::aggregation::{aggregate_2d_with, aggregate_csr_into, AggInfo};
 use super::local_moving::local_moving;
 use super::modularity::modularity;
 use super::params::{AggregationKind, LouvainParams};
-use super::renumber::renumber_communities;
-use super::workspace::LouvainWorkspace;
+use super::renumber::renumber_communities_exec;
+use super::workspace::{begin_pass_par, begin_pass_seeded, LouvainWorkspace};
 use super::Counters;
 use crate::graph::Csr;
 use crate::parallel::pool::{ChunkRecord, ParallelOpts};
+use crate::parallel::scatter::scatter_add_f64;
 use crate::parallel::schedule::Schedule;
 use crate::parallel::team::Exec;
 use std::sync::Mutex;
@@ -80,6 +81,19 @@ impl LouvainResult {
     }
 }
 
+/// First-pass seed for warm-started runs (see
+/// [`GveLouvain::run_seeded`] and [`louvain::dynamic`](super::dynamic)).
+#[derive(Clone, Copy, Debug)]
+pub struct PassSeed<'a> {
+    /// Initial pass-0 membership: one (dense, in-range) community id
+    /// per vertex — typically the previous run's result.
+    pub membership: &'a [u32],
+    /// Initial pass-0 pruning flags (1 = process); `None` = all-1.
+    /// Only honoured when `params.pruning` is on (the flags *are* the
+    /// pruning machinery).
+    pub affected: Option<&'a [u32]>,
+}
+
 /// The GVE-Louvain algorithm object.
 ///
 /// Owns a [`LouvainWorkspace`] behind a `Mutex` (so the object stays
@@ -107,7 +121,19 @@ impl GveLouvain {
     /// Run on `g`; returns the result with full metrics.
     pub fn run(&self, g: &Csr) -> LouvainResult {
         let mut ws = self.lock_workspace();
-        self.run_in(g, &mut ws)
+        self.run_in(g, &mut ws, None)
+    }
+
+    /// Run on `g` with a warm-started first pass (the
+    /// [`louvain::dynamic`](super::dynamic) entry point): pass 0 begins
+    /// from `seed.membership` instead of singletons, with Σ' rebuilt by
+    /// a parallel scatter-add, and — when `seed.affected` is given and
+    /// pruning is on — only the flagged vertices are processed until
+    /// moves propagate the flags outward.  Passes ≥ 1 are ordinary
+    /// GVE-Louvain.
+    pub fn run_seeded(&self, g: &Csr, seed: PassSeed<'_>) -> LouvainResult {
+        let mut ws = self.lock_workspace();
+        self.run_in(g, &mut ws, Some(seed))
     }
 
     /// Poison-tolerant workspace lock: a caught-and-reraised worker
@@ -119,7 +145,7 @@ impl GveLouvain {
         self.workspace.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    fn run_in(&self, g: &Csr, ws: &mut LouvainWorkspace) -> LouvainResult {
+    fn run_in(&self, g: &Csr, ws: &mut LouvainWorkspace, seed: Option<PassSeed<'_>>) -> LouvainResult {
         let p = &self.params;
         let t_start = Instant::now();
         let n0 = g.num_vertices();
@@ -132,10 +158,41 @@ impl GveLouvain {
             result.num_communities = n0;
             return result;
         }
+        if let Some(s) = &seed {
+            assert_eq!(s.membership.len(), n0, "seed membership length != |V|");
+            if let Some(a) = s.affected {
+                assert_eq!(a.len(), n0, "seed affected length != |V|");
+            }
+            // Real assert, not debug: local_moving does unchecked Σ'
+            // indexing on the strength of this contract (O(n) once per
+            // seeded run — negligible).
+            assert!(
+                s.membership.iter().all(|&c| (c as usize) < n0),
+                "seed membership contains a community id >= |V|"
+            );
+        }
 
         // All runtime resources up front: one team, one pool (sized by
-        // the input graph — the largest pass), reused below.
+        // the input graph — the largest pass), reused below.  The
+        // split-borrow destructuring lets the pass loop hold the team
+        // and pool alongside `&mut` pass buffers *and* read one slot of
+        // the super-graph ping-pong pair while aggregation writes the
+        // other.
         ws.prepare(p, n0);
+        let LouvainWorkspace {
+            team,
+            pool,
+            k,
+            sigma,
+            membership,
+            affected,
+            agg,
+            super_a,
+            super_b,
+            renumber_scratch,
+        } = ws;
+        let exec = Exec::team(team.as_ref().expect("prepare built the team"));
+        let pool = pool.as_ref().expect("prepare built the pool");
 
         let opts = ParallelOpts {
             threads: p.threads,
@@ -143,35 +200,55 @@ impl GveLouvain {
             chunk: p.chunk,
             record: p.record_chunks,
         };
-        let mut owned: Option<Csr> = None; // super-vertex graph (pass >= 1)
+        // Unrecorded variant for bookkeeping loops (init / renumber /
+        // scatter) so the Fig 16 replay keeps its PR-1 loop inventory.
+        let aux_opts = ParallelOpts { record: false, ..opts };
         let mut tau = p.tolerance;
 
         for pass in 0..p.max_passes {
-            let gp: &Csr = owned.as_ref().unwrap_or(g);
+            // Super-vertex graph ping-pong: read one slot, aggregate
+            // into the other — no per-pass graph allocation.
+            let (gp, next): (&Csr, &mut Csr) = if pass == 0 {
+                (g, &mut *super_a)
+            } else if pass % 2 == 1 {
+                (&*super_a, &mut *super_b)
+            } else {
+                (&*super_b, &mut *super_a)
+            };
             let np = gp.num_vertices();
             let t_pass = Instant::now();
 
             // Init: K', Σ', C' (Algorithm 1 lines 4-5) into the reused
-            // pass buffers. K' is a parallel loop (recorded for the
-            // scaling replay like the others).
-            ws.begin_pass(np);
-            let exec = Exec::team(ws.team.as_ref().expect("prepare built the team"));
-            let pool = ws.pool.as_ref().expect("prepare built the pool");
-            let stats = gp.vertex_weights_into(&mut ws.k, opts, exec);
+            // pass buffers — all parallel loops now (identity /
+            // affected fills included).  K' is recorded for the
+            // scaling replay like the PR-1 layout expects.
+            match (&seed, pass) {
+                (Some(s), 0) => begin_pass_seeded(membership, affected, s.membership, s.affected),
+                _ => begin_pass_par(membership, affected, np, aux_opts, exec),
+            }
+            let stats = gp.vertex_weights_into(k, opts, exec);
             if p.record_chunks {
                 result.loops.push((p.schedule, stats.chunks));
             }
-            ws.sigma.clear();
-            ws.sigma.extend_from_slice(&ws.k);
+            if seed.is_some() && pass == 0 {
+                // Warm start: Σ'[c] = Σ K'[v] over members of c.
+                sigma.clear();
+                sigma.resize(np, 0.0);
+                scatter_add_f64(&membership[..], &k[..], &mut sigma[..], aux_opts, exec);
+            } else {
+                // Singleton start: Σ' is a copy of K'.
+                sigma.clear();
+                sigma.extend_from_slice(&k[..]);
+            }
 
             // Local-moving phase (line 6).
             let t0 = Instant::now();
             let mv = local_moving(
                 gp,
-                &mut ws.membership,
-                &ws.k,
-                &mut ws.sigma,
-                &mut ws.affected,
+                &mut membership[..],
+                &k[..],
+                &mut sigma[..],
+                &mut affected[..],
                 pool,
                 p,
                 m,
@@ -183,14 +260,15 @@ impl GveLouvain {
             result.loops.extend(mv.loops);
 
             // Community count + convergence checks (lines 7-9).
-            let n_comm = renumber_communities(&mut ws.membership);
+            let n_comm =
+                renumber_communities_exec(&mut membership[..], renumber_scratch, aux_opts, exec);
             let converged = mv.iterations <= 1;
             let low_shrink = (n_comm as f64) / (np as f64) > p.aggregation_tolerance;
 
             // Fold this pass into the top-level membership (lines 11/14;
             // a parallel loop in the paper, recorded for the replay).
             {
-                let pass_memb = &ws.membership;
+                let pass_memb: &[u32] = &membership[..];
                 let stats = exec.run_disjoint_mut(&mut result.membership, opts, |_r, chunk| {
                     for c in chunk.iter_mut() {
                         *c = pass_memb[*c as usize];
@@ -222,21 +300,22 @@ impl GveLouvain {
             }
 
             // Aggregation phase (line 12), on the same team with the
-            // reused scratch.
+            // reused scratch, compacted into the other ping-pong slot.
             let t2 = Instant::now();
-            let agg = match p.aggregation {
+            let agg_info = match p.aggregation {
                 AggregationKind::Csr => {
-                    aggregate_csr_with(gp, &ws.membership, n_comm, pool, p, exec, &mut ws.agg)
+                    aggregate_csr_into(gp, &membership[..], n_comm, pool, p, exec, agg, next)
                 }
                 AggregationKind::TwoDim => {
-                    aggregate_2d_with(gp, &ws.membership, n_comm, pool, p, exec)
+                    let o = aggregate_2d_with(gp, &membership[..], n_comm, pool, p, exec);
+                    *next = o.graph;
+                    AggInfo { counters: o.counters, loops: o.loops }
                 }
             };
             stats.agg_ns = t2.elapsed().as_nanos() as u64;
-            result.counters.edges_scanned_agg += agg.counters.edges_scanned_agg;
-            result.counters.table_ops += agg.counters.table_ops;
-            result.loops.extend(agg.loops);
-            owned = Some(agg.graph);
+            result.counters.edges_scanned_agg += agg_info.counters.edges_scanned_agg;
+            result.counters.table_ops += agg_info.counters.table_ops;
+            result.loops.extend(agg_info.loops);
 
             // Threshold scaling (line 13).
             tau /= p.tolerance_drop;
@@ -250,7 +329,8 @@ impl GveLouvain {
             result.passes = pass + 1;
         }
 
-        result.num_communities = renumber_communities(&mut result.membership);
+        result.num_communities =
+            renumber_communities_exec(&mut result.membership, renumber_scratch, aux_opts, exec);
         // Detection time excludes the final quality evaluation (the paper
         // reports Q separately from runtime).
         result.total_ns = t_start.elapsed().as_nanos() as u64;

@@ -15,10 +15,14 @@
 //!   dendrogram lookup;
 //! * [`workspace`] — the zero-allocation pass workspace: persistent
 //!   worker team, table pool and pass buffers reused across passes;
-//! * [`gve`] — the pass loop (Algorithm 1) with phase/pass metrics.
+//! * [`gve`] — the pass loop (Algorithm 1) with phase/pass metrics;
+//! * [`dynamic`] — incrementally-seeded Louvain over evolving graphs
+//!   (PR 2): warm-started and delta-screened batch updates driving the
+//!   existing pruning flags instead of full recomputation.
 
 pub mod aggregation;
 pub mod dendrogram;
+pub mod dynamic;
 pub mod gve;
 pub mod hashtable;
 pub mod local_moving;
@@ -27,7 +31,8 @@ pub mod params;
 pub mod renumber;
 pub mod workspace;
 
-pub use gve::{GveLouvain, LouvainResult, PassStats};
+pub use dynamic::{DynamicLouvain, DynamicOutcome, SeedStrategy};
+pub use gve::{GveLouvain, LouvainResult, PassSeed, PassStats};
 pub use params::LouvainParams;
 pub use workspace::LouvainWorkspace;
 

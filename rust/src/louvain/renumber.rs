@@ -2,6 +2,24 @@
 //!
 //! After local-moving, community ids are a sparse subset of `0..|V'|`;
 //! the aggregation phase needs them dense in `0..|Γ|`.
+//!
+//! Two implementations:
+//!
+//! * [`renumber_communities`] — the serial reference: dense ids in
+//!   *first-appearance* order (kept for the baselines and the PJRT
+//!   driver, whose outputs are pinned by tests).
+//! * [`renumber_communities_exec`] — the parallel version on the pass
+//!   loop's hot path (PR 2 satellite: this was a serial O(n) scan per
+//!   pass): flag used ids, prefix-sum the flags into dense ranks,
+//!   remap.  Dense ids come out in *ascending-old-id* order — a
+//!   relabeling of the same partition, identical for every thread
+//!   count (the first-appearance order of the serial scan cannot be
+//!   reproduced without a sequential dependency).
+
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::scan::exclusive_scan_exec;
+use crate::parallel::team::Exec;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Renumber communities to dense ids preserving first-appearance order.
 /// Returns the number of communities `|Γ|`.
@@ -22,6 +40,54 @@ pub fn renumber_communities(membership: &mut [u32]) -> usize {
         *c = *slot;
     }
     next as usize
+}
+
+/// Parallel renumbering to dense ids in ascending-old-id order.
+///
+/// Requires every community id to be `< membership.len()` (true on the
+/// pass loop: community ids are vertex ids of `G'`).  `scratch` is a
+/// workspace-owned buffer reused across passes; returns `|Γ|`.
+pub fn renumber_communities_exec(
+    membership: &mut [u32],
+    scratch: &mut Vec<usize>,
+    opts: ParallelOpts,
+    exec: Exec,
+) -> usize {
+    let n = membership.len();
+    if n == 0 {
+        return 0;
+    }
+    debug_assert!(membership.iter().all(|&c| (c as usize) < n), "community id out of range");
+    // Phase 1: flag used ids (benign same-value races).  The zero-fill
+    // is a chunked parallel loop too — a serial clear+resize here would
+    // sneak the O(n) scan this function exists to remove back in.
+    scratch.resize(n, 0);
+    exec.run_disjoint_mut(&mut scratch[..], opts, |_r, chunk| {
+        chunk.fill(0);
+    });
+    {
+        let flags: &[AtomicUsize] =
+            unsafe { &*(scratch.as_mut_slice() as *mut [usize] as *const [AtomicUsize]) };
+        let memb: &[u32] = membership;
+        exec.run(n, opts, |r| {
+            for i in r {
+                flags[memb[i] as usize].store(1, Ordering::Relaxed);
+            }
+        });
+    }
+    // Phase 2: exclusive scan turns flags into dense ranks; the grand
+    // total is the community count.
+    let total = exclusive_scan_exec(scratch, opts.threads, exec);
+    // Phase 3: remap through the rank table.
+    {
+        let rank: &[usize] = &scratch[..];
+        exec.run_disjoint_mut(membership, opts, |_r, chunk| {
+            for c in chunk.iter_mut() {
+                *c = rank[*c as usize] as u32;
+            }
+        });
+    }
+    total
 }
 
 /// Count distinct communities without renumbering.
@@ -73,5 +139,55 @@ mod tests {
         assert_eq!(count_communities(&m), 4);
         let mut mm = m.clone();
         assert_eq!(renumber_communities(&mut mm), 4);
+    }
+
+    #[test]
+    fn exec_renumber_dense_ascending_order() {
+        let mut m = vec![5, 5, 2, 9, 2, 0];
+        let mut scratch = Vec::new();
+        let n = renumber_communities_exec(&mut m, &mut scratch, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(n, 4);
+        // Ascending-old-id order: 0→0, 2→1, 5→2, 9→3.
+        assert_eq!(m, vec![2, 2, 1, 3, 1, 0]);
+    }
+
+    #[test]
+    fn exec_renumber_matches_serial_count_and_partition() {
+        use crate::parallel::prng::Xoshiro256;
+        use crate::parallel::team::Team;
+        let team = Team::new(4);
+        let mut rng = Xoshiro256::new(3);
+        for n in [1usize, 17, 1000, 40_000] {
+            let base: Vec<u32> = (0..n).map(|_| rng.below(n as u64) as u32).collect();
+            let mut serial = base.clone();
+            let ns = renumber_communities(&mut serial);
+            for exec in [Exec::scoped(), Exec::team(&team)] {
+                let mut par = base.clone();
+                let mut scratch = Vec::new();
+                let opts = ParallelOpts { threads: 4, chunk: 64, ..Default::default() };
+                let np = renumber_communities_exec(&mut par, &mut scratch, opts, exec);
+                assert_eq!(np, ns, "n={n}");
+                // Ids dense and the partition identical up to relabeling:
+                // same-old-id pairs stay together, distinct stay apart.
+                if n > 0 {
+                    assert_eq!(*par.iter().max().unwrap() as usize + 1, np);
+                }
+                for i in 0..n.min(500) {
+                    for j in (i + 1)..n.min(500) {
+                        assert_eq!(base[i] == base[j], par[i] == par[j], "n={n} ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exec_renumber_empty() {
+        let mut m: Vec<u32> = vec![];
+        let mut s = Vec::new();
+        assert_eq!(
+            renumber_communities_exec(&mut m, &mut s, ParallelOpts::default(), Exec::scoped()),
+            0
+        );
     }
 }

@@ -12,7 +12,10 @@
 //!   the first pass (the largest graph — pass graphs only shrink) and
 //!   *logically shrunk* afterwards;
 //! * the aggregation scratch ([`AggScratch`]: count arrays + both
-//!   holey CSRs) is likewise reused.
+//!   holey CSRs) is likewise reused;
+//! * the super-vertex graph lives in a ping-pong `Csr` pair (PR 2):
+//!   each pass reads one slot while aggregation compacts into the
+//!   other, so even the output graph stops allocating per pass.
 //!
 //! ## Contract
 //!
@@ -30,7 +33,9 @@
 use super::aggregation::AggScratch;
 use super::hashtable::TablePool;
 use super::params::LouvainParams;
-use crate::parallel::team::Team;
+use crate::graph::Csr;
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::team::{Exec, Team};
 
 /// Reusable runtime resources of one [`GveLouvain`](super::gve::GveLouvain).
 pub struct LouvainWorkspace {
@@ -48,6 +53,13 @@ pub struct LouvainWorkspace {
     pub(crate) affected: Vec<u32>,
     /// Aggregation scratch (counts / total-degree / holey buffers).
     pub(crate) agg: AggScratch,
+    /// Super-vertex graph ping-pong pair: the pass loop reads one slot
+    /// while aggregation compacts into the other, so no pass allocates
+    /// a fresh `Csr` once the first aggregation sized them (PR 2).
+    pub(crate) super_a: Csr,
+    pub(crate) super_b: Csr,
+    /// Rank table for the parallel community renumbering.
+    pub(crate) renumber_scratch: Vec<usize>,
 }
 
 impl LouvainWorkspace {
@@ -60,6 +72,9 @@ impl LouvainWorkspace {
             membership: Vec::new(),
             affected: Vec::new(),
             agg: AggScratch::new(),
+            super_a: Csr::default(),
+            super_b: Csr::default(),
+            renumber_scratch: Vec::new(),
         }
     }
 
@@ -94,6 +109,52 @@ impl LouvainWorkspace {
     /// OS worker threads spawned by this workspace's team so far.
     pub fn spawned_workers(&self) -> usize {
         self.team.as_ref().map(Team::spawned_workers).unwrap_or(0)
+    }
+}
+
+/// Parallel pass-buffer init (PR 2 satellite: the identity membership
+/// and all-1 affected fills were serial O(np) scans per pass).  Same
+/// postcondition as [`LouvainWorkspace::begin_pass`], but both fills
+/// run as chunked loops on `exec`.  Free function over the split
+/// borrows because the pass loop holds `&Team`/`&TablePool` borrows of
+/// the same workspace while it runs.
+pub(crate) fn begin_pass_par(
+    membership: &mut Vec<u32>,
+    affected: &mut Vec<u32>,
+    np: usize,
+    opts: ParallelOpts,
+    exec: Exec,
+) {
+    let opts = ParallelOpts { record: false, ..opts };
+    // resize (not clear+resize): every slot is overwritten by the
+    // chunked fills, so only growth needs the element init.
+    membership.resize(np, 0);
+    exec.run_disjoint_mut(&mut membership[..], opts, |r, chunk| {
+        for (k, x) in chunk.iter_mut().enumerate() {
+            *x = (r.start + k) as u32;
+        }
+    });
+    affected.resize(np, 0);
+    exec.run_disjoint_mut(&mut affected[..], opts, |_r, chunk| {
+        chunk.fill(1);
+    });
+}
+
+/// Seeded pass-buffer init (the dynamic-Louvain warm start): membership
+/// is copied from a previous run, affected either copied (delta
+/// screening) or all-1 (naive-dynamic).
+pub(crate) fn begin_pass_seeded(
+    membership: &mut Vec<u32>,
+    affected: &mut Vec<u32>,
+    seed_membership: &[u32],
+    seed_affected: Option<&[u32]>,
+) {
+    membership.clear();
+    membership.extend_from_slice(seed_membership);
+    affected.clear();
+    match seed_affected {
+        Some(a) => affected.extend_from_slice(a),
+        None => affected.resize(seed_membership.len(), 1),
     }
 }
 
@@ -144,6 +205,32 @@ mod tests {
         ws.prepare(&pm, 100);
         assert_eq!(ws.pool.as_ref().unwrap().kind(), TableKind::Map);
         let _ = ptr;
+    }
+
+    #[test]
+    fn begin_pass_par_matches_serial_contract() {
+        use crate::parallel::team::{Exec, Team};
+        let team = Team::new(4);
+        let opts = ParallelOpts { threads: 4, chunk: 64, ..ParallelOpts::default() };
+        let (mut memb, mut aff) = (Vec::new(), Vec::new());
+        for np in [1000usize, 400, 1, 0, 700] {
+            begin_pass_par(&mut memb, &mut aff, np, opts, Exec::team(&team));
+            let mut ws = LouvainWorkspace::new();
+            ws.begin_pass(np);
+            assert_eq!(memb, ws.membership, "np={np}");
+            assert_eq!(aff, ws.affected, "np={np}");
+        }
+    }
+
+    #[test]
+    fn begin_pass_seeded_copies_seed() {
+        let (mut memb, mut aff) = (vec![9u32; 3], vec![9u32; 3]);
+        begin_pass_seeded(&mut memb, &mut aff, &[2, 0, 2, 1], None);
+        assert_eq!(memb, vec![2, 0, 2, 1]);
+        assert_eq!(aff, vec![1, 1, 1, 1]);
+        begin_pass_seeded(&mut memb, &mut aff, &[0, 0], Some(&[1, 0]));
+        assert_eq!(memb, vec![0, 0]);
+        assert_eq!(aff, vec![1, 0]);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! scratch: a persistent worker [`team`] (spawn-once, park between
 //! loops — the hot path), a scoped fork-join [`pool`] kept as the
 //! reference path, chunk [`schedule`]s matching OpenMP semantics, a
-//! parallel prefix [`scan`], CAS-loop [`atomics`]
+//! parallel prefix [`scan`], parallel [`scatter`] accumulators
+//! (warm-start Σ' init and batch-delta counting), CAS-loop [`atomics`]
 //! for `f64`, deterministic [`prng`]s, and a [`replay`] model that
 //! list-schedules measured chunk costs onto `T` modeled cores for the
 //! strong-scaling study (this testbed exposes a single core; see
@@ -17,6 +18,7 @@ pub mod pool;
 pub mod prng;
 pub mod replay;
 pub mod scan;
+pub mod scatter;
 pub mod schedule;
 pub mod team;
 

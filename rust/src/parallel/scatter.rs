@@ -1,0 +1,119 @@
+//! Parallel scatter primitives: key-indexed accumulation into dense
+//! arrays.
+//!
+//! Two call sites motivate these (PR 2, the dynamic-graph subsystem):
+//!
+//! * **Warm-started Σ' init** — a seeded Louvain pass starts from a
+//!   non-identity membership, so the community totals are no longer a
+//!   copy of `K'` but a scatter-add of `K'[v]` into `Σ'[C[v]]`
+//!   ([`scatter_add_f64`]).
+//! * **Batch delta application** — `Csr::apply_batch` needs per-vertex
+//!   operation counts before it can prefix-sum the merged offsets
+//!   ([`scatter_count`]).
+//!
+//! Both run on an [`Exec`] (persistent team or scoped reference path)
+//! and accumulate through relaxed atomics — the same benign-race
+//! contract as the local-moving Σ' updates.  Float accumulation order
+//! is nondeterministic above one thread; integral values stay exact
+//! regardless (f64 addition of integers is associative in range).
+
+use super::atomics::as_atomic_f64;
+use super::pool::{ParallelOpts, WorkStats};
+use super::team::Exec;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// `out[keys[i]] += vals[i]` for every `i`, in parallel chunks.
+///
+/// `keys` and `vals` must have equal length and every key must index
+/// into `out` (checked in debug builds; out-of-range keys panic via the
+/// slice index in release too).
+pub fn scatter_add_f64(
+    keys: &[u32],
+    vals: &[f64],
+    out: &mut [f64],
+    opts: ParallelOpts,
+    exec: Exec,
+) -> WorkStats {
+    assert_eq!(keys.len(), vals.len(), "scatter keys/vals length mismatch");
+    debug_assert!(keys.iter().all(|&k| (k as usize) < out.len()));
+    let cells = as_atomic_f64(out);
+    exec.run(keys.len(), opts, |r| {
+        for i in r {
+            cells[keys[i] as usize].fetch_add(vals[i]);
+        }
+    })
+}
+
+/// `out[keys[i]] += 1` for every `i`, in parallel chunks (histogram).
+pub fn scatter_count(
+    keys: &[u32],
+    out: &mut [usize],
+    opts: ParallelOpts,
+    exec: Exec,
+) -> WorkStats {
+    debug_assert!(keys.iter().all(|&k| (k as usize) < out.len()));
+    // Same cast idiom as the aggregation count arrays: usize and
+    // AtomicUsize share layout, and the &mut borrow guarantees
+    // exclusivity for the scope that splits it across workers.
+    let cells: &[AtomicUsize] =
+        unsafe { &*(out as *mut [usize] as *const [AtomicUsize]) };
+    exec.run(keys.len(), opts, |r| {
+        for i in r {
+            cells[keys[i] as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::team::Team;
+
+    #[test]
+    fn scatter_add_matches_serial() {
+        let keys: Vec<u32> = (0..10_000).map(|i| (i * 7 % 97) as u32).collect();
+        let vals: Vec<f64> = (0..10_000).map(|i| (i % 5) as f64).collect();
+        let mut want = vec![0.0f64; 97];
+        for (k, v) in keys.iter().zip(&vals) {
+            want[*k as usize] += v;
+        }
+        let team = Team::new(4);
+        for exec in [Exec::scoped(), Exec::team(&team)] {
+            let mut out = vec![0.0f64; 97];
+            scatter_add_f64(
+                &keys,
+                &vals,
+                &mut out,
+                ParallelOpts { threads: 4, chunk: 64, ..Default::default() },
+                exec,
+            );
+            // Integral values: exact under any interleaving.
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn scatter_count_builds_histogram() {
+        let keys: Vec<u32> = (0..5000).map(|i| (i % 13) as u32).collect();
+        let mut out = vec![0usize; 13];
+        scatter_count(
+            &keys,
+            &mut out,
+            ParallelOpts { threads: 4, chunk: 32, ..Default::default() },
+            Exec::scoped(),
+        );
+        let want: usize = out.iter().sum();
+        assert_eq!(want, 5000);
+        for (k, &c) in out.iter().enumerate() {
+            let expect = (0..5000).filter(|i| i % 13 == k).count();
+            assert_eq!(c, expect, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn empty_scatter_is_noop() {
+        let mut out = vec![1.0f64; 3];
+        scatter_add_f64(&[], &[], &mut out, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out, vec![1.0, 1.0, 1.0]);
+    }
+}

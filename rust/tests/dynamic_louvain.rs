@@ -1,0 +1,234 @@
+//! Tier-2 integration tests for the PR-2 dynamic-graph subsystem:
+//! `graph::delta` (batch application) + `louvain::dynamic` (seeded
+//! re-detection) + the coordinator timeline replay.
+//!
+//! The acceptance bar (ISSUE 2): on a seeded churn timeline of ≥ 10
+//! batches mutating ~1% of edges each, delta screening must beat full
+//! recompute on wall time while final modularity stays within 0.01.
+
+use gve_louvain::coordinator::dynamic::{churn_timeline, replay_timeline, summarize};
+use gve_louvain::graph::delta::EdgeBatch;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::Csr;
+use gve_louvain::louvain::dynamic::{DynamicLouvain, SeedStrategy};
+use gve_louvain::louvain::LouvainParams;
+use gve_louvain::parallel::ParallelOpts;
+use gve_louvain::parallel::Exec;
+use std::collections::BTreeMap;
+
+const BATCHES: usize = 10;
+const FRAC: f64 = 0.01;
+
+/// Oracle: replay the batch on an edge map and rebuild from scratch.
+fn rebuild(g: &Csr, batch: &EdgeBatch) -> Csr {
+    let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
+    for v in 0..g.num_vertices() {
+        for (t, w) in g.neighbours(v) {
+            map.insert((v as u32, t), w);
+        }
+    }
+    for &(u, v) in &batch.deletions {
+        map.remove(&(u, v));
+        map.remove(&(v, u));
+    }
+    for &(u, v, w) in &batch.insertions {
+        *map.entry((u, v)).or_insert(0.0) += w;
+        if u != v {
+            *map.entry((v, u)).or_insert(0.0) += w;
+        }
+    }
+    // Rebuild CSR directly from the directed map (rows come out sorted).
+    let n = g.num_vertices();
+    let mut offsets = vec![0usize; n + 1];
+    for &(u, _) in map.keys() {
+        offsets[u as usize + 1] += 1;
+    }
+    for v in 0..n {
+        offsets[v + 1] += offsets[v];
+    }
+    let mut targets = Vec::with_capacity(map.len());
+    let mut weights = Vec::with_capacity(map.len());
+    for (&(_, t), &w) in &map {
+        targets.push(t);
+        weights.push(w);
+    }
+    Csr { offsets, targets, weights }
+}
+
+#[test]
+fn apply_batch_equals_rebuild_over_a_timeline() {
+    // Sequential churn batches, each applied two ways: the parallel
+    // merge and the from-scratch rebuild (deletions, insertions and
+    // weight updates on already-present pairs all occur in churn).
+    for family in [GraphFamily::Web, GraphFamily::Road] {
+        let mut cur = generate(family, 9, 51);
+        for i in 0..5 {
+            let batch = gve_louvain::graph::generators::churn_batch(&cur, 0.02, 60 + i);
+            let fast = cur.apply_batch(
+                &batch,
+                ParallelOpts { threads: 4, chunk: 64, ..Default::default() },
+                Exec::scoped(),
+            );
+            let slow = rebuild(&cur, &batch);
+            assert_eq!(fast, slow, "{family:?} batch {i}");
+            fast.validate().unwrap();
+            assert!(fast.is_symmetric(), "{family:?} batch {i}");
+            cur = fast;
+        }
+    }
+}
+
+#[test]
+fn weight_updates_and_deletions_roundtrip() {
+    let g = generate(GraphFamily::Web, 8, 3);
+    // Bump the weight of an existing edge, then delete it.
+    let u = (0..g.num_vertices()).find(|&v| g.degree(v) > 0).unwrap() as u32;
+    let v = g.edges(u as usize).0[0];
+    let mut up = EdgeBatch::new();
+    up.insert(u, v, 2.0);
+    let g2 = g.apply_batch(&up, ParallelOpts::default(), Exec::scoped());
+    assert_eq!(g2, rebuild(&g, &up));
+    assert_eq!(g2.num_edges(), g.num_edges(), "weight update must not add slots");
+    let mut del = EdgeBatch::new();
+    del.delete(u, v);
+    let g3 = g2.apply_batch(&del, ParallelOpts::default(), Exec::scoped());
+    assert_eq!(g3, rebuild(&g2, &del));
+    assert_eq!(g3.num_edges(), g.num_edges() - 2);
+}
+
+#[test]
+fn dynamic_strategies_stay_within_epsilon_of_full_recompute() {
+    let g0 = generate(GraphFamily::Web, 12, 42);
+    let tl = churn_timeline(&g0, BATCHES, FRAC, 42);
+    assert_eq!(tl.batches.len(), BATCHES);
+    let cells = replay_timeline(&g0, &tl, &SeedStrategy::ALL, &LouvainParams::default());
+    let summaries = summarize(&cells);
+    assert_eq!(summaries.len(), 3);
+    let full = summaries
+        .iter()
+        .find(|s| s.strategy == SeedStrategy::FullRecompute)
+        .unwrap();
+    for s in &summaries {
+        // The acceptance ε: final modularity within 0.01 of full.
+        assert!(
+            (s.final_modularity - full.final_modularity).abs() <= 0.01,
+            "{:?}: Q={} vs full {}",
+            s.strategy,
+            s.final_modularity,
+            full.final_modularity
+        );
+        assert_eq!(s.batches, BATCHES);
+    }
+    // Every batch individually stays sane for the warm strategies
+    // (churn keeps injecting inter-community noise edges, so the bar
+    // is below the pristine-graph 0.9+).
+    for c in &cells {
+        assert!(c.modularity > 0.7, "{:?} batch {}: q={}", c.strategy, c.batch, c.modularity);
+    }
+}
+
+#[test]
+fn delta_screening_beats_full_recompute_on_wall_time() {
+    let g0 = generate(GraphFamily::Web, 12, 7);
+    let tl = churn_timeline(&g0, BATCHES, FRAC, 7);
+    let cells = replay_timeline(&g0, &tl, &SeedStrategy::ALL, &LouvainParams::default());
+    let summaries = summarize(&cells);
+    let get = |s: SeedStrategy| summaries.iter().find(|x| x.strategy == s).unwrap();
+    let full = get(SeedStrategy::FullRecompute);
+    let delta = get(SeedStrategy::DeltaScreening);
+
+    // Wall time: per-batch (median) and total, both strictly better.
+    // Deliberately wall-clock (the ISSUE acceptance bar); the median
+    // over 10 batches absorbs isolated scheduling hiccups, and the
+    // machine-independent counter form of the same claim lives in
+    // delta_screening_processes_fewer_vertices_than_full below.
+    assert!(
+        delta.median_wall_ns < full.median_wall_ns,
+        "delta median {} !< full median {}",
+        delta.median_wall_ns,
+        full.median_wall_ns
+    );
+    assert!(
+        delta.total_wall_ns < full.total_wall_ns,
+        "delta total {} !< full total {}",
+        delta.total_wall_ns,
+        full.total_wall_ns
+    );
+    // Screening never seeds more than the graph (on this dense family
+    // a 1% batch can saturate the seed; the win is the warm start).
+    assert!(delta.mean_affected <= g0.num_vertices() as f64);
+    // And the machine-independent evidence: warm starts take no more
+    // passes than full recomputes across the timeline.
+    let total_passes = |s: SeedStrategy| -> u64 {
+        cells
+            .iter()
+            .filter(|c| c.strategy == s)
+            .map(|c| c.passes as u64)
+            .sum()
+    };
+    assert!(
+        total_passes(SeedStrategy::DeltaScreening) <= total_passes(SeedStrategy::FullRecompute)
+    );
+}
+
+#[test]
+fn delta_screening_processes_fewer_vertices_than_full() {
+    // Deterministic (counter-based, not wall-clock) form of the perf
+    // claim: summed vertices_processed across a timeline.  Sparse
+    // family, where the screened seed is a genuine subset.
+    let g0 = generate(GraphFamily::Road, 12, 19);
+    let tl = churn_timeline(&g0, 6, FRAC, 19);
+    let mut totals = Vec::new();
+    for strategy in [SeedStrategy::FullRecompute, SeedStrategy::DeltaScreening] {
+        let mut dl = DynamicLouvain::new(LouvainParams::default(), strategy);
+        dl.run_initial(&g0);
+        let mut processed = 0u64;
+        for (g, b) in tl.graphs.iter().zip(&tl.batches) {
+            let out = dl.update(g, b);
+            processed += out.result.counters.vertices_processed;
+        }
+        totals.push(processed);
+    }
+    assert!(
+        totals[1] * 2 < totals[0],
+        "delta screening should process <1/2 the vertices: full={} delta={}",
+        totals[0],
+        totals[1]
+    );
+}
+
+#[test]
+fn dynamic_driver_reuses_workspace_across_batches() {
+    // O(1) OS spawns across the whole timeline (the PR-1 guarantee,
+    // extended to the dynamic driver).
+    let g0 = generate(GraphFamily::Social, 10, 23);
+    let tl = churn_timeline(&g0, 4, FRAC, 23);
+    let mut dl = DynamicLouvain::new(LouvainParams::with_threads(4), SeedStrategy::DeltaScreening);
+    dl.run_initial(&g0);
+    assert_eq!(dl.spawned_workers(), 3);
+    for (g, b) in tl.graphs.iter().zip(&tl.batches) {
+        let out = dl.update(g, b);
+        assert!(out.result.modularity > 0.2);
+    }
+    assert_eq!(dl.spawned_workers(), 3, "spawns must be O(1) across batches");
+}
+
+#[test]
+fn naive_dynamic_converges_in_fewer_iterations() {
+    // The arXiv:2301.12390 claim that motivates the subsystem.
+    let g0 = generate(GraphFamily::Web, 11, 31);
+    let tl = churn_timeline(&g0, 5, FRAC, 31);
+    let iters = |strategy: SeedStrategy| -> usize {
+        let mut dl = DynamicLouvain::new(LouvainParams::default(), strategy);
+        dl.run_initial(&g0);
+        let mut total = 0usize;
+        for (g, b) in tl.graphs.iter().zip(&tl.batches) {
+            let out = dl.update(g, b);
+            total += out.result.pass_stats.iter().map(|p| p.iterations).sum::<usize>();
+        }
+        total
+    };
+    let full = iters(SeedStrategy::FullRecompute);
+    let naive = iters(SeedStrategy::NaiveDynamic);
+    assert!(naive < full, "naive-dynamic iterations {naive} !< full {full}");
+}

@@ -1,22 +1,26 @@
 #!/usr/bin/env bash
-# Bench smoke runner: emits BENCH_PR1.json with GVE-Louvain edges/sec
+# Bench smoke runner: emits BENCH_PR2.json with GVE-Louvain edges/sec
 # for every planted GraphFamily at 1 and 4 threads (median of
-# GVE_BENCH_REPEATS, default 3; GVE_BENCH_SCALE shifts graph sizes).
+# GVE_BENCH_REPEATS, default 3; GVE_BENCH_SCALE shifts graph sizes),
+# plus the PR-2 dynamic scenario: per-seeding-strategy throughput over
+# a 10-batch / 1%-churn timeline on the web family.
 #
 # Usage:
-#   scripts/bench_smoke.sh                 # writes BENCH_PR1.json
+#   scripts/bench_smoke.sh                 # writes BENCH_PR2.json
 #   scripts/bench_smoke.sh out.json        # custom output path
 #
 # Comparing against a baseline (same runner, same machine): commits
-# before PR 1 carry no Cargo manifests and are not buildable, so the
-# first committed BENCH_PR1.json IS the seed yardstick. From PR 2 on:
+# before PR 1 carry no Cargo manifests and are not buildable; PR 1's
+# yardstick was BENCH_PR1.json (static cells only — the "results" array
+# here is schema-compatible with it). From PR 3 on:
 #   uncommitted changes:  git stash && scripts/bench_smoke.sh base.json \
 #                           && git stash pop && scripts/bench_smoke.sh
 #   committed baseline:   git worktree add /tmp/bb <rev>
 #                         (cd /tmp/bb && scripts/bench_smoke.sh /tmp/base.json)
 #                         git worktree remove /tmp/bb
-#   # then diff the edges_per_sec fields; every family should be >= baseline.
+#   # then diff the edges_per_sec fields; every family should be >= baseline,
+#   # and in "dynamic" delta-screening should beat full per batch.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-OUT="${1:-BENCH_PR1.json}"
+OUT="${1:-BENCH_PR2.json}"
 cargo run --release --manifest-path rust/Cargo.toml --bin bench_smoke -- "$OUT"
