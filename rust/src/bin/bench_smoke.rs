@@ -1,37 +1,40 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
-//! cells, PR 2 dynamic cells).
+//! cells, PR 2 dynamic cells, PR 3 service cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
-//! threads (warmup + repeats, median) and — since PR 2 — replays a
-//! 10-batch / 1%-churn dynamic timeline per [`SeedStrategy`], writing a
-//! `BENCH_PR2.json` with edges/sec per cell — the fixed yardstick
-//! future PRs compare against.  Hand-rolled JSON (the offline registry
-//! has no serde).
+//! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
+//! dynamic timeline per [`SeedStrategy`] (PR 2), and — since PR 3 —
+//! replays the same-shaped stream through the long-lived
+//! `CommunityService` per strategy (ingest-rate + epoch-latency cells),
+//! writing a `BENCH_PR3.json` — the fixed yardstick future PRs compare
+//! against.  Hand-rolled JSON (the offline registry has no serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR2.json
+//! bench_smoke [OUT.json]          # default BENCH_PR3.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! ```
 //!
 //! To compare against a pre-change baseline, run the *same* binary on
 //! the baseline commit with a different output path and diff the
-//! `edges_per_sec` fields:
+//! `edges_per_sec` / `ops_per_sec` fields:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR2_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR2.json
+//! git stash && cargo bench-smoke BENCH_PR3_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR3.json
 //! ```
 
 use gve_louvain::bench::{bench_scale_offset, bench_seed};
 use gve_louvain::coordinator::dynamic::{churn_timeline, replay_timeline, summarize};
 use gve_louvain::coordinator::metrics::{edges_per_sec, median};
+use gve_louvain::coordinator::service::{replay_service, summarize_service};
 use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
+use gve_louvain::service::{BatchPolicy, ServiceConfig};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -64,14 +67,26 @@ struct DynCell {
     mean_affected: f64,
 }
 
+struct ServiceCell {
+    strategy: &'static str,
+    threads: usize,
+    epochs: usize,
+    total_ops: usize,
+    median_epoch_ns: u64,
+    max_epoch_ns: u64,
+    ops_per_sec: f64,
+    final_modularity: f64,
+    drift: f64,
+}
+
 /// Median via the crate-wide convention (`coordinator::metrics`), so
-/// `BENCH_PR2.json` uses the same statistic as every other bench figure.
+/// `BENCH_PR3.json` uses the same statistic as every other bench figure.
 fn median_ns(samples: &[u64]) -> u64 {
     median(&samples.iter().map(|&x| x as f64).collect::<Vec<_>>()) as u64
 }
 
 fn main() {
-    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR2.json".into());
+    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR3.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -162,9 +177,52 @@ fn main() {
         }
     }
 
+    // --- Service scenario (PR 3): the dynamic timeline ingested
+    // through the long-lived CommunityService — ingest rate and
+    // epoch-latency cells per strategy (batches pre-cut, so the replay
+    // is deterministic in the timeline).
+    let mut svc_cells: Vec<ServiceCell> = Vec::new();
+    {
+        let g0 = generate(GraphFamily::Web, scale, seed);
+        let tl = churn_timeline(&g0, DYN_BATCHES, DYN_FRAC, seed);
+        for threads in THREADS {
+            for strategy in SeedStrategy::ALL {
+                let cfg = ServiceConfig {
+                    params: LouvainParams::with_threads(threads),
+                    strategy,
+                    policy: BatchPolicy::default(),
+                    ..Default::default()
+                };
+                let (svc, cells) = replay_service(&g0, &tl, cfg);
+                let s = summarize_service(&cells, svc.metrics().initial_modularity);
+                let cell = ServiceCell {
+                    strategy: strategy.name(),
+                    threads,
+                    epochs: s.epochs,
+                    total_ops: s.total_ops,
+                    median_epoch_ns: s.median_epoch_ns,
+                    max_epoch_ns: s.max_epoch_ns,
+                    ops_per_sec: s.ops_per_sec,
+                    final_modularity: s.final_modularity,
+                    drift: s.drift,
+                };
+                eprintln!(
+                    "svc {:>15} t={} {:>12} ns/epoch  {:>9.0} ops/s  Q={:.4} drift={:+.4}",
+                    cell.strategy,
+                    cell.threads,
+                    cell.median_epoch_ns,
+                    cell.ops_per_sec,
+                    cell.final_modularity,
+                    cell.drift,
+                );
+                svc_cells.push(cell);
+            }
+        }
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr2_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr3_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -207,6 +265,30 @@ fn main() {
             c.edges_per_sec,
             c.final_modularity,
             c.mean_affected,
+            comma
+        );
+    }
+    let _ = writeln!(json, "  ]}},");
+    let _ = writeln!(
+        json,
+        "  \"service\": {{\"family\": \"web\", \"batches\": {DYN_BATCHES}, \"frac\": {DYN_FRAC}, \"results\": ["
+    );
+    for (i, c) in svc_cells.iter().enumerate() {
+        let comma = if i + 1 < svc_cells.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"strategy\": \"{}\", \"threads\": {}, \"epochs\": {}, \
+             \"total_ops\": {}, \"median_epoch_ns\": {}, \"max_epoch_ns\": {}, \
+             \"ops_per_sec\": {:.1}, \"final_modularity\": {:.6}, \"drift\": {:.6}}}{}",
+            c.strategy,
+            c.threads,
+            c.epochs,
+            c.total_ops,
+            c.median_epoch_ns,
+            c.max_epoch_ns,
+            c.ops_per_sec,
+            c.final_modularity,
+            c.drift,
             comma
         );
     }

@@ -1,0 +1,154 @@
+//! `louvain_serve` — drive the long-lived community service over a
+//! file-backed update stream (PR 3 tentpole surface).
+//!
+//! Boots a [`CommunityService`] on a graph, replays an update-stream
+//! file (`graph::io` `.ups` format) through the coalescing ingest path,
+//! and reports per-epoch latency, ingest throughput and quality drift.
+//! Without `--stream` it generates a churn workload, *writes it to
+//! disk* and replays it from there — the replay is file-backed either
+//! way, and the written stream can be re-fed for deterministic
+//! comparisons across strategies:
+//!
+//! ```text
+//! louvain_serve --family web --scale 12 --batches 10 --frac 0.01 \
+//!               --strategy delta --threads 4
+//! louvain_serve --input graph.bin --stream updates.ups --max-ops 2048
+//! louvain_serve --family web --write-stream /tmp/churn.ups   # keep it
+//! ```
+//!
+//! Arguments are hand-parsed (`--key value`); the offline registry has
+//! no clap.
+
+use anyhow::{Context, Result};
+use gve_louvain::coordinator::cli::Opts;
+use gve_louvain::coordinator::dynamic::churn_timeline;
+use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
+use gve_louvain::coordinator::report::Table;
+use gve_louvain::graph::delta::StreamOp;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::io::{load, write_update_stream, UpdateStreamReader};
+use gve_louvain::louvain::dynamic::SeedStrategy;
+use gve_louvain::louvain::params::LouvainParams;
+use gve_louvain::service::{BatchPolicy, CommunityService, EpochSnapshot, ServiceConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&Opts::parse(&args)) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(opts: &Opts) -> Result<()> {
+    let seed = opts.get_i("seed", 42) as u64;
+    let threads = opts.get_i("threads", 1) as usize;
+    let strategy = SeedStrategy::parse(&opts.get("strategy", "delta"))
+        .context("--strategy must be full | naive | delta")?;
+    let max_ops = opts.get_i("max-ops", 4096).max(1) as usize;
+
+    // --- Graph.
+    let (g0, g_name) = if let Some(path) = opts.flags.get("input") {
+        (load(&PathBuf::from(path))?, path.clone())
+    } else {
+        let fam = opts.get("family", "web");
+        let family = GraphFamily::parse(&fam).with_context(|| format!("unknown family {fam:?}"))?;
+        let scale = opts.get_i("scale", 12) as u32;
+        (generate(family, scale, seed), format!("{fam}-s{scale}"))
+    };
+
+    // --- Stream: given file, or generate + write one.
+    let stream_path = if let Some(p) = opts.flags.get("stream") {
+        PathBuf::from(p)
+    } else {
+        let batches = opts.get_i("batches", 10).max(1) as usize;
+        let frac = opts.get_f("frac", 0.01);
+        let tl = churn_timeline(&g0, batches, frac, seed);
+        let ops: Vec<StreamOp> = tl
+            .batches
+            .iter()
+            .flat_map(|b| b.to_ops().chain(std::iter::once(StreamOp::Commit)))
+            .collect();
+        let path = opts
+            .flags
+            .get("write-stream")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| std::env::temp_dir().join("louvain_serve_churn.ups"));
+        write_update_stream(&ops, &path)?;
+        eprintln!(
+            "generated {} churn batches ({} ops) -> {}",
+            batches,
+            ops.iter().filter(|o| !matches!(o, StreamOp::Commit)).count(),
+            path.display()
+        );
+        path
+    };
+
+    // --- Boot + replay.
+    let cfg = ServiceConfig {
+        params: LouvainParams::with_threads(threads),
+        strategy,
+        policy: BatchPolicy::by_ops(max_ops),
+        ..Default::default()
+    };
+    let mut svc = CommunityService::new(g0, cfg);
+    let boot = svc.snapshot();
+    eprintln!(
+        "booted on {g_name}: |V|={} |E|={} Q={:.4} |Γ|={} ({}, {} worker spawns)",
+        boot.vertices,
+        boot.edges,
+        boot.modularity,
+        boot.num_communities(),
+        strategy.name(),
+        threads.saturating_sub(1),
+    );
+
+    let mut epochs: Vec<Arc<EpochSnapshot>> = Vec::new();
+    let reader = UpdateStreamReader::open(&stream_path)?;
+    for op in reader {
+        if let Some(snap) = svc.submit(op?) {
+            epochs.push(snap);
+        }
+    }
+    if let Some(snap) = svc.flush() {
+        epochs.push(snap);
+    }
+
+    // --- Per-epoch table.
+    let mut t = Table::new(
+        "Service replay (per published epoch)",
+        &["epoch", "ops", "affected", "apply", "detect", "wall", "Q", "|Γ|", "|V|"],
+    );
+    for s in &epochs {
+        t.row(vec![
+            format!("{}", s.epoch),
+            format!("{}", s.stats.batch_ops),
+            format!("{}", s.stats.affected_seeded),
+            fmt_ns(s.stats.apply_ns),
+            fmt_ns(s.stats.detect_ns),
+            fmt_ns(s.stats.wall_ns()),
+            format!("{:.4}", s.modularity),
+            format!("{}", s.num_communities()),
+            format!("{}", s.vertices),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- Summary.
+    let m = svc.metrics();
+    println!(
+        "{} epochs | ingest {:.0} ops/s | epoch latency median {} max {} | \
+         sustained {:.1}M edges/s | Q {:.4} -> {:.4} (drift {:+.4}, min {:.4})",
+        epochs.len(),
+        m.ingest_ops_per_sec(),
+        fmt_ns(m.median_epoch_ns()),
+        fmt_ns(m.max_epoch_ns()),
+        edges_per_sec(svc.graph().num_edges(), m.median_epoch_ns().max(1)) / 1e6,
+        m.initial_modularity,
+        m.last_modularity,
+        m.quality_drift(),
+        m.min_modularity,
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Hand-rolled `--key value` option parsing shared by the binaries
+//! (`repro`, `louvain_serve`) — the offline registry has no clap, and
+//! two drifting copies of the same parser is worse than none.
+
+use std::collections::HashMap;
+
+/// Parsed `--key value` options + positional args.  A `--flag`
+/// followed by another `--option` (or end of input) gets the value
+/// `"true"`.
+pub struct Opts {
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Opts {
+    pub fn parse(args: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Self { flags, positional }
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_i(&self, key: &str, default: i64) -> i64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Opts {
+        Opts::parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn key_value_flags_and_positionals() {
+        let o = parse(&["run", "--scale", "12", "--quick", "--seed", "7", "out.json"]);
+        assert_eq!(o.get("scale", "0"), "12");
+        assert_eq!(o.get_i("seed", 0), 7);
+        assert_eq!(o.get("quick", "false"), "true");
+        assert_eq!(o.get("missing", "d"), "d");
+        assert_eq!(o.get_i("scale", 0), 12);
+        assert_eq!(o.positional, vec!["run", "out.json"]);
+    }
+
+    #[test]
+    fn trailing_flag_and_floats() {
+        let o = parse(&["--frac", "0.05", "--verbose"]);
+        assert!((o.get_f("frac", 0.0) - 0.05).abs() < 1e-12);
+        assert_eq!(o.get_f("other", 0.25), 0.25);
+        assert_eq!(o.get("verbose", "false"), "true");
+        assert_eq!(o.get_i("frac", 9), 9, "non-integer falls back to default");
+    }
+}

@@ -3,17 +3,23 @@
 //!
 //! * [`suite`] — the 13-graph dataset mirroring Table 2 (name, family,
 //!   scale, paper-scale |V|/|E| for the OOM gates);
+//! * [`cli`] — the hand-rolled `--key value` option parser shared by
+//!   the binaries (no clap in the offline registry);
 //! * [`config`] — a TOML-subset parser for `configs/*.toml` experiment
 //!   definitions (offline registry has no serde/toml);
 //! * [`runner`] — cross-system comparison runs with repeats;
 //! * [`dynamic`] — churn-timeline replay: per-batch runtime + quality
 //!   of the dynamic seeding strategies vs. full recompute (PR 2);
+//! * [`service`] — service replay driver: churn timelines through the
+//!   long-lived `CommunityService`, per-epoch cells + summaries (PR 3);
 //! * [`metrics`] — stopwatch + aggregate helpers (geomean et al.);
 //! * [`report`] — markdown / CSV emitters used by benches and the CLI.
 
+pub mod cli;
 pub mod config;
 pub mod dynamic;
 pub mod metrics;
 pub mod report;
 pub mod runner;
+pub mod service;
 pub mod suite;

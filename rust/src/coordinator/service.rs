@@ -1,0 +1,153 @@
+//! Service replay driver (PR 3): feed a PR-2 churn timeline through a
+//! [`CommunityService`] and collect its published epochs — the
+//! service-level counterpart of
+//! [`dynamic::replay_timeline`](super::dynamic).
+//!
+//! The timeline machinery keeps replays deterministic: batches are
+//! pre-generated (so every run and every strategy sees identical
+//! inputs) and ingested via the direct batch path, bypassing the
+//! wall-clock flush trigger.  Tests use this to pin service behaviour
+//! against the bare `DynamicLouvain` oracle; the bench's `"service"`
+//! scenario summarizes the same epochs `louvain_serve` tabulates.
+
+use super::dynamic::ChurnTimeline;
+use super::metrics::median;
+use crate::graph::Csr;
+use crate::service::{CommunityService, EpochSnapshot, ServiceConfig};
+use std::sync::Arc;
+
+/// Replay every batch of `timeline` through a fresh service on `g0`;
+/// returns the service (for follow-up queries / metrics) and the
+/// published [`EpochSnapshot`]s — one per batch, in epoch order.  The
+/// snapshots *are* the replay record; there is deliberately no parallel
+/// cell struct to keep in sync.  (The initial full run is epoch 0 of
+/// the service's metrics but yields no entry here — every config pays
+/// it identically, like the PR-2 replay.)
+pub fn replay_service(
+    g0: &Csr,
+    timeline: &ChurnTimeline,
+    cfg: ServiceConfig,
+) -> (CommunityService, Vec<Arc<EpochSnapshot>>) {
+    let mut svc = CommunityService::new(g0.clone(), cfg);
+    let epochs = timeline.batches.iter().map(|b| svc.ingest_batch(b)).collect();
+    (svc, epochs)
+}
+
+/// Aggregate view of one replay (a bench / report row).
+#[derive(Clone, Debug)]
+pub struct ServiceSummary {
+    pub epochs: usize,
+    pub total_ops: usize,
+    /// Apply + detect across all update epochs.
+    pub total_wall_ns: u64,
+    pub median_epoch_ns: u64,
+    pub max_epoch_ns: u64,
+    /// Accepted ops over total wall time.
+    pub ops_per_sec: f64,
+    pub final_modularity: f64,
+    /// Final modularity minus the *initial full run's* — the same
+    /// definition as `ServiceMetrics::quality_drift`, so bench cells
+    /// and `louvain_serve` report one number for one behaviour.
+    pub drift: f64,
+}
+
+/// Summarize a replay's published epochs.  `initial_modularity` is the
+/// boot epoch's quality (`ServiceMetrics::initial_modularity` — epoch 0
+/// is not in the list); empty input → zeroed summary.
+pub fn summarize_service(epochs: &[Arc<EpochSnapshot>], initial_modularity: f64) -> ServiceSummary {
+    if epochs.is_empty() {
+        return ServiceSummary {
+            epochs: 0,
+            total_ops: 0,
+            total_wall_ns: 0,
+            median_epoch_ns: 0,
+            max_epoch_ns: 0,
+            ops_per_sec: 0.0,
+            final_modularity: 0.0,
+            drift: 0.0,
+        };
+    }
+    let total_ops: usize = epochs.iter().map(|e| e.stats.batch_ops).sum();
+    let total_wall_ns: u64 = epochs.iter().map(|e| e.stats.wall_ns()).sum();
+    let walls: Vec<f64> = epochs.iter().map(|e| e.stats.wall_ns() as f64).collect();
+    ServiceSummary {
+        epochs: epochs.len(),
+        total_ops,
+        total_wall_ns,
+        median_epoch_ns: median(&walls) as u64,
+        max_epoch_ns: epochs.iter().map(|e| e.stats.wall_ns()).max().unwrap_or(0),
+        ops_per_sec: if total_wall_ns == 0 {
+            0.0
+        } else {
+            total_ops as f64 * 1e9 / total_wall_ns as f64
+        },
+        final_modularity: epochs.last().unwrap().modularity,
+        drift: epochs.last().unwrap().modularity - initial_modularity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dynamic::churn_timeline;
+    use crate::graph::generators::{generate, GraphFamily};
+    use crate::louvain::dynamic::SeedStrategy;
+
+    #[test]
+    fn replay_produces_one_epoch_per_batch() {
+        let g0 = generate(GraphFamily::Web, 9, 17);
+        let tl = churn_timeline(&g0, 4, 0.01, 17);
+        let (svc, epochs) = replay_service(&g0, &tl, ServiceConfig::default());
+        assert_eq!(epochs.len(), 4);
+        for (i, e) in epochs.iter().enumerate() {
+            assert_eq!(e.epoch, i as u64 + 1);
+            assert_eq!(e.stats.batch_ops, tl.batches[i].len());
+            assert_eq!(e.edges, tl.graphs[i].num_edges());
+            assert!(e.modularity > 0.5);
+        }
+        // The replay is exact: the service holds the timeline's final graph.
+        assert_eq!(svc.graph(), tl.graphs.last().unwrap());
+        assert_eq!(svc.epoch(), 4);
+        let q0 = svc.metrics().initial_modularity;
+        let s = summarize_service(&epochs, q0);
+        assert_eq!(s.epochs, 4);
+        assert_eq!(s.total_ops, tl.batches.iter().map(|b| b.len()).sum::<usize>());
+        assert!(s.total_wall_ns > 0);
+        assert!(s.ops_per_sec > 0.0);
+        assert_eq!(s.final_modularity, epochs[3].modularity);
+        // Drift and wall totals match the service's own metrics (one
+        // definition across the bench cells and louvain_serve).
+        assert!((s.drift - svc.metrics().quality_drift()).abs() < 1e-12);
+        assert_eq!(s.total_wall_ns, svc.metrics().total_wall_ns());
+    }
+
+    #[test]
+    fn service_epochs_match_the_bare_dynamic_driver() {
+        // Same strategy, same timeline, threads=1: the service must
+        // publish exactly the partitions DynamicLouvain computes
+        // (the service adds snapshots + metrics, not different math).
+        use crate::louvain::dynamic::DynamicLouvain;
+        use crate::louvain::params::LouvainParams;
+        let g0 = generate(GraphFamily::Web, 9, 23);
+        let tl = churn_timeline(&g0, 3, 0.01, 23);
+        let cfg = ServiceConfig { strategy: SeedStrategy::DeltaScreening, ..Default::default() };
+        let (_, epochs) = replay_service(&g0, &tl, cfg);
+        let mut dl =
+            DynamicLouvain::new(LouvainParams::default(), SeedStrategy::DeltaScreening);
+        dl.run_initial(&g0);
+        for (i, (g, b)) in tl.graphs.iter().zip(&tl.batches).enumerate() {
+            let out = dl.update(g, b);
+            assert_eq!(epochs[i].modularity.to_bits(), out.result.modularity.to_bits(), "epoch {}", i + 1);
+            assert_eq!(epochs[i].num_communities(), out.result.num_communities);
+            assert_eq!(epochs[i].stats.affected_seeded, out.affected_seeded);
+        }
+    }
+
+    #[test]
+    fn summarize_empty_is_zeroed() {
+        let s = summarize_service(&[], 0.9);
+        assert_eq!(s.epochs, 0);
+        assert_eq!(s.ops_per_sec, 0.0);
+        assert_eq!(s.drift, 0.0);
+    }
+}

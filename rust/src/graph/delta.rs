@@ -11,8 +11,11 @@
 //!
 //! ## Batch semantics
 //!
-//! * The vertex set is fixed: every endpoint must be `< |V|` (growing
-//!   the graph is a separate concern — see ROADMAP).
+//! * The vertex set **grows on demand** (PR 3): an op referencing an id
+//!   `>= |V|` extends the output graph to `1 + max id` — the new tail
+//!   rows start empty and receive only their batch ops, so a streaming
+//!   service admits new vertices without a rebuild or a cold Louvain
+//!   run (the dynamic driver warm-starts them as singletons).
 //! * **Insertion** `(u, v, w)` adds `w` to the edge's weight, creating
 //!   the edge if absent — the same duplicate-merge convention as
 //!   [`GraphBuilder`](super::builder::GraphBuilder).  Both directions
@@ -26,7 +29,12 @@
 //! ## Pipeline (all on the team runtime via [`Exec`])
 //!
 //! 1. Mirror the batch into directed per-endpoint ops and sort by
-//!    `(src, dst)` — serial, O(B log B) in the batch size only.
+//!    `(src, dst)` on the team
+//!    ([`sort_by_key_stable_parallel`](crate::parallel::sort::sort_by_key_stable_parallel),
+//!    PR 3; serial below its cutover) — the sort must stay **stable**
+//!    so repeated insertions of one pair keep batch order in both
+//!    mirrored groups and the two directions sum f32 weights
+//!    bit-identically.
 //! 2. Per-vertex op counts via the parallel
 //!    [`scatter_count`](crate::parallel::scatter::scatter_count)
 //!    helper, prefix-summed into op ranges.
@@ -43,8 +51,24 @@ use super::csr::{Csr, HoleyCsr};
 use crate::parallel::pool::ParallelOpts;
 use crate::parallel::scan::exclusive_scan_exec;
 use crate::parallel::scatter::scatter_count;
+use crate::parallel::sort::sort_by_key_stable_parallel;
 use crate::parallel::team::Exec;
 use crate::{EdgeWeight, VertexId};
+
+/// One edge-stream operation — the unit the service ingest path and the
+/// `graph::io` update-stream format exchange (PR 3).  A stream is a
+/// flat op sequence; [`Commit`](StreamOp::Commit) marks an explicit
+/// epoch boundary for sources that want to pin batch edges (the
+/// coalescing policy may also cut batches on its own).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StreamOp {
+    /// Undirected insertion / weight addition.
+    Insert(VertexId, VertexId, EdgeWeight),
+    /// Undirected deletion (no-op if absent).
+    Delete(VertexId, VertexId),
+    /// Explicit flush point: close the pending batch.
+    Commit,
+}
 
 /// A batch of undirected edge mutations against a fixed vertex set.
 #[derive(Clone, Debug, Default)]
@@ -78,6 +102,25 @@ impl EdgeBatch {
     pub fn is_empty(&self) -> bool {
         self.insertions.is_empty() && self.deletions.is_empty()
     }
+
+    /// Flatten into [`StreamOp`]s in application order (deletions
+    /// first — the in-batch semantics — then insertions), without a
+    /// trailing [`StreamOp::Commit`].
+    pub fn to_ops(&self) -> impl Iterator<Item = StreamOp> + '_ {
+        self.deletions
+            .iter()
+            .map(|&(u, v)| StreamOp::Delete(u, v))
+            .chain(self.insertions.iter().map(|&(u, v, w)| StreamOp::Insert(u, v, w)))
+    }
+
+    /// Smallest vertex count that fits every endpoint (`1 + max id`;
+    /// 0 for an empty batch) — the growth target of
+    /// [`Csr::apply_batch_into`].
+    pub fn min_vertex_count(&self) -> usize {
+        let ins = self.insertions.iter().map(|&(u, v, _)| u.max(v));
+        let dels = self.deletions.iter().map(|&(u, v)| u.max(v));
+        ins.chain(dels).max().map(|m| m as usize + 1).unwrap_or(0)
+    }
 }
 
 /// One directed mutation slot (internal: batches are mirrored like the
@@ -96,6 +139,8 @@ struct DirectedOp {
 /// pass-workspace contract, extended to the mutation path).
 pub struct DeltaScratch {
     ops: Vec<DirectedOp>,
+    /// Merge buffer of the parallel stable op sort.
+    ops_scratch: Vec<DirectedOp>,
     src_keys: Vec<u32>,
     op_off: Vec<usize>,
     cap: Vec<usize>,
@@ -106,6 +151,7 @@ impl DeltaScratch {
     pub fn new() -> Self {
         Self {
             ops: Vec::new(),
+            ops_scratch: Vec::new(),
             src_keys: Vec::new(),
             op_off: Vec::new(),
             cap: Vec::new(),
@@ -131,9 +177,11 @@ impl Csr {
 
     /// Apply `batch` into `out`, reusing `scratch` across batches.
     ///
-    /// See the [module docs](self) for semantics; panics if an endpoint
-    /// is out of range.  `out`'s storage is resized in place, so a
-    /// timeline replay allocates only while the graph grows.
+    /// See the [module docs](self) for semantics.  Endpoints `>= |V|`
+    /// *grow* the output to `1 + max id` (PR 3) — fresh tail rows start
+    /// empty and receive only their batch ops.  `out`'s storage is
+    /// resized in place, so a timeline replay allocates only while the
+    /// graph grows.
     pub fn apply_batch_into(
         &self,
         batch: &EdgeBatch,
@@ -142,34 +190,37 @@ impl Csr {
         opts: ParallelOpts,
         exec: Exec,
     ) {
-        let n = self.num_vertices();
+        let n_old = self.num_vertices();
+        let n = n_old.max(batch.min_vertex_count());
 
         // --- 1. Directed op list, sorted by (src, dst).
         scratch.ops.clear();
         scratch.src_keys.clear();
         for &(u, v) in &batch.deletions {
-            assert!((u as usize) < n && (v as usize) < n, "deletion ({u},{v}) out of range (n={n})");
             scratch.ops.push(DirectedOp { src: u, dst: v, w: 0.0, del: true });
             if u != v {
                 scratch.ops.push(DirectedOp { src: v, dst: u, w: 0.0, del: true });
             }
         }
         for &(u, v, w) in &batch.insertions {
-            assert!((u as usize) < n && (v as usize) < n, "insertion ({u},{v}) out of range (n={n})");
             scratch.ops.push(DirectedOp { src: u, dst: v, w, del: false });
             if u != v {
                 scratch.ops.push(DirectedOp { src: v, dst: u, w, del: false });
             }
         }
-        // Stable sort: repeated insertions of one pair keep batch order
-        // in *both* mirrored (src, dst) groups, so the two directions
-        // sum their f32 weights in the same order and stay bit-equal.
-        scratch
-            .ops
-            .sort_by_key(|o| ((o.src as u64) << 32) | o.dst as u64);
-        scratch.src_keys.extend(scratch.ops.iter().map(|o| o.src));
-
         let scan_opts = ParallelOpts { record: false, ..opts };
+        // Stable sort (team-parallel, PR 3): repeated insertions of one
+        // pair keep batch order in *both* mirrored (src, dst) groups,
+        // so the two directions sum their f32 weights in the same order
+        // and stay bit-equal.
+        sort_by_key_stable_parallel(
+            &mut scratch.ops,
+            &mut scratch.ops_scratch,
+            |o| ((o.src as u64) << 32) | o.dst as u64,
+            scan_opts,
+            exec,
+        );
+        scratch.src_keys.extend(scratch.ops.iter().map(|o| o.src));
 
         // --- 2. Per-vertex op ranges (scatter histogram → prefix sum).
         scratch.op_off.clear();
@@ -178,7 +229,8 @@ impl Csr {
         exclusive_scan_exec(&mut scratch.op_off, opts.threads, exec);
 
         // --- 3. Capacity upper bounds (degree + ops; deletions only
-        // ever shrink, so this never overflows the holey rows).
+        // ever shrink, so this never overflows the holey rows).  Grown
+        // tail vertices have no old row: capacity is their op count.
         scratch.cap.clear();
         scratch.cap.resize(n + 1, 0);
         {
@@ -186,7 +238,8 @@ impl Csr {
             exec.run_disjoint_mut(&mut scratch.cap[..n], scan_opts, |r, chunk| {
                 for (k, x) in chunk.iter_mut().enumerate() {
                     let v = r.start + k;
-                    *x = self.degree(v) + (op_off[v + 1] - op_off[v]);
+                    let deg = if v < n_old { self.degree(v) } else { 0 };
+                    *x = deg + (op_off[v + 1] - op_off[v]);
                 }
             });
         }
@@ -203,7 +256,8 @@ impl Csr {
             exec.run(n, scan_opts, |range| {
                 for v in range {
                     let row_ops = &ops[op_off[v]..op_off[v + 1]];
-                    let (ts, ws) = self.edges(v);
+                    let (ts, ws): (&[VertexId], &[EdgeWeight]) =
+                        if v < n_old { self.edges(v) } else { (&[], &[]) };
                     if row_ops.is_empty() {
                         for (&t, &w) in ts.iter().zip(ws) {
                             holey.push_edge(v, t, w);
@@ -265,7 +319,8 @@ mod tests {
     use std::collections::BTreeMap;
 
     /// Reference implementation: replay the batch on an edge map and
-    /// rebuild the CSR from scratch.
+    /// rebuild the CSR from scratch (growing to fit the batch, like
+    /// `apply_batch`).
     fn rebuild(g: &Csr, batch: &EdgeBatch) -> Csr {
         let mut map: BTreeMap<(u32, u32), f32> = BTreeMap::new();
         for v in 0..g.num_vertices() {
@@ -283,7 +338,7 @@ mod tests {
                 *map.entry((v, u)).or_insert(0.0) += w;
             }
         }
-        let mut b = GraphBuilder::new(g.num_vertices());
+        let mut b = GraphBuilder::new(g.num_vertices().max(batch.min_vertex_count()));
         for (&(u, v), &w) in &map {
             b.push(u, v, w);
         }
@@ -389,6 +444,103 @@ mod tests {
         let w_fwd = out.edges(0).1[out.edges(0).0.iter().position(|&t| t == 2).unwrap()];
         let w_rev = out.edges(2).1[out.edges(2).0.iter().position(|&t| t == 0).unwrap()];
         assert_eq!(w_fwd.to_bits(), w_rev.to_bits());
+    }
+
+    #[test]
+    fn batch_grows_the_vertex_set() {
+        // Ops referencing ids >= n extend the graph in place (PR 3):
+        // no rebuild, old rows untouched, tail rows hold only their ops.
+        let g = GraphBuilder::new(3)
+            .edge(0, 1, 1.0)
+            .edge(1, 2, 2.0)
+            .build_undirected();
+        let mut b = EdgeBatch::new();
+        b.insert(2, 5, 4.0); // grows to 6 vertices, 3..=4 isolated
+        b.insert(5, 5, 1.0); // self-loop on a brand-new vertex
+        assert_eq!(b.min_vertex_count(), 6);
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        out.validate().unwrap();
+        assert!(out.is_symmetric());
+        assert_eq!(out.num_vertices(), 6);
+        assert_eq!(out, rebuild(&g, &b));
+        assert_eq!(out.edges(0).0, &[1]);
+        assert_eq!(out.edges(5).0, &[2, 5]);
+        assert_eq!(out.degree(3), 0);
+        assert_eq!(out.degree(4), 0);
+    }
+
+    #[test]
+    fn growth_deletions_and_duplicates_match_rebuild() {
+        // A deletion naming an unseen id still grows (uniform rule) and
+        // lands as a no-op; duplicate insertions on a new pair merge.
+        let g = generate(GraphFamily::Road, 7, 3);
+        let n = g.num_vertices();
+        let mut b = EdgeBatch::new();
+        b.delete(0, (n + 9) as u32);
+        b.insert((n + 1) as u32, 2, 0.5);
+        b.insert((n + 1) as u32, 2, 0.25);
+        let out = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        out.validate().unwrap();
+        assert_eq!(out.num_vertices(), n + 10);
+        assert_eq!(out, rebuild(&g, &b));
+
+        // Growth through the reused-scratch path too.
+        let mut scratch = DeltaScratch::new();
+        let mut out2 = Csr::default();
+        g.apply_batch_into(&b, &mut scratch, &mut out2, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(out2, out);
+    }
+
+    #[test]
+    fn large_batches_take_the_parallel_sort_and_match_serial() {
+        // > 2^13 directed ops crosses the parallel-sort cutover; the
+        // stable sort has a unique output, so team and scoped paths
+        // must agree bit-for-bit with the small-batch (serial) path.
+        use crate::parallel::prng::Xoshiro256;
+        let g = generate(GraphFamily::Web, 9, 31);
+        let n = g.num_vertices() as u64;
+        let mut rng = Xoshiro256::new(5);
+        let mut b = EdgeBatch::new();
+        for i in 0..6000 {
+            let u = rng.below(n) as u32;
+            let v = rng.below(n) as u32;
+            // Repeated pairs with distinct f32 weights: tie order is
+            // load-bearing (mirrored sums must stay bit-equal).
+            if i % 3 == 0 {
+                b.insert(1, 2, 0.1 + (i % 7) as f32 * 0.01);
+            } else {
+                b.insert(u, v, 1.0);
+            }
+        }
+        for _ in 0..800 {
+            let e = rng.below(g.num_edges() as u64) as usize;
+            let v = g.offsets.partition_point(|&o| o <= e) - 1;
+            b.delete(v as u32, g.targets[e]);
+        }
+        let serial = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(serial, rebuild(&g, &b));
+        let team = Team::new(4);
+        let opts = ParallelOpts { threads: 4, chunk: 64, ..Default::default() };
+        let par = g.apply_batch(&b, opts, Exec::team(&team));
+        assert_eq!(par, serial);
+        let w12 = par.edges(1).1[par.edges(1).0.iter().position(|&t| t == 2).unwrap()];
+        let w21 = par.edges(2).1[par.edges(2).0.iter().position(|&t| t == 1).unwrap()];
+        assert_eq!(w12.to_bits(), w21.to_bits());
+    }
+
+    #[test]
+    fn batches_flatten_to_stream_ops_in_application_order() {
+        let mut b = EdgeBatch::new();
+        b.insert(0, 1, 2.0);
+        b.delete(3, 4);
+        // Deletions first — the in-batch application order.
+        assert_eq!(
+            b.to_ops().collect::<Vec<_>>(),
+            vec![StreamOp::Delete(3, 4), StreamOp::Insert(0, 1, 2.0)]
+        );
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.min_vertex_count(), 5);
+        assert_eq!(EdgeBatch::new().min_vertex_count(), 0);
     }
 
     #[test]

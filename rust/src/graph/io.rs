@@ -1,9 +1,13 @@
 //! Graph IO: MatrixMarket (the SuiteSparse interchange the paper loads),
-//! whitespace edge lists, and a fast binary format (the "Vite/Nido
-//! binary conversion" step of §5.2).
+//! whitespace edge lists, a fast binary format (the "Vite/Nido binary
+//! conversion" step of §5.2), and — PR 3 — the *update-stream* text
+//! format feeding the long-lived community service
+//! (`service::ingest`): a line-oriented log of edge mutations replayed
+//! without materializing the whole stream in memory.
 
 use super::builder::{symmetrize, GraphBuilder};
 use super::csr::Csr;
+use super::delta::StreamOp;
 use crate::VertexId;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -180,6 +184,107 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
     Ok(g)
 }
 
+/// Write an update stream (`.ups`): one op per line —
+/// `a u v [w]` (insert, weight default 1), `d u v` (delete), `c`
+/// (commit / epoch boundary), `#`-comments.  The streaming counterpart
+/// of the edge-list format, for `service::ingest` replay files.
+pub fn write_update_stream<'a>(
+    ops: impl IntoIterator<Item = &'a StreamOp>,
+    path: &Path,
+) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# gve-louvain update stream: a u v [w] | d u v | c")?;
+    for op in ops {
+        match *op {
+            StreamOp::Insert(u, v, wt) => writeln!(w, "a {u} {v} {wt}")?,
+            StreamOp::Delete(u, v) => writeln!(w, "d {u} {v}")?,
+            StreamOp::Commit => writeln!(w, "c")?,
+        }
+    }
+    Ok(())
+}
+
+/// Streaming reader for the [`write_update_stream`] format: yields one
+/// [`StreamOp`] at a time off a `BufRead`, so a service can replay
+/// arbitrarily long logs in O(1) memory.
+pub struct UpdateStreamReader<R: BufRead> {
+    reader: R,
+    line: String,
+    lineno: usize,
+}
+
+impl UpdateStreamReader<BufReader<std::fs::File>> {
+    /// Open a `.ups` file for streaming.
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        Ok(Self::new(BufReader::new(f)))
+    }
+}
+
+impl<R: BufRead> UpdateStreamReader<R> {
+    pub fn new(reader: R) -> Self {
+        Self { reader, line: String::new(), lineno: 0 }
+    }
+
+    /// Next operation, or `None` at end of stream.
+    pub fn next_op(&mut self) -> Result<Option<StreamOp>> {
+        loop {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            let t = self.line.trim();
+            if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let tag = it.next().unwrap(); // non-empty after trim
+            // Both missing tokens *and* malformed numbers carry the
+            // line number — a corrupt line deep in a long replay file
+            // must be findable from the error alone.
+            let ctx = |what: &str| format!("update stream line {}: {what}", self.lineno);
+            let field = |tok: Option<&str>, what: &str| -> Result<VertexId> {
+                tok.with_context(|| ctx(what))?.parse().with_context(|| ctx(what))
+            };
+            let op = match tag {
+                "a" => {
+                    let u = field(it.next(), "u")?;
+                    let v = field(it.next(), "v")?;
+                    let w: f32 = match it.next() {
+                        Some(s) => s.parse().with_context(|| ctx("w"))?,
+                        None => 1.0,
+                    };
+                    StreamOp::Insert(u, v, w)
+                }
+                "d" => {
+                    let u = field(it.next(), "u")?;
+                    let v = field(it.next(), "v")?;
+                    StreamOp::Delete(u, v)
+                }
+                "c" => StreamOp::Commit,
+                other => bail!("update stream line {}: unknown op {other:?}", self.lineno),
+            };
+            return Ok(Some(op));
+        }
+    }
+}
+
+impl<R: BufRead> Iterator for UpdateStreamReader<R> {
+    type Item = Result<StreamOp>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_op().transpose()
+    }
+}
+
+/// Read a whole update stream into memory (tests / small files; the
+/// service consumes [`UpdateStreamReader`] directly instead).
+pub fn read_update_stream(path: &Path) -> Result<Vec<StreamOp>> {
+    UpdateStreamReader::open(path)?.collect()
+}
+
 /// Load any supported format by extension (`.mtx`, `.bin`, else edge list).
 pub fn load(path: &Path) -> Result<Csr> {
     match path.extension().and_then(|e| e.to_str()) {
@@ -254,6 +359,53 @@ mod tests {
         assert_eq!(g.num_vertices(), 3);
         assert_eq!(g.edges(0).1, &[2.5]);
         assert_eq!(g.edges(2).1, &[1.0]);
+    }
+
+    #[test]
+    fn update_stream_round_trip() {
+        let ops = vec![
+            StreamOp::Insert(0, 1, 2.5),
+            StreamOp::Delete(3, 4),
+            StreamOp::Commit,
+            StreamOp::Insert(5, 5, 1.0),
+            StreamOp::Commit,
+        ];
+        let p = tmp("ops.ups");
+        write_update_stream(&ops, &p).unwrap();
+        assert_eq!(read_update_stream(&p).unwrap(), ops);
+        // Streaming reader yields the same sequence one op at a time.
+        let mut r = UpdateStreamReader::open(&p).unwrap();
+        let mut got = Vec::new();
+        while let Some(op) = r.next_op().unwrap() {
+            got.push(op);
+        }
+        assert_eq!(got, ops);
+    }
+
+    #[test]
+    fn update_stream_parses_defaults_and_comments() {
+        let p = tmp("defaults.ups");
+        std::fs::write(&p, "# header\n\na 0 1\n% alt comment\nd 2 0\nc\n").unwrap();
+        assert_eq!(
+            read_update_stream(&p).unwrap(),
+            vec![StreamOp::Insert(0, 1, 1.0), StreamOp::Delete(2, 0), StreamOp::Commit]
+        );
+    }
+
+    #[test]
+    fn update_stream_rejects_garbage() {
+        let p = tmp("bad.ups");
+        std::fs::write(&p, "a 0 1\nx 1 2\n").unwrap();
+        let err = read_update_stream(&p).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let p2 = tmp("trunc.ups");
+        std::fs::write(&p2, "a 0\n").unwrap();
+        assert!(read_update_stream(&p2).is_err());
+        // Malformed numbers carry the line number and field too.
+        let p3 = tmp("badnum.ups");
+        std::fs::write(&p3, "a 0 1\nc\na 12 x 1.0\n").unwrap();
+        let err = read_update_stream(&p3).unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains('v'), "{err}");
     }
 
     #[test]

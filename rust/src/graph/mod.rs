@@ -16,4 +16,4 @@ pub mod io;
 pub mod properties;
 
 pub use csr::{Csr, HoleyCsr};
-pub use delta::{DeltaScratch, EdgeBatch};
+pub use delta::{DeltaScratch, EdgeBatch, StreamOp};

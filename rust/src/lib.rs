@@ -28,6 +28,10 @@
 //! * [`runtime`] — the PJRT side: loads the AOT-lowered Pallas
 //!   community-scan tile executables (`artifacts/*.hlo.txt`) and runs
 //!   ν-Louvain's local-moving hot-spot through real XLA.
+//! * [`service`] — the long-lived community-detection service (PR 3):
+//!   streaming ingest with batch coalescing, incremental re-detection
+//!   over the dynamic subsystem, and an epoch-snapshot query surface —
+//!   the north-star serving story.
 //! * [`coordinator`] — CLI, config, experiment runner, metrics
 //!   (phase/pass splits) and report generation.
 //! * [`prop`] / [`bench`] — in-tree property-testing and benchmark
@@ -55,6 +59,7 @@ pub mod louvain;
 pub mod parallel;
 pub mod prop;
 pub mod runtime;
+pub mod service;
 
 /// Crate-wide vertex id type (paper: 32-bit vertex identifiers).
 pub type VertexId = u32;

@@ -54,6 +54,8 @@ use super::gve::{GveLouvain, LouvainResult, PassSeed};
 use super::params::LouvainParams;
 use crate::graph::delta::EdgeBatch;
 use crate::graph::Csr;
+use crate::parallel::atomics::as_atomic_u32;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// How a [`DynamicLouvain`] seeds each batch's run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -143,6 +145,16 @@ impl DynamicLouvain {
         self.algo.spawned_workers()
     }
 
+    /// Crate-internal: run `f` on the algorithm's persistent team (see
+    /// [`GveLouvain::with_team_exec`]) — the service applies batches
+    /// and computes snapshot stats on the same workers detection uses.
+    pub(crate) fn with_team_exec<R>(
+        &self,
+        f: impl FnOnce(crate::parallel::team::Exec<'_>, crate::parallel::pool::ParallelOpts) -> R,
+    ) -> R {
+        self.algo.with_team_exec(f)
+    }
+
     /// Initial full run on `g` (every strategy starts cold).
     pub fn run_initial(&mut self, g: &Csr) -> LouvainResult {
         let out = self.algo.run(g);
@@ -151,11 +163,21 @@ impl DynamicLouvain {
     }
 
     /// Re-detect communities on `g`, the graph *after* `batch` was
-    /// applied (see [`Csr::apply_batch`]).  Falls back to a full run
-    /// when no previous state fits `g` (first call, or a vertex-count
-    /// change).
+    /// applied (see [`Csr::apply_batch`]).  A *grown* vertex set (batch
+    /// ops referencing new ids — see `graph::delta`) stays warm: new
+    /// vertices enter as singletons with their own (unused, in-range)
+    /// community id.  Falls back to a full run only when no previous
+    /// state exists or the graph shrank.
     pub fn update(&mut self, g: &Csr, batch: &EdgeBatch) -> DynamicOutcome {
         let n = g.num_vertices();
+        if let Some(m) = self.membership.as_mut() {
+            // Vertex growth (PR 3): id v >= old |V| exceeds every
+            // previous dense community id, so `C[v] = v` is a fresh
+            // singleton and the seed contract (ids < |V|) holds.
+            if m.len() < n {
+                m.extend(m.len() as u32..n as u32);
+            }
+        }
         let warm = self
             .membership
             .as_ref()
@@ -183,38 +205,57 @@ impl DynamicLouvain {
     }
 
     /// Apply the screening rule (module docs) into `self.affected`;
-    /// returns the number of marked vertices.  O(n + Σ deg(endpoint))
-    /// — negligible next to even one pruned local-moving iteration.
+    /// returns the number of marked vertices.
+    ///
+    /// Runs on the algorithm's persistent team (PR 3 satellite —
+    /// previously a serial O(n + Σ deg(endpoint)) scan): the zero-fill,
+    /// the per-change marking and the final count are chunked loops;
+    /// marks are relaxed atomic stores (same-value races are benign,
+    /// the idiom of the renumbering flag pass).
     fn mark_affected(&mut self, g: &Csr, batch: &EdgeBatch) -> usize {
         let n = g.num_vertices();
-        let prev = self.membership.as_ref().expect("screening needs a previous run");
-        let affected = &mut self.affected;
-        affected.clear();
-        affected.resize(n, 0);
-
-        fn mark(affected: &mut [u32], g: &Csr, v: usize) {
-            affected[v] = 1;
-            for &t in g.edges(v).0 {
-                affected[t as usize] = 1;
-            }
-        }
-        for &(u, v, _w) in &batch.insertions {
-            let (u, v) = (u as usize, v as usize);
-            if prev[u] != prev[v] {
-                mark(affected, g, u);
-                mark(affected, g, v);
-            }
-        }
-        for &(u, v) in &batch.deletions {
-            let (u, v) = (u as usize, v as usize);
-            if prev[u] == prev[v] {
-                mark(affected, g, u);
-                if u != v {
-                    mark(affected, g, v);
+        let Self { algo, membership, affected, .. } = self;
+        let prev: &[u32] = membership.as_deref().expect("screening needs a previous run");
+        algo.with_team_exec(|exec, opts| {
+            affected.resize(n, 0);
+            exec.run_disjoint_mut(&mut affected[..], opts, |_r, chunk| chunk.fill(0));
+            let flags = as_atomic_u32(&mut affected[..]);
+            let mark = |v: usize| {
+                flags[v].store(1, Ordering::Relaxed);
+                for &t in g.edges(v).0 {
+                    flags[t as usize].store(1, Ordering::Relaxed);
                 }
-            }
-        }
-        affected.iter().map(|&a| a as usize).sum()
+            };
+            let ins = &batch.insertions;
+            exec.run(ins.len(), opts, |r| {
+                for &(u, v, _w) in &ins[r] {
+                    let (u, v) = (u as usize, v as usize);
+                    if prev[u] != prev[v] {
+                        mark(u);
+                        mark(v);
+                    }
+                }
+            });
+            let dels = &batch.deletions;
+            exec.run(dels.len(), opts, |r| {
+                for &(u, v) in &dels[r] {
+                    let (u, v) = (u as usize, v as usize);
+                    if prev[u] == prev[v] {
+                        mark(u);
+                        if u != v {
+                            mark(v);
+                        }
+                    }
+                }
+            });
+            let total = AtomicUsize::new(0);
+            exec.run(n, opts, |r| {
+                let local: usize =
+                    r.map(|i| flags[i].load(Ordering::Relaxed) as usize).sum();
+                total.fetch_add(local, Ordering::Relaxed);
+            });
+            total.into_inner()
+        })
     }
 }
 
@@ -283,6 +324,75 @@ mod tests {
         assert_eq!(dl.affected[4], 0);
         assert_eq!(dl.affected[5], 0);
         assert_eq!(marked, 3);
+    }
+
+    #[test]
+    fn parallel_marking_matches_the_serial_rule() {
+        // Oracle: the screening rule applied serially.
+        fn serial_mark(g: &Csr, prev: &[u32], batch: &EdgeBatch) -> Vec<u32> {
+            let mut affected = vec![0u32; g.num_vertices()];
+            let mut mark = |v: usize, affected: &mut Vec<u32>| {
+                affected[v] = 1;
+                for &t in g.edges(v).0 {
+                    affected[t as usize] = 1;
+                }
+            };
+            for &(u, v, _w) in &batch.insertions {
+                if prev[u as usize] != prev[v as usize] {
+                    mark(u as usize, &mut affected);
+                    mark(v as usize, &mut affected);
+                }
+            }
+            for &(u, v) in &batch.deletions {
+                if prev[u as usize] == prev[v as usize] {
+                    mark(u as usize, &mut affected);
+                    if u != v {
+                        mark(v as usize, &mut affected);
+                    }
+                }
+            }
+            affected
+        }
+
+        let g0 = generate(GraphFamily::Web, 10, 3);
+        let b = churn_batch(&g0, 0.02, 11);
+        let g1 = g0.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        for threads in [1usize, 4] {
+            let params = LouvainParams { threads, ..Default::default() };
+            let mut dl = DynamicLouvain::new(params, SeedStrategy::DeltaScreening);
+            dl.run_initial(&g0);
+            let prev = dl.membership().unwrap().to_vec();
+            let want = serial_mark(&g1, &prev, &b);
+            let marked = dl.mark_affected(&g1, &b);
+            assert_eq!(dl.affected, want, "threads={threads}");
+            assert_eq!(marked, want.iter().map(|&a| a as usize).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn vertex_growth_warm_starts_instead_of_full_recompute() {
+        let g = two_triangles();
+        let mut dl = DynamicLouvain::new(LouvainParams::default(), SeedStrategy::DeltaScreening);
+        dl.run_initial(&g);
+        // Attach a brand-new vertex 6 to the {3,4,5} triangle; the
+        // batch itself grows the graph (PR 3).
+        let mut b = EdgeBatch::new();
+        b.insert(5, 6, 2.0);
+        b.insert(4, 6, 2.0);
+        let g2 = g.apply_batch(&b, ParallelOpts::default(), Exec::scoped());
+        assert_eq!(g2.num_vertices(), 7);
+        let out = dl.update(&g2, &b);
+        assert_eq!(out.result.membership.len(), 7);
+        // Still screened — not a cold full-recompute fallback: the
+        // untouched {0,1,2} triangle stays out of the seed.
+        assert!(
+            out.affected_seeded < g2.num_vertices(),
+            "growth fell back to full (seeded {})",
+            out.affected_seeded
+        );
+        // The newcomer joins its neighbours' community.
+        assert_eq!(out.result.membership[6], out.result.membership[5]);
+        assert_eq!(out.result.num_communities, 2);
     }
 
     #[test]

@@ -136,6 +136,24 @@ impl GveLouvain {
         self.run_in(g, &mut ws, Some(seed))
     }
 
+    /// Run `f` with this object's persistent team executor and the
+    /// run's (unrecorded) loop options, building the team on first use.
+    /// Crate-internal hook for helpers that piggyback on the workspace
+    /// *between* runs — the delta-screening marking pass and the
+    /// service snapshot stats — so they parallelize on the same workers
+    /// as the pass loop instead of spawning their own.
+    pub(crate) fn with_team_exec<R>(&self, f: impl FnOnce(Exec<'_>, ParallelOpts) -> R) -> R {
+        let mut ws = self.lock_workspace();
+        ws.ensure_team(self.params.threads);
+        let opts = ParallelOpts {
+            threads: self.params.threads,
+            schedule: self.params.schedule,
+            chunk: self.params.chunk,
+            record: false,
+        };
+        f(Exec::team(ws.team.as_deref().expect("ensure_team built the team")), opts)
+    }
+
     /// Poison-tolerant workspace lock: a caught-and-reraised worker
     /// panic mid-run must not turn this object permanently dead — the
     /// workspace holds no invariants a panic can break (every pass
@@ -191,7 +209,7 @@ impl GveLouvain {
             super_b,
             renumber_scratch,
         } = ws;
-        let exec = Exec::team(team.as_ref().expect("prepare built the team"));
+        let exec = Exec::team(team.as_deref().expect("prepare built the team"));
         let pool = pool.as_ref().expect("prepare built the pool");
 
         let opts = ParallelOpts {

@@ -35,12 +35,17 @@ use super::hashtable::TablePool;
 use super::params::LouvainParams;
 use crate::graph::Csr;
 use crate::parallel::pool::ParallelOpts;
-use crate::parallel::team::{Exec, Team};
+use crate::parallel::team::{shared_team, Exec, Team};
+use std::sync::Arc;
 
 /// Reusable runtime resources of one [`GveLouvain`](super::gve::GveLouvain).
 pub struct LouvainWorkspace {
-    /// Persistent worker team (spawned once per thread-count change).
-    pub(crate) team: Option<Team>,
+    /// Persistent worker team — the *process-wide shared* team of this
+    /// width (PR 3, ROADMAP "process-wide team sharing"): every
+    /// workspace asking for `T` threads holds the same `Arc<Team>`, so
+    /// a service or bench building many `GveLouvain` objects spawns
+    /// `T - 1` OS workers once per process, not once per object.
+    pub(crate) team: Option<Arc<Team>>,
     /// Per-thread community tables, sized by the largest pass.
     pub(crate) pool: Option<TablePool>,
     /// K': weighted degrees of the current pass graph.
@@ -85,10 +90,18 @@ impl LouvainWorkspace {
     /// within the run.
     pub fn prepare(&mut self, params: &LouvainParams, n_cap: usize) {
         let threads = params.threads.max(1);
-        if self.team.as_ref().map(Team::threads) != Some(threads) {
-            self.team = Some(Team::new(threads));
-        }
+        self.ensure_team(threads);
         TablePool::ensure(&mut self.pool, params.table, n_cap, threads);
+    }
+
+    /// Ensure the (shared) team exists at this width — the team half of
+    /// [`Self::prepare`], callable without a capacity for helpers that
+    /// only need an executor (delta-screening marking, service stats).
+    pub(crate) fn ensure_team(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if self.team.as_ref().map(|t| t.threads()) != Some(threads) {
+            self.team = Some(shared_team(threads));
+        }
     }
 
     /// Size the pass buffers for an `np`-vertex pass graph.  After the
@@ -108,7 +121,7 @@ impl LouvainWorkspace {
 
     /// OS worker threads spawned by this workspace's team so far.
     pub fn spawned_workers(&self) -> usize {
-        self.team.as_ref().map(Team::spawned_workers).unwrap_or(0)
+        self.team.as_ref().map(|t| t.spawned_workers()).unwrap_or(0)
     }
 }
 
@@ -176,18 +189,27 @@ mod tests {
         ws.prepare(&p, 1000);
         assert_eq!(ws.spawned_workers(), 2);
         let pool_ptr = ws.pool.as_ref().unwrap().storage_ptr(0);
-        let team_ptr = ws.team.as_ref().unwrap() as *const Team;
+        let team_ptr = Arc::as_ptr(ws.team.as_ref().unwrap());
 
         // A second (smaller) run must reuse both.
         ws.prepare(&p, 100);
         assert_eq!(ws.spawned_workers(), 2);
         assert_eq!(ws.pool.as_ref().unwrap().storage_ptr(0), pool_ptr);
-        assert_eq!(ws.team.as_ref().unwrap() as *const Team, team_ptr);
+        assert_eq!(Arc::as_ptr(ws.team.as_ref().unwrap()), team_ptr);
 
-        // Changing the thread count rebuilds the team (only then).
+        // Changing the thread count swaps to that width's team (only then).
         let p4 = LouvainParams { threads: 4, ..Default::default() };
         ws.prepare(&p4, 100);
         assert_eq!(ws.spawned_workers(), 3);
+
+        // Process-wide sharing: a second workspace at the same width
+        // holds the *same* team, not a fresh spawn (PR 3).
+        let mut ws2 = LouvainWorkspace::new();
+        ws2.prepare(&p4, 50);
+        assert_eq!(
+            Arc::as_ptr(ws.team.as_ref().unwrap()),
+            Arc::as_ptr(ws2.team.as_ref().unwrap()),
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Context, Result};
 use gve_louvain::baselines::{run_system, System};
+use gve_louvain::coordinator::cli::Opts;
 use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
 use gve_louvain::coordinator::report::Table;
 use gve_louvain::coordinator::runner::{compare_on_entry, mean_speedup};
@@ -24,7 +25,6 @@ use gve_louvain::graph::io;
 use gve_louvain::graph::properties::GraphProperties;
 use gve_louvain::runtime::executor::MoveExecutor;
 use gve_louvain::runtime::pjrt_louvain::PjrtLouvain;
-use std::collections::HashMap;
 use std::path::PathBuf;
 
 fn main() {
@@ -32,44 +32,6 @@ fn main() {
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
-    }
-}
-
-/// Parsed `--key value` options + positional args.
-struct Opts {
-    flags: HashMap<String, String>,
-    #[allow(dead_code)]
-    positional: Vec<String>,
-}
-
-impl Opts {
-    fn parse(args: &[String]) -> Self {
-        let mut flags = HashMap::new();
-        let mut positional = Vec::new();
-        let mut i = 0;
-        while i < args.len() {
-            if let Some(key) = args[i].strip_prefix("--") {
-                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), args[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.insert(key.to_string(), "true".into());
-                    i += 1;
-                }
-            } else {
-                positional.push(args[i].clone());
-                i += 1;
-            }
-        }
-        Self { flags, positional }
-    }
-
-    fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn get_i(&self, key: &str, default: i64) -> i64 {
-        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 }
 

@@ -7,7 +7,8 @@
 //! loops — the hot path), a scoped fork-join [`pool`] kept as the
 //! reference path, chunk [`schedule`]s matching OpenMP semantics, a
 //! parallel prefix [`scan`], parallel [`scatter`] accumulators
-//! (warm-start Σ' init and batch-delta counting), CAS-loop [`atomics`]
+//! (warm-start Σ' init and batch-delta counting), a parallel *stable*
+//! [`sort`] (the batch-delta op sort), CAS-loop [`atomics`]
 //! for `f64`, deterministic [`prng`]s, and a [`replay`] model that
 //! list-schedules measured chunk costs onto `T` modeled cores for the
 //! strong-scaling study (this testbed exposes a single core; see
@@ -20,8 +21,9 @@ pub mod replay;
 pub mod scan;
 pub mod scatter;
 pub mod schedule;
+pub mod sort;
 pub mod team;
 
 pub use pool::{parallel_for, parallel_for_ctx, parallel_for_disjoint_mut, ParallelOpts, WorkStats};
 pub use schedule::Schedule;
-pub use team::{Exec, Team};
+pub use team::{shared_team, Exec, Team};

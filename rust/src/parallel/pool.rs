@@ -83,6 +83,42 @@ impl WorkStats {
     }
 }
 
+/// Drain `dealer`'s chunks for worker `tid` through `body`, timing each
+/// chunk when `record` is set.  Returns `(busy_ns, chunk_records)`
+/// (both zero/empty otherwise).
+///
+/// This is the one per-worker inner loop shared by the scoped pool
+/// (both the single-thread fast path and the spawned workers) and the
+/// persistent [`Team`](super::team::Team): team/scoped replay parity is
+/// structural, not test-enforced.
+pub(crate) fn run_chunks_for_tid<C, F>(
+    dealer: &ChunkDealer,
+    tid: usize,
+    record: bool,
+    ctx: &mut C,
+    body: &F,
+) -> (u64, Vec<ChunkRecord>)
+where
+    F: Fn(&mut C, std::ops::Range<usize>) + Sync,
+{
+    let mut cursor = 0usize;
+    let mut busy = 0u64;
+    let mut local: Vec<ChunkRecord> = Vec::new();
+    while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
+        if record {
+            let t0 = Instant::now();
+            let (start, len) = (r.start, r.len());
+            body(ctx, r);
+            let ns = t0.elapsed().as_nanos() as u64;
+            busy += ns;
+            local.push(ChunkRecord { thread: tid, start, len, ns });
+        } else {
+            body(ctx, r);
+        }
+    }
+    (busy, local)
+}
+
 /// Parallel loop over `0..n` with a per-thread context.
 ///
 /// `init(tid)` builds each worker's context before it takes chunks;
@@ -96,33 +132,15 @@ where
 {
     let threads = opts.threads.max(1);
     let dealer = ChunkDealer::new(n, threads, opts.schedule, opts.chunk);
-    let stats = Mutex::new(WorkStats { chunks: Vec::new(), busy_ns: vec![0; threads] });
 
     if threads == 1 {
         // Fast path: no spawn, same dealing order.
         let mut ctx = init(0);
-        let mut cursor = 0usize;
-        let mut busy = 0u64;
-        while let Some(r) = dealer.next_chunk(0, &mut cursor) {
-            if opts.record {
-                let t0 = Instant::now();
-                let (start, len) = (r.start, r.len());
-                body(&mut ctx, r);
-                let ns = t0.elapsed().as_nanos() as u64;
-                busy += ns;
-                stats.lock().unwrap().chunks.push(ChunkRecord { thread: 0, start, len, ns });
-            } else {
-                body(&mut ctx, r);
-            }
-        }
-        let mut s = stats.into_inner().unwrap();
-        s.busy_ns[0] = busy;
-        if !opts.record {
-            s.chunks.clear();
-        }
-        return s;
+        let (busy, chunks) = run_chunks_for_tid(&dealer, 0, opts.record, &mut ctx, &body);
+        return WorkStats { chunks, busy_ns: vec![busy] };
     }
 
+    let stats = Mutex::new(WorkStats { chunks: Vec::new(), busy_ns: vec![0; threads] });
     std::thread::scope(|scope| {
         for tid in 0..threads {
             let dealer = &dealer;
@@ -131,21 +149,7 @@ where
             let body = &body;
             scope.spawn(move || {
                 let mut ctx = init(tid);
-                let mut cursor = 0usize;
-                let mut busy = 0u64;
-                let mut local: Vec<ChunkRecord> = Vec::new();
-                while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
-                    if opts.record {
-                        let t0 = Instant::now();
-                        let (start, len) = (r.start, r.len());
-                        body(&mut ctx, r);
-                        let ns = t0.elapsed().as_nanos() as u64;
-                        busy += ns;
-                        local.push(ChunkRecord { thread: tid, start, len, ns });
-                    } else {
-                        body(&mut ctx, r);
-                    }
-                }
+                let (busy, local) = run_chunks_for_tid(dealer, tid, opts.record, &mut ctx, &body);
                 let mut s = stats.lock().unwrap();
                 s.busy_ns[tid] = busy;
                 s.chunks.extend_from_slice(&local);

@@ -1,0 +1,218 @@
+//! Parallel **stable** sort-by-key (PR 3 satellite).
+//!
+//! `Csr::apply_batch` sorts its mirrored directed-op list by
+//! `(src, dst)` and depends on stability: repeated insertions of one
+//! pair must keep batch order in *both* mirrored groups so the two
+//! directions sum their f32 weights bit-identically (see
+//! `graph::delta` and its
+//! `repeated_inserts_sum_bit_identically_in_both_directions` test).
+//! That rules out `sort_unstable` and per-thread bucket tricks; this
+//! module provides the classic stable alternative: cut the slice into
+//! one contiguous segment per thread, stably sort each segment in
+//! parallel, then merge pairs of neighbouring runs (left-before-right
+//! on equal keys) over `ceil(log2 T)` parallel rounds, ping-ponging
+//! between the data and a reused scratch buffer.
+//!
+//! A stable sort has exactly one correct output, so the parallel result
+//! is bit-identical to `slice::sort_by_key` at any thread count — the
+//! serial fallback below is also the test oracle.
+
+use super::pool::{ParallelOpts, RawSend};
+use super::schedule::Schedule;
+use super::team::Exec;
+
+/// Stably sort `data` by `key` on `exec`, reusing `scratch` as the
+/// merge buffer (grown to `data.len()` on first use, kept after).
+///
+/// Equivalent to `data.sort_by_key(key)` — including tie order — at
+/// every thread count; small inputs and `threads == 1` take the serial
+/// path directly.
+pub fn sort_by_key_stable_parallel<T, K, F>(
+    data: &mut Vec<T>,
+    scratch: &mut Vec<T>,
+    key: F,
+    opts: ParallelOpts,
+    exec: Exec,
+) where
+    T: Copy + Send + Sync,
+    K: Ord,
+    F: Fn(&T) -> K + Sync,
+{
+    /// Below this length the spawn/merge bookkeeping costs more than
+    /// the sort itself.
+    const MIN_PAR: usize = 1 << 13;
+    let n = data.len();
+    let threads = opts.threads.max(1);
+    if threads <= 1 || n < MIN_PAR {
+        data.sort_by_key(key);
+        return;
+    }
+
+    // Segment bounds: `threads` contiguous runs covering 0..n.
+    let bounds: Vec<usize> = (0..=threads).map(|i| i * n / threads).collect();
+    // One task per worker; chunk 1 + static dealing keeps task i on a
+    // distinct thread without any cross-task imbalance mattering (the
+    // merge rounds are the balanced part).
+    let task_opts = ParallelOpts {
+        threads,
+        schedule: Schedule::Static,
+        chunk: 1,
+        record: false,
+    };
+
+    // Phase 1: stable per-segment sorts (disjoint subslices).
+    {
+        let dp = RawSend(data.as_mut_ptr());
+        let bounds = &bounds;
+        let key = &key;
+        exec.run(threads, task_opts, move |r| {
+            let dp = dp;
+            for seg in r {
+                let (lo, hi) = (bounds[seg], bounds[seg + 1]);
+                // SAFETY: segments are disjoint and each `seg` index is
+                // dealt to exactly one chunk.
+                let s = unsafe { std::slice::from_raw_parts_mut(dp.0.add(lo), hi - lo) };
+                s.sort_by_key(key);
+            }
+        });
+    }
+
+    // Phase 2: merge neighbouring runs, doubling run width per round.
+    // `src` always holds the current runs; each round writes into
+    // `dst`, then the roles swap.  Vec swaps move pointers, not
+    // elements, so the caller's `data` ends up holding the result.
+    scratch.clear();
+    scratch.resize(n, data[0]);
+    let mut in_data = true; // current runs live in `data`
+    let mut width = 1usize;
+    while width < threads {
+        let (src, dst): (&[T], &mut Vec<T>) =
+            if in_data { (&data[..], &mut *scratch) } else { (&scratch[..], &mut *data) };
+        let pairs = threads.div_ceil(2 * width);
+        let dp = RawSend(dst.as_mut_ptr());
+        let bounds = &bounds;
+        let key = &key;
+        exec.run(pairs, task_opts, move |r| {
+            let dp = dp;
+            for p in r {
+                let i = p * 2 * width;
+                let lo = bounds[i];
+                let mid = bounds[(i + width).min(threads)];
+                let hi = bounds[(i + 2 * width).min(threads)];
+                // SAFETY: pair output ranges [lo, hi) are disjoint.
+                let out = unsafe { std::slice::from_raw_parts_mut(dp.0.add(lo), hi - lo) };
+                merge_stable(&src[lo..mid], &src[mid..hi], out, key);
+            }
+        });
+        in_data = !in_data;
+        width *= 2;
+    }
+    if !in_data {
+        std::mem::swap(data, scratch);
+    }
+}
+
+/// Stable two-run merge: equal keys take the left run first, so runs
+/// that were stably sorted stay stably ordered overall.
+fn merge_stable<T: Copy, K: Ord>(a: &[T], b: &[T], out: &mut [T], key: &impl Fn(&T) -> K) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        let take_a = j >= b.len() || (i < a.len() && key(&a[i]) <= key(&b[j]));
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::prng::Xoshiro256;
+    use crate::parallel::team::Team;
+
+    /// Payload with a tie-breaking tag the key ignores: stability means
+    /// tags stay in input order within each key group.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    struct Item {
+        k: u32,
+        tag: u32,
+    }
+
+    fn random_items(n: usize, key_space: u64, seed: u64) -> Vec<Item> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|i| Item { k: rng.below(key_space) as u32, tag: i as u32 })
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_stable_sort_across_sizes_and_threads() {
+        let team = Team::new(4);
+        for n in [0usize, 1, 7, (1 << 13) - 1, 1 << 13, 50_000] {
+            // Small key space forces long tie runs — the stability
+            // stress case.
+            for key_space in [4u64, 1 << 20] {
+                let base = random_items(n, key_space, 9 + n as u64);
+                let mut want = base.clone();
+                want.sort_by_key(|x| x.k);
+                for threads in [1usize, 2, 3, 4] {
+                    for exec in [Exec::scoped(), Exec::team(&team)] {
+                        let mut got = base.clone();
+                        let mut scratch = Vec::new();
+                        let opts = ParallelOpts { threads, ..Default::default() };
+                        sort_by_key_stable_parallel(&mut got, &mut scratch, |x| x.k, opts, exec);
+                        assert_eq!(got, want, "n={n} ks={key_space} t={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let team = Team::new(4);
+        let opts = ParallelOpts { threads: 4, ..Default::default() };
+        let mut scratch = Vec::new();
+        let mut a = random_items(40_000, 100, 1);
+        sort_by_key_stable_parallel(&mut a, &mut scratch, |x| x.k, opts, Exec::team(&team));
+        assert!(scratch.capacity() >= 40_000);
+        let cap = scratch.capacity();
+        // A second, smaller sort must not regrow the scratch.
+        let mut b = random_items(20_000, 100, 2);
+        sort_by_key_stable_parallel(&mut b, &mut scratch, |x| x.k, opts, Exec::team(&team));
+        assert_eq!(scratch.capacity(), cap);
+        let mut want = random_items(20_000, 100, 2);
+        want.sort_by_key(|x| x.k);
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn already_sorted_and_reversed_inputs() {
+        let team = Team::new(3);
+        let opts = ParallelOpts { threads: 3, ..Default::default() };
+        let n = 20_000;
+        let mut asc: Vec<Item> = (0..n).map(|i| Item { k: i as u32, tag: i as u32 }).collect();
+        let want = asc.clone();
+        let mut scratch = Vec::new();
+        sort_by_key_stable_parallel(&mut asc, &mut scratch, |x| x.k, opts, Exec::team(&team));
+        assert_eq!(asc, want);
+        let mut desc: Vec<Item> =
+            (0..n).map(|i| Item { k: (n - i) as u32, tag: i as u32 }).collect();
+        sort_by_key_stable_parallel(&mut desc, &mut scratch, |x| x.k, opts, Exec::team(&team));
+        assert!(desc.windows(2).all(|w| w[0].k <= w[1].k));
+    }
+
+    #[test]
+    fn merge_stable_prefers_left_on_ties() {
+        let a = [Item { k: 1, tag: 0 }, Item { k: 2, tag: 1 }];
+        let b = [Item { k: 1, tag: 2 }, Item { k: 2, tag: 3 }];
+        let mut out = [Item { k: 0, tag: 0 }; 4];
+        merge_stable(&a, &b, &mut out, &|x: &Item| x.k);
+        assert_eq!(out.map(|x| x.tag), [0, 2, 1, 3]);
+    }
+}

@@ -34,9 +34,8 @@
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// Lock ignoring poisoning: panics inside job bodies are caught before
 /// any team lock is taken, so a poisoned flag never indicates a broken
@@ -46,7 +45,7 @@ fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-use super::pool::{parallel_for_ctx, ChunkRecord, ParallelOpts, RawSend, WorkStats};
+use super::pool::{parallel_for_ctx, run_chunks_for_tid, ChunkRecord, ParallelOpts, RawSend, WorkStats};
 use super::schedule::ChunkDealer;
 
 /// Total OS threads ever spawned by [`Team`]s in this process (tests
@@ -256,27 +255,13 @@ impl Team {
                 return;
             }
             let mut ctx = init(tid);
-            let mut cursor = 0usize;
+            let (busy, local) = run_chunks_for_tid(&dealer, tid, opts.record, &mut ctx, &body);
             if opts.record {
-                let mut busy = 0u64;
-                let mut local: Vec<ChunkRecord> = Vec::new();
-                while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
-                    let t0 = Instant::now();
-                    let (start, len) = (r.start, r.len());
-                    body(&mut ctx, r);
-                    let ns = t0.elapsed().as_nanos() as u64;
-                    busy += ns;
-                    local.push(ChunkRecord { thread: tid, start, len, ns });
-                }
                 // One uncontended lock per member per job (vs the
                 // scoped path's shared Mutex<WorkStats>).
                 let mut s = lock_ignore_poison(&slots[tid].0);
                 s.busy = busy;
                 s.chunks = local;
-            } else {
-                while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
-                    body(&mut ctx, r);
-                }
             }
         };
         if effective == 1 {
@@ -310,6 +295,37 @@ impl Team {
     {
         Exec::team(self).run_disjoint_mut(data, opts, body)
     }
+}
+
+/// Process-wide team registry for [`shared_team`]: one live [`Team`]
+/// per width, held weakly so an unused team still shuts its workers
+/// down when the last owner drops it.
+static SHARED_TEAMS: Mutex<Vec<(usize, Weak<Team>)>> = Mutex::new(Vec::new());
+
+/// A process-wide shared [`Team`] of the given width.
+///
+/// Every caller asking for the same `threads` gets the *same* team
+/// (ROADMAP "process-wide team sharing"): a service handling many
+/// graphs, or benches building one `GveLouvain` per measurement, stop
+/// paying `threads - 1` OS spawns per object.  Concurrent dispatchers
+/// are safe — [`Team::dispatch`] serializes them — they just share the
+/// workers.  The registry holds [`Weak`] references, so a width's team
+/// is torn down (workers joined) when its last `Arc` drops and respawned
+/// on the next request.
+pub fn shared_team(threads: usize) -> Arc<Team> {
+    let threads = threads.max(1);
+    let mut reg = lock_ignore_poison(&SHARED_TEAMS);
+    if let Some(t) = reg
+        .iter()
+        .find(|(w, _)| *w == threads)
+        .and_then(|(_, t)| t.upgrade())
+    {
+        return t;
+    }
+    let team = Arc::new(Team::new(threads));
+    reg.retain(|(_, t)| t.strong_count() > 0);
+    reg.push((threads, Arc::downgrade(&team)));
+    team
 }
 
 impl Drop for Team {
@@ -587,6 +603,38 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn shared_team_is_one_team_per_width() {
+        let a = shared_team(3);
+        let b = shared_team(3);
+        assert!(Arc::ptr_eq(&a, &b), "same width must share one team");
+        assert_eq!(a.spawned_workers(), 2);
+        let c = shared_team(2);
+        assert!(!Arc::ptr_eq(&a, &c), "different widths are different teams");
+        // Both usable, including concurrently from two dispatcher threads.
+        std::thread::scope(|s| {
+            for t in [&a, &c] {
+                s.spawn(move || {
+                    let n = 4001;
+                    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    t.run(n, opts(t.threads(), Schedule::Dynamic, 64, false), |r| {
+                        for i in r {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+                });
+            }
+        });
+        // Dropping every strong ref tears the width down; the next
+        // request respawns a fresh team.
+        let a_ptr = Arc::as_ptr(&a);
+        drop((a, b));
+        let d = shared_team(3);
+        assert_eq!(d.spawned_workers(), 2);
+        let _ = a_ptr; // may or may not be reused by the allocator
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Ingest-side batching: coalesce a stream of edge ops into
+//! [`EdgeBatch`]es under a flush policy (PR 3).
+//!
+//! The dynamic-Louvain economics only work per *batch* — screening and
+//! warm-starting amortize one detection pass over many ops — so the
+//! service never detects per op.  [`IngestBuffer`] accumulates ops and
+//! declares a flush when any of three triggers fires:
+//!
+//! * **max-ops** — the pending batch reached [`BatchPolicy::max_ops`]
+//!   (bounds detection work per epoch);
+//! * **max-latency** — the *oldest* pending op has waited
+//!   [`BatchPolicy::max_latency`] (bounds staleness of the query
+//!   surface under a *trickling* stream; a stream that goes fully idle
+//!   needs the driver's `CommunityService::poll` tick, since `push`
+//!   only runs when an op arrives);
+//! * **explicit commit** — the stream carried a
+//!   [`StreamOp::Commit`] marker (deterministic epoch boundaries for
+//!   replay files and tests; replays that must be bit-reproducible use
+//!   commits or max-ops, never the wall-clock trigger).
+//!
+//! The buffer only *decides*; the service owns applying the batch and
+//! publishing the epoch.
+//!
+//! ## Temporal semantics under coalescing
+//!
+//! [`EdgeBatch`] applies *all* deletions before *all* insertions —
+//! within one batch, `delete + insert` means "replace".  A raw op log
+//! is *temporal*: `insert` then `delete` of the same pair must end
+//! deleted, wherever the policy cuts the batch.  The buffer therefore
+//! cancels pending insertions of a pair when a deletion of that pair
+//! arrives (they are temporally dead — the delete removes the edge
+//! regardless), so the coalesced batch reproduces the log's sequential
+//! meaning exactly: ops before the delete vanish, inserts after it
+//! replace (which is precisely the batch rule).
+
+use crate::graph::delta::{EdgeBatch, StreamOp};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// When the pending batch is cut into an epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush once this many undirected ops are pending.
+    pub max_ops: usize,
+    /// Flush once the oldest pending op has waited this long.
+    /// Evaluated when an op arrives ([`IngestBuffer::push`]) and on
+    /// explicit [`IngestBuffer::due`] checks — a stream that goes
+    /// quiet needs a driver-side tick (`CommunityService::poll`) for
+    /// this bound to hold; `push` alone cannot fire on silence.
+    pub max_latency: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 4096 ops ≈ one screening seed worth of work on the planted
+        // families; 50 ms keeps interactive queries fresh.
+        Self { max_ops: 4096, max_latency: Duration::from_millis(50) }
+    }
+}
+
+impl BatchPolicy {
+    /// A policy that flushes only on max-ops / explicit commits —
+    /// deterministic for replays regardless of machine speed.
+    pub fn by_ops(max_ops: usize) -> Self {
+        Self { max_ops: max_ops.max(1), max_latency: Duration::MAX }
+    }
+}
+
+/// Op accumulator applying a [`BatchPolicy`].
+pub struct IngestBuffer {
+    policy: BatchPolicy,
+    pending: EdgeBatch,
+    /// Canonical `(min, max)` pair → indices of its pending insertions,
+    /// so a deletion cancels them (temporal semantics, module docs) in
+    /// O(its own inserts) instead of rescanning the whole list.
+    insert_idx: HashMap<(u32, u32), Vec<u32>>,
+    /// Tombstones parallel to `pending.insertions`; compacted once at
+    /// [`Self::take`], keeping ingest O(1) amortized per op.
+    dead: Vec<bool>,
+    dead_count: usize,
+    /// Arrival time of the oldest pending op (latency trigger).
+    oldest: Option<Instant>,
+}
+
+fn canonical(u: u32, v: u32) -> (u32, u32) {
+    if u <= v {
+        (u, v)
+    } else {
+        (v, u)
+    }
+}
+
+impl IngestBuffer {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            pending: EdgeBatch::new(),
+            insert_idx: HashMap::new(),
+            dead: Vec::new(),
+            dead_count: 0,
+            oldest: None,
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Queue one op; returns `true` when the batch should flush *now*
+    /// ([`StreamOp::Commit`] queues nothing and always returns `true`).
+    pub fn push(&mut self, op: StreamOp) -> bool {
+        if matches!(op, StreamOp::Commit) {
+            return true;
+        }
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        match op {
+            StreamOp::Insert(u, v, w) => {
+                self.insert_idx
+                    .entry(canonical(u, v))
+                    .or_default()
+                    .push(self.pending.insertions.len() as u32);
+                self.dead.push(false);
+                self.pending.insert(u, v, w);
+            }
+            StreamOp::Delete(u, v) => {
+                // Cancel temporally-earlier insertions of this pair
+                // (module docs) before queueing the delete.
+                if let Some(idxs) = self.insert_idx.remove(&canonical(u, v)) {
+                    for i in idxs {
+                        self.dead[i as usize] = true;
+                        self.dead_count += 1;
+                    }
+                }
+                self.pending.delete(u, v);
+            }
+            StreamOp::Commit => unreachable!("handled above"),
+        }
+        self.due()
+    }
+
+    /// Whether a trigger has fired for the pending ops.
+    pub fn due(&self) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        self.pending.len() >= self.policy.max_ops
+            || self.oldest.map(|t| t.elapsed() >= self.policy.max_latency).unwrap_or(false)
+    }
+
+    pub fn pending_ops(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Hand the pending batch over (leaving the buffer empty), dropping
+    /// delete-cancelled insertions.  The service calls this on flush;
+    /// callers draining a stream manually use it for the trailing
+    /// partial batch.
+    pub fn take(&mut self) -> EdgeBatch {
+        self.oldest = None;
+        self.insert_idx.clear();
+        let mut batch = std::mem::take(&mut self.pending);
+        if self.dead_count > 0 {
+            let dead = std::mem::take(&mut self.dead);
+            // retain visits in order, so the parallel tombstone list
+            // lines up index-for-index.
+            let mut it = dead.iter();
+            batch.insertions.retain(|_| !*it.next().expect("tombstones parallel insertions"));
+            self.dead_count = 0;
+        } else {
+            self.dead.clear();
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_max_ops() {
+        let mut buf = IngestBuffer::new(BatchPolicy::by_ops(3));
+        assert!(!buf.push(StreamOp::Insert(0, 1, 1.0)));
+        assert!(!buf.push(StreamOp::Delete(1, 2)));
+        assert!(buf.push(StreamOp::Insert(2, 3, 1.0)));
+        let b = buf.take();
+        assert_eq!(b.len(), 3);
+        assert!(buf.is_empty());
+        assert!(!buf.due());
+    }
+
+    #[test]
+    fn commit_forces_flush_without_queueing() {
+        let mut buf = IngestBuffer::new(BatchPolicy::by_ops(100));
+        buf.push(StreamOp::Insert(0, 1, 1.0));
+        assert!(buf.push(StreamOp::Commit));
+        assert_eq!(buf.pending_ops(), 1, "commit carries no edge");
+        // A commit with nothing pending is still a flush signal; the
+        // service skips publishing when take() would be empty.
+        let mut empty = IngestBuffer::new(BatchPolicy::by_ops(100));
+        assert!(empty.push(StreamOp::Commit));
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn latency_trigger_fires_on_old_ops() {
+        let mut buf = IngestBuffer::new(BatchPolicy {
+            max_ops: usize::MAX,
+            max_latency: Duration::from_millis(0),
+        });
+        // Zero latency budget: the first op is immediately due.
+        assert!(buf.push(StreamOp::Insert(0, 1, 1.0)));
+        assert!(buf.due());
+        buf.take();
+        assert!(!buf.due(), "empty buffer is never due");
+    }
+
+    #[test]
+    fn by_ops_policy_ignores_the_clock() {
+        let buf = IngestBuffer::new(BatchPolicy::by_ops(10));
+        assert_eq!(buf.policy().max_latency, Duration::MAX);
+    }
+
+    #[test]
+    fn delete_cancels_earlier_inserts_of_the_pair() {
+        // Temporal log: insert (1,2) then delete it — coalesced into one
+        // batch, the edge must end *deleted* (the batch layer's
+        // delete-before-insert rule would otherwise resurrect it).
+        let mut buf = IngestBuffer::new(BatchPolicy::by_ops(100));
+        buf.push(StreamOp::Insert(1, 2, 5.0));
+        buf.push(StreamOp::Insert(2, 1, 3.0)); // same undirected pair
+        buf.push(StreamOp::Insert(3, 4, 1.0)); // unrelated, must survive
+        buf.push(StreamOp::Delete(1, 2));
+        let b = buf.take();
+        assert_eq!(b.insertions, vec![(3, 4, 1.0)]);
+        assert_eq!(b.deletions, vec![(1, 2)]);
+
+        // Insert *after* the delete: batch replace == temporal order.
+        buf.push(StreamOp::Delete(5, 6));
+        buf.push(StreamOp::Insert(5, 6, 2.0));
+        let b2 = buf.take();
+        assert_eq!(b2.insertions, vec![(5, 6, 2.0)]);
+        assert_eq!(b2.deletions, vec![(5, 6)]);
+
+        // take() reset the pair set: a fresh insert of (1,2) is kept.
+        buf.push(StreamOp::Insert(1, 2, 7.0));
+        assert_eq!(buf.take().insertions, vec![(1, 2, 7.0)]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Service-side observability: cumulative ingest counters, per-epoch
+//! latency history and quality drift (PR 3).
+//!
+//! Everything the `louvain_serve` binary and the bench's `"service"`
+//! scenario report comes from here; the counters are plain fields
+//! updated by the single-threaded ingest loop (readers see them via
+//! `CommunityService::metrics`, not concurrently).
+
+use super::snapshot::EpochStats;
+use crate::coordinator::metrics::median;
+
+/// Cumulative service counters plus the full epoch-latency history.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceMetrics {
+    /// Edge ops accepted (commit markers excluded).
+    pub ops_ingested: u64,
+    /// Stream ops dropped by the `max_vertices` growth guard.
+    pub ops_rejected: u64,
+    /// Batches applied / epochs published past the initial one.
+    pub batches_applied: u64,
+    /// Across *update* epochs only — the boot epoch's full run is a
+    /// different animal and lives in `epoch_history[0]`; keeping it out
+    /// of the totals makes every derived rate here agree with
+    /// `coordinator::service::summarize_service` (whose cells exclude
+    /// the boot epoch too).
+    pub total_apply_ns: u64,
+    pub total_detect_ns: u64,
+    /// Per-epoch stats in publish order (initial epoch included).
+    pub epoch_history: Vec<EpochStats>,
+    /// Modularity of the initial full run.
+    pub initial_modularity: f64,
+    /// Modularity of the latest epoch.
+    pub last_modularity: f64,
+    /// Lowest modularity ever published (worst-case drift).
+    pub min_modularity: f64,
+}
+
+impl ServiceMetrics {
+    pub(crate) fn record_initial(&mut self, stats: EpochStats, modularity: f64) {
+        self.initial_modularity = modularity;
+        self.last_modularity = modularity;
+        self.min_modularity = modularity;
+        self.epoch_history.push(stats);
+    }
+
+    pub(crate) fn record_epoch(&mut self, stats: EpochStats, modularity: f64) {
+        self.batches_applied += 1;
+        self.total_apply_ns += stats.apply_ns;
+        self.total_detect_ns += stats.detect_ns;
+        self.last_modularity = modularity;
+        self.min_modularity = self.min_modularity.min(modularity);
+        self.epoch_history.push(stats);
+    }
+
+    /// Ingest-to-publish wall time across the update epochs so far
+    /// (boot excluded, see the field docs).
+    pub fn total_wall_ns(&self) -> u64 {
+        self.total_apply_ns + self.total_detect_ns
+    }
+
+    /// Sustained ingest throughput: accepted ops over update-epoch wall
+    /// time (apply + detect — the time the ingest loop was busy on
+    /// them; ops only exist after boot).
+    pub fn ingest_ops_per_sec(&self) -> f64 {
+        let ns = self.total_wall_ns();
+        if ns == 0 {
+            return 0.0;
+        }
+        self.ops_ingested as f64 * 1e9 / ns as f64
+    }
+
+    /// Median ingest-to-publish latency over *update* epochs (the
+    /// initial full run is a different animal and excluded).
+    pub fn median_epoch_ns(&self) -> u64 {
+        let walls: Vec<f64> = self
+            .epoch_history
+            .iter()
+            .skip(1)
+            .map(|e| e.wall_ns() as f64)
+            .collect();
+        if walls.is_empty() {
+            0
+        } else {
+            median(&walls) as u64
+        }
+    }
+
+    /// Worst epoch latency (same exclusion as the median).
+    pub fn max_epoch_ns(&self) -> u64 {
+        self.epoch_history.iter().skip(1).map(|e| e.wall_ns()).max().unwrap_or(0)
+    }
+
+    /// Signed quality drift since the initial run (negative = lost
+    /// modularity under churn).
+    pub fn quality_drift(&self) -> f64 {
+        self.last_modularity - self.initial_modularity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(apply_ns: u64, detect_ns: u64) -> EpochStats {
+        EpochStats { apply_ns, detect_ns, ..Default::default() }
+    }
+
+    #[test]
+    fn counters_accumulate_and_derive() {
+        let mut m = ServiceMetrics::default();
+        m.record_initial(stats(0, 100), 0.9);
+        m.ops_ingested = 30;
+        m.record_epoch(stats(10, 40), 0.88);
+        m.record_epoch(stats(10, 20), 0.91);
+        m.record_epoch(stats(10, 60), 0.86);
+        assert_eq!(m.batches_applied, 3);
+        // Totals cover update epochs only — the boot run's 100ns stays
+        // in epoch_history[0] but out of every derived rate.
+        assert_eq!(m.total_apply_ns, 30);
+        assert_eq!(m.total_detect_ns, 120);
+        assert_eq!(m.total_wall_ns(), 150);
+        assert_eq!(m.epoch_history.len(), 4);
+        assert_eq!(m.epoch_history[0].detect_ns, 100);
+        // Median over update epochs only: {50, 30, 70} → 50.
+        assert_eq!(m.median_epoch_ns(), 50);
+        assert_eq!(m.max_epoch_ns(), 70);
+        assert!((m.quality_drift() - (0.86 - 0.9)).abs() < 1e-12);
+        assert!((m.min_modularity - 0.86).abs() < 1e-12);
+        assert!((m.ingest_ops_per_sec() - 30.0 * 1e9 / 150.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.median_epoch_ns(), 0);
+        assert_eq!(m.max_epoch_ns(), 0);
+        assert_eq!(m.ingest_ops_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Immutable epoch snapshots and the atomically-swapped cell readers
+//! hold (PR 3).
+//!
+//! The service's query surface is *epoch-consistent*: every detection
+//! pass publishes one [`EpochSnapshot`] — the renumbered membership
+//! plus everything a query needs (community sizes, modularity, graph
+//! shape, timing) — as a fresh `Arc` swapped into the [`SnapshotCell`].
+//! Readers clone the `Arc` and query at leisure; they can *never*
+//! observe a half-updated membership, because snapshots are immutable
+//! and the swap is a single pointer store.  Reads never wait on batch
+//! application or detection — the cell's lock is held only for the
+//! pointer copy on either side.
+
+use std::sync::{Arc, Mutex};
+
+/// Per-epoch bookkeeping published alongside the membership (feeds the
+/// service metrics and the bench's epoch-latency cells).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochStats {
+    /// Undirected ops in the batch that produced this epoch (0 for the
+    /// initial epoch).
+    pub batch_ops: usize,
+    /// Vertices seeded as affected by the detection strategy.
+    pub affected_seeded: usize,
+    /// Louvain passes of the detection run.
+    pub passes: usize,
+    /// Wall time applying the batch to the CSR.
+    pub apply_ns: u64,
+    /// Wall time of the (seeded) detection run.
+    pub detect_ns: u64,
+}
+
+impl EpochStats {
+    /// Ingest-to-publish latency of this epoch.
+    pub fn wall_ns(&self) -> u64 {
+        self.apply_ns + self.detect_ns
+    }
+}
+
+/// One complete, immutable detection result over one graph state.
+#[derive(Clone, Debug)]
+pub struct EpochSnapshot {
+    /// Monotone epoch id (0 = the initial full run).
+    pub epoch: u64,
+    /// Vertices of the graph this epoch describes.
+    pub vertices: usize,
+    /// Directed edge slots of that graph.
+    pub edges: usize,
+    /// Modularity of `membership` on that graph.
+    pub modularity: f64,
+    pub stats: EpochStats,
+    /// Dense renumbered membership (`membership[v] < num_communities`).
+    membership: Vec<u32>,
+    /// Member count per dense community id.
+    community_sizes: Vec<usize>,
+}
+
+impl EpochSnapshot {
+    /// Assemble a snapshot; `community_sizes.len()` is `|Γ|`.
+    pub(crate) fn new(
+        epoch: u64,
+        vertices: usize,
+        edges: usize,
+        modularity: f64,
+        stats: EpochStats,
+        membership: Vec<u32>,
+        community_sizes: Vec<usize>,
+    ) -> Self {
+        Self { epoch, vertices, edges, modularity, stats, membership, community_sizes }
+    }
+
+    /// Full-resolution membership (dense community ids).
+    pub fn membership(&self) -> &[u32] {
+        &self.membership
+    }
+
+    /// Community of vertex `v`, or `None` past this epoch's vertex set
+    /// (ids the service hasn't seen yet — growth lands next epoch).
+    pub fn community_of(&self, v: usize) -> Option<u32> {
+        self.membership.get(v).copied()
+    }
+
+    pub fn num_communities(&self) -> usize {
+        self.community_sizes.len()
+    }
+
+    /// Member count of dense community `c` (0 if out of range).
+    pub fn community_size(&self, c: u32) -> usize {
+        self.community_sizes.get(c as usize).copied().unwrap_or(0)
+    }
+
+    pub fn community_sizes(&self) -> &[usize] {
+        &self.community_sizes
+    }
+
+    /// Internal-consistency check: the invariant every published
+    /// snapshot upholds (and the torn-read test hammers): membership
+    /// covers exactly `vertices` slots, ids are dense in `|Γ|`, and the
+    /// size histogram accounts for every vertex.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.membership.len() != self.vertices {
+            return Err(format!(
+                "membership len {} != vertices {}",
+                self.membership.len(),
+                self.vertices
+            ));
+        }
+        let nc = self.community_sizes.len();
+        if let Some(&c) = self.membership.iter().find(|&&c| c as usize >= nc) {
+            return Err(format!("community id {c} out of range (|Γ|={nc})"));
+        }
+        let total: usize = self.community_sizes.iter().sum();
+        if total != self.vertices {
+            return Err(format!("sizes sum {total} != vertices {}", self.vertices));
+        }
+        if self.vertices > 0 && self.community_sizes.iter().any(|&s| s == 0) {
+            return Err("empty community in a dense renumbering".into());
+        }
+        if !self.modularity.is_finite() {
+            return Err(format!("non-finite modularity {}", self.modularity));
+        }
+        Ok(())
+    }
+}
+
+/// The swap point between the ingest loop and readers: holds the
+/// current epoch's `Arc`.  `load` and `store` each hold the lock only
+/// long enough to copy the pointer, so queries never block behind a
+/// detection pass (there is no `ArcSwap` in the offline registry; a
+/// `Mutex<Arc<_>>` pointer swap is its std spelling).
+#[derive(Debug)]
+pub struct SnapshotCell {
+    cur: Mutex<Arc<EpochSnapshot>>,
+}
+
+/// What readers hold: a shared handle to the service's snapshot cell.
+/// Clone freely; send across threads.
+pub type SnapshotHandle = Arc<SnapshotCell>;
+
+impl SnapshotCell {
+    pub fn new(first: EpochSnapshot) -> Self {
+        Self { cur: Mutex::new(Arc::new(first)) }
+    }
+
+    /// The current epoch (an `Arc` clone — O(1), non-blocking in
+    /// practice).
+    pub fn load(&self) -> Arc<EpochSnapshot> {
+        Arc::clone(&self.cur.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Publish a new epoch (the ingest side only).
+    pub(crate) fn store(&self, next: Arc<EpochSnapshot>) {
+        *self.cur.lock().unwrap_or_else(|e| e.into_inner()) = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(epoch: u64, membership: Vec<u32>, sizes: Vec<usize>) -> EpochSnapshot {
+        let n = membership.len();
+        EpochSnapshot::new(epoch, n, 2 * n, 0.5, EpochStats::default(), membership, sizes)
+    }
+
+    #[test]
+    fn queries_and_validation() {
+        let s = snap(3, vec![0, 1, 0, 2, 1], vec![2, 2, 1]);
+        s.validate().unwrap();
+        assert_eq!(s.community_of(0), Some(0));
+        assert_eq!(s.community_of(99), None);
+        assert_eq!(s.num_communities(), 3);
+        assert_eq!(s.community_size(1), 2);
+        assert_eq!(s.community_size(9), 0);
+        assert_eq!(s.membership(), &[0, 1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn validate_catches_inconsistencies() {
+        // Wrong vertex count.
+        let mut s = snap(0, vec![0, 0], vec![2]);
+        s.vertices = 3;
+        assert!(s.validate().is_err());
+        // Out-of-range id.
+        assert!(snap(0, vec![0, 5], vec![2]).validate().is_err());
+        // Histogram mismatch.
+        assert!(snap(0, vec![0, 0], vec![1, 1]).validate().is_err());
+        // Empty community.
+        assert!(snap(0, vec![0, 0], vec![2, 0]).validate().is_err());
+    }
+
+    #[test]
+    fn cell_swaps_whole_epochs() {
+        let cell = SnapshotCell::new(snap(0, vec![0], vec![1]));
+        let a = cell.load();
+        assert_eq!(a.epoch, 0);
+        cell.store(Arc::new(snap(1, vec![0, 0], vec![2])));
+        // The old Arc is still fully intact for readers that hold it.
+        assert_eq!(a.epoch, 0);
+        assert_eq!(a.membership(), &[0]);
+        let b = cell.load();
+        assert_eq!(b.epoch, 1);
+        assert_eq!(b.membership(), &[0, 0]);
+    }
+}

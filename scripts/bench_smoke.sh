@@ -1,26 +1,30 @@
 #!/usr/bin/env bash
-# Bench smoke runner: emits BENCH_PR2.json with GVE-Louvain edges/sec
+# Bench smoke runner: emits BENCH_PR3.json with GVE-Louvain edges/sec
 # for every planted GraphFamily at 1 and 4 threads (median of
 # GVE_BENCH_REPEATS, default 3; GVE_BENCH_SCALE shifts graph sizes),
-# plus the PR-2 dynamic scenario: per-seeding-strategy throughput over
-# a 10-batch / 1%-churn timeline on the web family.
+# the PR-2 dynamic scenario (per-seeding-strategy throughput over a
+# 10-batch / 1%-churn timeline on the web family), and the PR-3
+# service scenario (the same stream replayed through the long-lived
+# CommunityService: ingest ops/sec + epoch-latency cells per strategy).
 #
 # Usage:
-#   scripts/bench_smoke.sh                 # writes BENCH_PR2.json
+#   scripts/bench_smoke.sh                 # writes BENCH_PR3.json
 #   scripts/bench_smoke.sh out.json        # custom output path
 #
 # Comparing against a baseline (same runner, same machine): commits
 # before PR 1 carry no Cargo manifests and are not buildable; PR 1's
-# yardstick was BENCH_PR1.json (static cells only — the "results" array
-# here is schema-compatible with it). From PR 3 on:
+# yardstick was BENCH_PR1.json and PR 2's BENCH_PR2.json (the static
+# "results" array here stays schema-compatible with both, "dynamic"
+# with PR 2's). From PR 4 on:
 #   uncommitted changes:  git stash && scripts/bench_smoke.sh base.json \
 #                           && git stash pop && scripts/bench_smoke.sh
 #   committed baseline:   git worktree add /tmp/bb <rev>
 #                         (cd /tmp/bb && scripts/bench_smoke.sh /tmp/base.json)
 #                         git worktree remove /tmp/bb
-#   # then diff the edges_per_sec fields; every family should be >= baseline,
-#   # and in "dynamic" delta-screening should beat full per batch.
+#   # then diff edges_per_sec / ops_per_sec; every family should be >=
+#   # baseline, in "dynamic" delta-screening should beat full per batch,
+#   # and in "service" delta-screening should beat full per epoch.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-OUT="${1:-BENCH_PR2.json}"
+OUT="${1:-BENCH_PR3.json}"
 cargo run --release --manifest-path rust/Cargo.toml --bin bench_smoke -- "$OUT"
