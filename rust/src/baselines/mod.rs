@@ -87,9 +87,21 @@ pub fn run_system(system: System, g: &Csr, threads: usize, seed: u64) -> Baselin
 
 /// GVE-Louvain wrapped in the uniform record.
 pub fn gve_outcome(g: &Csr, threads: usize) -> BaselineOutcome {
-    use crate::louvain::{gve::GveLouvain, params::LouvainParams};
+    use crate::louvain::params::LouvainParams;
+    gve_outcome_with_params(g, LouvainParams::with_threads(threads))
+}
+
+/// GVE-Louvain with a caller-chosen configuration (the `repro run`
+/// CLI path: scan-engine knobs like `--small-degree` / `--schedule
+/// degree-bucketed` flow through here).
+pub fn gve_outcome_with_params(
+    g: &Csr,
+    params: crate::louvain::params::LouvainParams,
+) -> BaselineOutcome {
+    use crate::louvain::gve::GveLouvain;
+    let threads = params.threads.max(1);
     let t0 = std::time::Instant::now();
-    let out = GveLouvain::new(LouvainParams::with_threads(threads)).run(g);
+    let out = GveLouvain::new(params).run(g);
     let wall = t0.elapsed().as_nanos() as u64;
     BaselineOutcome {
         system: System::GveLouvain,

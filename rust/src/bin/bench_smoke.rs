@@ -1,19 +1,24 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
-//! cells, PR 2 dynamic cells, PR 3 service cells).
+//! cells, PR 2 dynamic cells, PR 3 service cells, PR 6 scan-engine
+//! cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
 //! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
-//! dynamic timeline per [`SeedStrategy`] (PR 2), and — since PR 3 —
-//! replays the same-shaped stream through the long-lived
-//! `CommunityService` per strategy (ingest-rate + epoch-latency cells),
-//! writing a `BENCH_PR3.json` — the fixed yardstick future PRs compare
-//! against.  Hand-rolled JSON (the offline registry has no serde).
+//! dynamic timeline per [`SeedStrategy`] (PR 2), replays the
+//! same-shaped stream through the long-lived `CommunityService` per
+//! strategy (PR 3), and — since PR 6 — runs the `"scan_engine"`
+//! scenario: the Web family with the hybrid SmallTable fast path
+//! on/off crossed with dynamic vs degree-bucketed scheduling,
+//! reporting table ops, edges scanned and the small-path fraction.
+//! Output is a `BENCH_PR6.json` — the fixed yardstick future PRs
+//! compare against.  Hand-rolled JSON (the offline registry has no
+//! serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR3.json
+//! bench_smoke [OUT.json]          # default BENCH_PR6.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! ```
@@ -23,8 +28,8 @@
 //! `edges_per_sec` / `ops_per_sec` fields:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR3_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR3.json
+//! git stash && cargo bench-smoke BENCH_PR6_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR6.json
 //! ```
 
 use gve_louvain::bench::{bench_scale_offset, bench_seed};
@@ -34,6 +39,7 @@ use gve_louvain::coordinator::service::{replay_service, summarize_service};
 use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
+use gve_louvain::parallel::Schedule;
 use gve_louvain::service::{BatchPolicy, ServiceConfig};
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -79,6 +85,22 @@ struct ServiceCell {
     drift: f64,
 }
 
+/// PR 6 scan-engine cell: hybrid fast path on/off × schedule.
+struct ScanCell {
+    hybrid: bool,
+    schedule: &'static str,
+    threads: usize,
+    median_ns: u64,
+    edges_per_sec: f64,
+    modularity: f64,
+    table_ops: u64,
+    edges_scanned: u64,
+    small_path_scans: u64,
+    large_path_scans: u64,
+    /// Fraction of scanned rows the SmallTable completed.
+    small_fraction: f64,
+}
+
 /// Median via the crate-wide convention (`coordinator::metrics`), so
 /// `BENCH_PR3.json` uses the same statistic as every other bench figure.
 fn median_ns(samples: &[u64]) -> u64 {
@@ -86,7 +108,7 @@ fn median_ns(samples: &[u64]) -> u64 {
 }
 
 fn main() {
-    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR3.json".into());
+    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR6.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -220,9 +242,72 @@ fn main() {
         }
     }
 
+    // --- Scan-engine scenario (PR 6): the Web family (heavy-tailed —
+    // the degree-aware machinery's home turf) with the hybrid
+    // SmallTable fast path on/off crossed with dynamic vs
+    // degree-bucketed scheduling.  The work counters (table ops, edges
+    // scanned, small/large path split) come from the run itself, so a
+    // regression in either the fast-path coverage or the total work is
+    // visible in the JSON diff even when wall time is noisy.
+    let mut scan_cells: Vec<ScanCell> = Vec::new();
+    {
+        let g = generate(GraphFamily::Web, scale, seed);
+        let default_small = LouvainParams::default().small_degree;
+        for threads in THREADS {
+            for hybrid in [false, true] {
+                for schedule in [Schedule::Dynamic, Schedule::DegreeBucketed] {
+                    let params = LouvainParams {
+                        threads,
+                        schedule,
+                        small_degree: if hybrid { default_small } else { 0 },
+                        ..LouvainParams::default()
+                    };
+                    let algo = GveLouvain::new(params);
+                    let _ = algo.run(&g); // warmup
+                    let mut samples = Vec::with_capacity(repeats);
+                    let mut last = None;
+                    for _ in 0..repeats {
+                        let t0 = Instant::now();
+                        let out = algo.run(&g);
+                        samples.push(t0.elapsed().as_nanos() as u64);
+                        last = Some(out);
+                    }
+                    let out = last.expect("repeats >= 1");
+                    let med = median_ns(&samples);
+                    let c = &out.counters;
+                    let rows = c.small_path_scans + c.large_path_scans;
+                    let cell = ScanCell {
+                        hybrid,
+                        schedule: schedule.name(),
+                        threads,
+                        median_ns: med,
+                        edges_per_sec: edges_per_sec(g.num_edges(), med),
+                        modularity: out.modularity,
+                        table_ops: c.table_ops,
+                        edges_scanned: c.edges_scanned_move + c.edges_scanned_agg,
+                        small_path_scans: c.small_path_scans,
+                        large_path_scans: c.large_path_scans,
+                        small_fraction: c.small_path_scans as f64 / rows.max(1) as f64,
+                    };
+                    eprintln!(
+                        "scan hybrid={:<5} {:>15} t={} {:>12} ns  {:>10.0} e/s  Q={:.4}  small={:.1}%",
+                        cell.hybrid,
+                        cell.schedule,
+                        cell.threads,
+                        cell.median_ns,
+                        cell.edges_per_sec,
+                        cell.modularity,
+                        cell.small_fraction * 100.0,
+                    );
+                    scan_cells.push(cell);
+                }
+            }
+        }
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr3_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr6_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -289,6 +374,30 @@ fn main() {
             c.ops_per_sec,
             c.final_modularity,
             c.drift,
+            comma
+        );
+    }
+    let _ = writeln!(json, "  ]}},");
+    let _ = writeln!(json, "  \"scan_engine\": {{\"family\": \"web\", \"results\": [");
+    for (i, c) in scan_cells.iter().enumerate() {
+        let comma = if i + 1 < scan_cells.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"hybrid\": {}, \"schedule\": \"{}\", \"threads\": {}, \
+             \"median_ns\": {}, \"edges_per_sec\": {:.1}, \"modularity\": {:.6}, \
+             \"table_ops\": {}, \"edges_scanned\": {}, \"small_path_scans\": {}, \
+             \"large_path_scans\": {}, \"small_fraction\": {:.4}}}{}",
+            c.hybrid,
+            c.schedule,
+            c.threads,
+            c.median_ns,
+            c.edges_per_sec,
+            c.modularity,
+            c.table_ops,
+            c.edges_scanned,
+            c.small_path_scans,
+            c.large_path_scans,
+            c.small_fraction,
             comma
         );
     }

@@ -20,7 +20,7 @@
 //! no clap.
 
 use anyhow::{Context, Result};
-use gve_louvain::coordinator::cli::Opts;
+use gve_louvain::coordinator::cli::{louvain_params_from, Opts};
 use gve_louvain::coordinator::dynamic::churn_timeline;
 use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
 use gve_louvain::coordinator::report::Table;
@@ -28,7 +28,6 @@ use gve_louvain::graph::delta::StreamOp;
 use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::graph::io::{load, write_update_stream, UpdateStreamReader};
 use gve_louvain::louvain::dynamic::SeedStrategy;
-use gve_louvain::louvain::params::LouvainParams;
 use gve_louvain::service::{BatchPolicy, CommunityService, EpochSnapshot, ServiceConfig};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -85,9 +84,10 @@ fn run(opts: &Opts) -> Result<()> {
         path
     };
 
-    // --- Boot + replay.
+    // --- Boot + replay.  The detection runs honour the full
+    // scan-engine knob set (--schedule --table --small-degree ...).
     let cfg = ServiceConfig {
-        params: LouvainParams::with_threads(threads),
+        params: louvain_params_from(opts),
         strategy,
         policy: BatchPolicy::by_ops(max_ops),
         ..Default::default()
@@ -137,13 +137,18 @@ fn run(opts: &Opts) -> Result<()> {
 
     // --- Summary.
     let m = svc.metrics();
+    let pct = m.epoch_percentiles();
     println!(
-        "{} epochs | ingest {:.0} ops/s | epoch latency median {} max {} | \
+        "{} epochs | ingest {:.0} ops/s | epoch latency median {} max {} \
+         p50 {} p95 {} p99 {} | \
          sustained {:.1}M edges/s | Q {:.4} -> {:.4} (drift {:+.4}, min {:.4})",
         epochs.len(),
         m.ingest_ops_per_sec(),
         fmt_ns(m.median_epoch_ns()),
         fmt_ns(m.max_epoch_ns()),
+        fmt_ns(pct.p50),
+        fmt_ns(pct.p95),
+        fmt_ns(pct.p99),
         edges_per_sec(svc.graph().num_edges(), m.median_epoch_ns().max(1)) / 1e6,
         m.initial_modularity,
         m.last_modularity,

@@ -47,6 +47,30 @@ impl Opts {
     }
 }
 
+/// Shared Louvain knob parsing for the binaries: `--threads --seed
+/// --schedule --chunk --table --small-degree --hub-degree
+/// --prefetch-distance`, each defaulting to
+/// [`LouvainParams::default`].  Unrecognised schedule/table names fall
+/// back to the defaults rather than erroring (consistent with the
+/// tolerant `get_*` accessors above).
+pub fn louvain_params_from(opts: &Opts) -> crate::louvain::LouvainParams {
+    use crate::louvain::params::TableKind;
+    use crate::parallel::Schedule;
+    let d = crate::louvain::LouvainParams::default();
+    crate::louvain::LouvainParams {
+        threads: opts.get_i("threads", d.threads as i64).max(1) as usize,
+        seed: opts.get_i("seed", d.seed as i64) as u64,
+        schedule: Schedule::parse(&opts.get("schedule", "")).unwrap_or(d.schedule),
+        chunk: opts.get_i("chunk", d.chunk as i64).max(1) as usize,
+        table: TableKind::parse(&opts.get("table", "")).unwrap_or(d.table),
+        small_degree: opts.get_i("small-degree", d.small_degree as i64).max(0) as usize,
+        hub_degree: opts.get_i("hub-degree", d.hub_degree as i64).max(0) as usize,
+        prefetch_distance: opts.get_i("prefetch-distance", d.prefetch_distance as i64).max(0)
+            as usize,
+        ..d
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +97,27 @@ mod tests {
         assert_eq!(o.get_f("other", 0.25), 0.25);
         assert_eq!(o.get("verbose", "false"), "true");
         assert_eq!(o.get_i("frac", 9), 9, "non-integer falls back to default");
+    }
+
+    #[test]
+    fn louvain_params_from_reads_scan_engine_knobs() {
+        let o = parse(&[
+            "--threads", "4", "--schedule", "degree-bucketed", "--table", "close-kv",
+            "--small-degree", "8", "--hub-degree", "512", "--prefetch-distance", "0",
+        ]);
+        let p = louvain_params_from(&o);
+        assert_eq!(p.threads, 4);
+        assert_eq!(p.schedule, crate::parallel::Schedule::DegreeBucketed);
+        assert_eq!(p.table, crate::louvain::params::TableKind::CloseKv);
+        assert_eq!(p.small_degree, 8);
+        assert_eq!(p.hub_degree, 512);
+        assert_eq!(p.prefetch_distance, 0);
+
+        // Absent / bogus flags fall back to the adopted defaults.
+        let d = crate::louvain::LouvainParams::default();
+        let p = louvain_params_from(&parse(&["--schedule", "bogus"]));
+        assert_eq!(p.schedule, d.schedule);
+        assert_eq!(p.small_degree, d.small_degree);
+        assert_eq!(p.chunk, d.chunk);
     }
 }

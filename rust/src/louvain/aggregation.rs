@@ -30,8 +30,9 @@ use super::Counters;
 use crate::graph::csr::HoleyCsr;
 use crate::graph::Csr;
 use crate::parallel::pool::{ChunkRecord, ParallelOpts, RawSend};
+use crate::parallel::prefetch::prefetch_read;
 use crate::parallel::scan::exclusive_scan_exec;
-use crate::parallel::schedule::Schedule;
+use crate::parallel::schedule::{DealSpec, ScanOrder, Schedule};
 use crate::parallel::team::Exec;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -59,6 +60,9 @@ pub struct AggScratch {
     tot_deg: Vec<usize>,
     comm_vertices: HoleyCsr,
     holey: HoleyCsr,
+    /// Degree-bucketed community order for the fill loop (PR 6; built
+    /// only under `Schedule::DegreeBucketed`).
+    order: ScanOrder,
 }
 
 impl AggScratch {
@@ -68,6 +72,7 @@ impl AggScratch {
             tot_deg: Vec::new(),
             comm_vertices: HoleyCsr::with_offsets(vec![0]),
             holey: HoleyCsr::with_offsets(vec![0]),
+            order: ScanOrder::default(),
         }
     }
 }
@@ -183,31 +188,67 @@ pub fn aggregate_csr_into(
     scratch.holey.reset_with_offsets(&mut scratch.tot_deg);
 
     // --- Fill the holey CSR (lines 11-17).
+    //
+    // Under DegreeBucketed the communities are ordered by *total
+    // degree* (the row's scan cost and its distinct-key upper bound):
+    // heavy communities are dealt first in small dynamic chunks.  The
+    // same bound routes each row into the SmallTable fast path or the
+    // pooled slab; rows are target-sorted afterwards, so the community
+    // visit order cannot change the output graph.
     let scanned = AtomicU64::new(0);
     let ops = AtomicU64::new(0);
+    let small_scans = AtomicU64::new(0);
+    let large_scans = AtomicU64::new(0);
+    let pf = params.prefetch_distance;
+    if params.schedule == Schedule::DegreeBucketed {
+        let (order, holey) = (&mut scratch.order, &scratch.holey);
+        order.build(n_comm, params.small_degree, params.hub_degree, |c| holey.capacity(c));
+    }
     {
         let cv = &scratch.comm_vertices;
         let holey = &scratch.holey;
-        let s = exec.run_ctx(
+        let order = (params.schedule == Schedule::DegreeBucketed).then_some(&scratch.order);
+        let spec = order.map(|o| o.spec()).unwrap_or(DealSpec::Flat);
+        let s = exec.run_ctx_spec(
             n_comm,
             opts,
-            |tid| pool.table(tid),
+            spec,
+            |tid| pool.hybrid_table(tid, params.small_degree),
             |table, range| {
                 let mut l_scanned = 0u64;
                 let mut l_ops = 0u64;
-                for c in range {
+                let mut l_small = 0u64;
+                let mut l_large = 0u64;
+                for pos in range {
+                    let c = match order {
+                        Some(o) => o.ids[pos] as usize,
+                        None => pos,
+                    };
                     let members = cv.edges(c).0;
                     if members.is_empty() {
                         continue;
                     }
-                    table.clear();
+                    // capacity(c) = the community's total degree: an
+                    // upper bound on this row's distinct keys.
+                    table.begin_row(holey.capacity(c));
                     for &i in members {
                         // scanCommunities with self = true.
-                        for (j, w) in g.neighbours(i as usize) {
-                            table.accumulate(membership[j as usize], w as f64);
-                            l_ops += 1;
+                        let (ts, ws) = g.edges(i as usize);
+                        for idx in 0..ts.len() {
+                            if pf > 0 {
+                                if let Some(&tf) = ts.get(idx + pf) {
+                                    prefetch_read(membership, tf as usize);
+                                }
+                            }
+                            table.accumulate(membership[ts[idx] as usize], ws[idx] as f64);
                         }
-                        l_scanned += g.degree(i as usize) as u64;
+                        l_ops += ts.len() as u64;
+                        l_scanned += ts.len() as u64;
+                    }
+                    if table.used_small() {
+                        l_small += 1;
+                    } else {
+                        l_large += 1;
                     }
                     table.for_each(|d, w| {
                         holey.push_edge(c, d, w as f32);
@@ -215,6 +256,8 @@ pub fn aggregate_csr_into(
                 }
                 scanned.fetch_add(l_scanned, Ordering::Relaxed);
                 ops.fetch_add(l_ops, Ordering::Relaxed);
+                small_scans.fetch_add(l_small, Ordering::Relaxed);
+                large_scans.fetch_add(l_large, Ordering::Relaxed);
             },
         );
         if params.record_chunks {
@@ -223,6 +266,8 @@ pub fn aggregate_csr_into(
     }
     counters.edges_scanned_agg = scanned.load(Ordering::Relaxed);
     counters.table_ops = ops.load(Ordering::Relaxed);
+    counters.small_path_scans = small_scans.load(Ordering::Relaxed);
+    counters.large_path_scans = large_scans.load(Ordering::Relaxed);
 
     // --- Compact + normalize row order (prefix-sum over used degrees,
     // then chunked copy; both on `exec`, into the caller's graph).
@@ -507,6 +552,36 @@ mod tests {
             assert_eq!(
                 fresh.counters.edges_scanned_agg,
                 reused.counters.edges_scanned_agg
+            );
+        }
+    }
+
+    #[test]
+    fn degree_bucketed_matches_dynamic_exactly() {
+        // Rows are target-sorted after the fill, so the bucketed
+        // community order must produce a bit-identical supergraph, at
+        // one thread and several.
+        let g = generate(GraphFamily::Web, 10, 43);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n).map(|v| (v % 137) as u32).collect();
+        for threads in [1usize, 4] {
+            let pool = TablePool::new(TableKind::FarKv, 137, threads);
+            let base = aggregate_csr(
+                &g, &memb, 137, &pool,
+                &LouvainParams { threads, schedule: Schedule::Dynamic, ..params() },
+            );
+            let bucketed = aggregate_csr(
+                &g, &memb, 137, &pool,
+                &LouvainParams { threads, schedule: Schedule::DegreeBucketed, ..params() },
+            );
+            assert_eq!(base.graph, bucketed.graph, "threads={threads}");
+            assert_eq!(
+                base.counters.edges_scanned_agg,
+                bucketed.counters.edges_scanned_agg
+            );
+            // The Web family's skew puts most communities on the fast path.
+            assert!(
+                bucketed.counters.small_path_scans + bucketed.counters.large_path_scans > 0
             );
         }
     }

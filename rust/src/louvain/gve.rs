@@ -208,6 +208,7 @@ impl GveLouvain {
             super_a,
             super_b,
             renumber_scratch,
+            scan_order,
         } = ws;
         let exec = Exec::team(team.as_deref().expect("prepare built the team"));
         let pool = pool.as_ref().expect("prepare built the pool");
@@ -259,6 +260,16 @@ impl GveLouvain {
                 sigma.extend_from_slice(&k[..]);
             }
 
+            // Degree-bucketed scheduling (PR 6): partition this pass's
+            // vertex ids once into low/mid/high-degree buckets; the
+            // local-moving iterations reuse the order unchanged.
+            let order = if p.schedule == Schedule::DegreeBucketed {
+                scan_order.build(np, p.small_degree, p.hub_degree, |v| gp.degree(v));
+                Some(&*scan_order)
+            } else {
+                None
+            };
+
             // Local-moving phase (line 6).
             let t0 = Instant::now();
             let mv = local_moving(
@@ -271,6 +282,7 @@ impl GveLouvain {
                 p,
                 m,
                 tau,
+                order,
                 exec,
             );
             let move_ns = t0.elapsed().as_nanos() as u64;

@@ -16,8 +16,16 @@
 //! The value associated with a key is stored at the index pointed to by
 //! the key (collision-free by construction); `keys` records which slots
 //! are dirty so `clear()` is O(#keys), not O(|V|).
+//!
+//! PR 6 layers a degree-aware **hybrid** on top: [`HybridTable`] routes
+//! rows with degree ≤ `small_degree` into a fixed-size stack-resident
+//! [`SmallTable`] (linear key scan, no `|V|`-slab touch, no `clear()`)
+//! and keeps the Far-KV slab for the heavy rows.  Iteration stays
+//! first-touch ordered on both sides, so the single-thread results are
+//! bit-identical to the pure Far-KV path.
 
 use super::params::TableKind;
+use crate::parallel::{Exec, ParallelOpts, Schedule};
 use std::collections::BTreeMap;
 
 /// Pool owning the backing storage for every thread's table.
@@ -115,6 +123,77 @@ impl TablePool {
         slot.as_ref().unwrap()
     }
 
+    /// [`TablePool::ensure`] with NUMA-style first-touch initialisation
+    /// (ROADMAP item): when a Far-KV pool is (re)built for a
+    /// multi-thread team, each worker touches one page of every 4 KiB
+    /// stretch of *its own* slab from inside a team job, so on
+    /// first-touch NUMA systems the pages land on the node that will
+    /// scan them.  Reused pools are left alone (their pages are already
+    /// placed); Map owns no slab and Close-KV is the deliberately
+    /// false-sharing ablation, so both keep the plain path.
+    pub fn ensure_with_exec<'a>(
+        slot: &'a mut Option<TablePool>,
+        kind: TableKind,
+        n: usize,
+        threads: usize,
+        exec: Exec<'_>,
+    ) -> &'a TablePool {
+        let reusable = slot
+            .as_ref()
+            .map(|p| p.kind == kind && p.n >= n && p.threads >= threads.max(1))
+            .unwrap_or(false);
+        let pool = TablePool::ensure(slot, kind, n, threads);
+        if !reusable && kind == TableKind::FarKv && threads > 1 {
+            pool.first_touch(exec, threads);
+        }
+        pool
+    }
+
+    /// Touch every page of each thread's Far-KV slab from that thread.
+    ///
+    /// `Static` dealing with chunk 1 over `0..threads` maps index `i`
+    /// to tid `i` exactly, so each worker writes only its own storage —
+    /// no aliasing, no synchronisation beyond the job barrier.
+    fn first_touch(&self, exec: Exec<'_>, threads: usize) {
+        use crate::parallel::pool::RawSend;
+        const PAGE: usize = 4096;
+        let slabs: Vec<(RawSend<u32>, usize, RawSend<f64>, usize)> = self
+            .far
+            .iter()
+            .map(|f| {
+                (
+                    RawSend(f.keys.as_ptr() as *mut u32),
+                    f.keys.len(),
+                    RawSend(f.values.as_ptr() as *mut f64),
+                    f.values.len(),
+                )
+            })
+            .collect();
+        let slabs = &slabs;
+        let opts = ParallelOpts { threads, schedule: Schedule::Static, chunk: 1, record: false };
+        exec.run(threads.min(slabs.len()), opts, move |r| {
+            for i in r {
+                let (keys, klen, values, vlen) = slabs[i];
+                // SAFETY: index i is dealt to tid i only (Static,
+                // chunk 1), so this is the sole writer of slab i; the
+                // slabs are freshly allocated zeros, and write_volatile
+                // keeps the dead stores from being optimised away.
+                unsafe {
+                    let mut k = 0;
+                    while k < klen {
+                        keys.0.add(k).write_volatile(0);
+                        k += PAGE / std::mem::size_of::<u32>();
+                    }
+                    let mut v = 0;
+                    while v < vlen {
+                        values.0.add(v).write_volatile(0.0);
+                        v += PAGE / std::mem::size_of::<f64>();
+                    }
+                }
+            }
+        });
+    }
+
     /// Address of thread `tid`'s value storage (null for `Map`, which
     /// owns no pooled storage).  Tests use this to assert the pool is
     /// *reused*, not reallocated, across passes and runs.
@@ -152,6 +231,27 @@ impl TablePool {
                     cap: self.n,
                 })
             }
+        }
+    }
+
+    /// Hand out thread `tid`'s degree-aware hybrid table (PR 6): rows
+    /// with degree ≤ `small_degree` scan into the stack-resident
+    /// [`SmallTable`], the rest into this pool's table.  Same
+    /// one-live-view-per-tid contract as [`TablePool::table`].
+    ///
+    /// Under [`TableKind::Map`] the fast path is forced off
+    /// (`small_degree = 0`) so the Fig 2 Map ablation measures the pure
+    /// ordered-map design.
+    pub fn hybrid_table(&self, tid: usize, small_degree: usize) -> HybridTable {
+        let small_degree = if self.kind == TableKind::Map { 0 } else { small_degree };
+        HybridTable {
+            small: SmallTable::new(),
+            big: self.table(tid),
+            small_degree,
+            use_small: false,
+            small_rows: 0,
+            big_rows: 0,
+            spills: 0,
         }
     }
 }
@@ -255,6 +355,183 @@ impl CommunityTable {
                 }
             },
         }
+    }
+}
+
+/// Distinct-key capacity of the [`SmallTable`] fast path.
+///
+/// Chosen above the default `small_degree` knob (16) so a fast-path row
+/// only spills when the knob is raised past the capacity: 32 keys ×
+/// (4 + 8) bytes = 384 B of hot stack, well inside one L1 way.
+pub const SMALL_TABLE_CAP: usize = 32;
+
+/// Fixed-size stack-resident community table for low-degree rows.
+///
+/// A linear-scanned key/value array: at degree ≤ 16 a branchy linear
+/// scan over ≤ 16 packed keys beats the Far-KV design's scattered
+/// `values[c]` accesses (each a potential cache miss in a |V|-sized
+/// slab) — and a row reset is `len = 0` instead of an O(#keys)
+/// `clear()`.  Entries stay in first-touch order, matching the KV key
+/// list exactly.
+pub struct SmallTable {
+    keys: [u32; SMALL_TABLE_CAP],
+    values: [f64; SMALL_TABLE_CAP],
+    len: usize,
+}
+
+impl SmallTable {
+    pub fn new() -> Self {
+        Self { keys: [0; SMALL_TABLE_CAP], values: [0.0; SMALL_TABLE_CAP], len: 0 }
+    }
+}
+
+impl Default for SmallTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Degree-aware hybrid community table (PR 6, the scan-engine core).
+///
+/// Per row, [`HybridTable::begin_row`] picks a side by degree: the
+/// [`SmallTable`] for rows with degree ≤ `small_degree`, the pooled
+/// [`CommunityTable`] otherwise.  Only the chosen side is reset, so a
+/// low-degree row costs zero slab traffic.
+///
+/// **Bit-exactness contract** (vs a pure Far-KV scan, single thread):
+/// both sides accumulate each community's weight into a single `f64`
+/// slot in arrival order and iterate entries in first-touch order, so
+/// every partial sum — and therefore every Δq comparison downstream —
+/// is bitwise identical.  A row that overflows the small side
+/// ([`SMALL_TABLE_CAP`] distinct keys) spills into the big table in
+/// first-touch order (`0.0 + partial_sum` copies are exact) and
+/// continues there, preserving the contract.
+pub struct HybridTable {
+    small: SmallTable,
+    big: CommunityTable,
+    small_degree: usize,
+    use_small: bool,
+    small_rows: u64,
+    big_rows: u64,
+    spills: u64,
+}
+
+impl HybridTable {
+    /// Start scanning a row of `degree` neighbours: route it and reset
+    /// the chosen side.  (The other side keeps its dirt; each side is
+    /// reset at the start of the next row that uses it.)
+    #[inline]
+    pub fn begin_row(&mut self, degree: usize) {
+        self.use_small = self.small_degree > 0 && degree <= self.small_degree;
+        if self.use_small {
+            self.small.len = 0;
+            self.small_rows += 1;
+        } else {
+            self.big.clear();
+            self.big_rows += 1;
+        }
+    }
+
+    /// `table[c] += w` (first-touch key recording on both sides).
+    #[inline]
+    pub fn accumulate(&mut self, c: u32, w: f64) {
+        if self.use_small {
+            for i in 0..self.small.len {
+                if self.small.keys[i] == c {
+                    self.small.values[i] += w;
+                    return;
+                }
+            }
+            if self.small.len < SMALL_TABLE_CAP {
+                self.small.keys[self.small.len] = c;
+                self.small.values[self.small.len] = w;
+                self.small.len += 1;
+                return;
+            }
+            self.spill();
+            self.big.accumulate(c, w);
+        } else {
+            self.big.accumulate(c, w);
+        }
+    }
+
+    /// Move a full small side into the big table (first-touch order
+    /// preserved) and continue the row there.
+    #[cold]
+    fn spill(&mut self) {
+        self.big.clear();
+        for i in 0..self.small.len {
+            self.big.accumulate(self.small.keys[i], self.small.values[i]);
+        }
+        self.use_small = false;
+        self.spills += 1;
+        // The row was already counted as small in begin_row; spills are
+        // reported separately so the counters still sum to #rows.
+    }
+
+    /// Value for community `c` (0 when absent).
+    #[inline]
+    pub fn get(&self, c: u32) -> f64 {
+        if self.use_small {
+            for i in 0..self.small.len {
+                if self.small.keys[i] == c {
+                    return self.small.values[i];
+                }
+            }
+            0.0
+        } else {
+            self.big.get(c)
+        }
+    }
+
+    /// Distinct keys recorded for the current row.
+    #[inline]
+    pub fn len(&self) -> usize {
+        if self.use_small {
+            self.small.len
+        } else {
+            self.big.len()
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit `(community, weight)` pairs in first-touch order (both
+    /// sides — the order the tie-breaking first-max-wins rule sees).
+    #[inline]
+    pub fn for_each(&self, mut f: impl FnMut(u32, f64)) {
+        if self.use_small {
+            for i in 0..self.small.len {
+                f(self.small.keys[i], self.small.values[i]);
+            }
+        } else {
+            self.big.for_each(f);
+        }
+    }
+
+    /// Whether the *current* row is on the small side (false after a
+    /// spill).
+    #[inline]
+    pub fn used_small(&self) -> bool {
+        self.use_small
+    }
+
+    /// Rows routed to the small side so far (spilled rows included).
+    pub fn small_rows(&self) -> u64 {
+        self.small_rows
+    }
+
+    /// Rows routed to the big side so far (spills not re-counted).
+    pub fn big_rows(&self) -> u64 {
+        self.big_rows
+    }
+
+    /// Small-side rows that overflowed into the big table.
+    pub fn spills(&self) -> u64 {
+        self.spills
     }
 }
 
@@ -380,5 +657,129 @@ mod tests {
     fn tid_out_of_range_panics() {
         let pool = TablePool::new(TableKind::FarKv, 8, 2);
         let _ = pool.table(2);
+    }
+
+    #[test]
+    fn hybrid_small_rows_match_farkv_bitwise() {
+        // Same accumulation stream through a small-degree hybrid row
+        // and a pure Far-KV table: values and iteration order must be
+        // bitwise identical (the single-thread parity contract).
+        let pool = TablePool::new(TableKind::FarKv, 100, 1);
+        let stream = [(5u32, 0.1), (7, 0.25), (5, 0.3), (9, 1.5), (7, 0.125), (5, 0.7)];
+        let mut hybrid = pool.hybrid_table(0, 16);
+        hybrid.begin_row(stream.len());
+        let mut pure = pool.table(0);
+        pure.clear();
+        for &(c, w) in &stream {
+            hybrid.accumulate(c, w);
+            pure.accumulate(c, w);
+        }
+        assert!(hybrid.used_small());
+        let mut a = Vec::new();
+        hybrid.for_each(|c, w| a.push((c, w.to_bits())));
+        let mut b = Vec::new();
+        pure.for_each(|c, w| b.push((c, w.to_bits())));
+        assert_eq!(a, b, "order or bits diverged");
+        for c in [5u32, 7, 9, 11] {
+            assert_eq!(hybrid.get(c).to_bits(), pure.get(c).to_bits());
+        }
+    }
+
+    #[test]
+    fn hybrid_routes_by_degree_and_resets_per_row() {
+        let pool = TablePool::new(TableKind::FarKv, 64, 1);
+        let mut t = pool.hybrid_table(0, 4);
+        t.begin_row(3); // small
+        t.accumulate(1, 1.0);
+        assert!(t.used_small());
+        t.begin_row(10); // big
+        t.accumulate(2, 2.0);
+        assert!(!t.used_small());
+        assert_eq!(t.get(1), 0.0, "big side must not see small-side dirt");
+        t.begin_row(2); // small again: previous small row's entries gone
+        assert!(t.is_empty());
+        assert_eq!(t.get(1), 0.0);
+        assert_eq!(t.small_rows(), 2);
+        assert_eq!(t.big_rows(), 1);
+    }
+
+    #[test]
+    fn hybrid_spills_at_capacity_boundary() {
+        let pool = TablePool::new(TableKind::FarKv, 1000, 1);
+        // Exactly CAP distinct keys: stays small, no spill.
+        let mut t = pool.hybrid_table(0, 1000);
+        t.begin_row(SMALL_TABLE_CAP);
+        for c in 0..SMALL_TABLE_CAP as u32 {
+            t.accumulate(c, c as f64 + 0.5);
+        }
+        assert!(t.used_small());
+        assert_eq!(t.spills(), 0);
+        assert_eq!(t.len(), SMALL_TABLE_CAP);
+        // One more distinct key: spills into the big table, first-touch
+        // order preserved, values exact.
+        t.accumulate(900, 9.0);
+        assert!(!t.used_small());
+        assert_eq!(t.spills(), 1);
+        assert_eq!(t.len(), SMALL_TABLE_CAP + 1);
+        let mut order = Vec::new();
+        t.for_each(|c, w| order.push((c, w)));
+        let mut expect: Vec<(u32, f64)> =
+            (0..SMALL_TABLE_CAP as u32).map(|c| (c, c as f64 + 0.5)).collect();
+        expect.push((900, 9.0));
+        assert_eq!(order, expect);
+        // Accumulating into an existing key after the spill keeps working.
+        t.accumulate(0, 1.0);
+        assert_eq!(t.get(0), 1.5);
+        assert_eq!(t.len(), SMALL_TABLE_CAP + 1);
+    }
+
+    #[test]
+    fn hybrid_under_map_forces_big_path() {
+        let pool = TablePool::new(TableKind::Map, 32, 1);
+        let mut t = pool.hybrid_table(0, 16);
+        t.begin_row(2); // degree ≤ small_degree, but Map disables the fast path
+        t.accumulate(3, 1.0);
+        assert!(!t.used_small());
+        assert_eq!(t.big_rows(), 1);
+        assert_eq!(t.get(3), 1.0);
+    }
+
+    #[test]
+    fn hybrid_zero_small_degree_disables_fast_path() {
+        let pool = TablePool::new(TableKind::FarKv, 32, 1);
+        let mut t = pool.hybrid_table(0, 0);
+        t.begin_row(1);
+        assert!(!t.used_small());
+    }
+
+    #[test]
+    fn ensure_with_exec_first_touches_and_reuses() {
+        use crate::parallel::Team;
+        let team = Team::new(3);
+        let mut slot: Option<TablePool> = None;
+        let p0 =
+            TablePool::ensure_with_exec(&mut slot, TableKind::FarKv, 5000, 3, Exec::team(&team))
+                .storage_ptr(2);
+        // Slabs stay zeroed and usable after the touch pass.
+        {
+            let pool = slot.as_ref().unwrap();
+            for tid in 0..3 {
+                let mut t = pool.table(tid);
+                t.clear();
+                assert!(t.is_empty());
+                t.accumulate(4999, 1.0);
+                assert_eq!(t.get(4999), 1.0);
+                t.clear();
+            }
+        }
+        // Shrinking reuse must not rebuild or re-touch.
+        let p1 =
+            TablePool::ensure_with_exec(&mut slot, TableKind::FarKv, 100, 3, Exec::team(&team))
+                .storage_ptr(2);
+        assert_eq!(p0, p1, "reallocated on shrink");
+        // Scoped exec and single-thread pools take the plain path.
+        let mut solo: Option<TablePool> = None;
+        TablePool::ensure_with_exec(&mut solo, TableKind::FarKv, 64, 1, Exec::scoped());
+        assert_eq!(solo.as_ref().unwrap().threads(), 1);
     }
 }

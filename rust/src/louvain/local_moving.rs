@@ -13,7 +13,8 @@ use super::Counters;
 use crate::graph::Csr;
 use crate::parallel::atomics::{as_atomic_f64, as_atomic_u32, AtomicF64};
 use crate::parallel::pool::{ChunkRecord, ParallelOpts};
-use crate::parallel::schedule::Schedule;
+use crate::parallel::prefetch::prefetch_read;
+use crate::parallel::schedule::{DealSpec, ScanOrder, Schedule};
 use crate::parallel::team::Exec;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -39,6 +40,9 @@ pub struct MoveOutcome {
 ///   fresh pass. Ignored (all vertices processed) when
 ///   `params.pruning` is false.
 /// * `tau` — this pass's convergence tolerance;
+/// * `order` — degree-bucketed scan order for
+///   [`Schedule::DegreeBucketed`]; `None` iterates vertex ids directly
+///   (every other schedule);
 /// * `exec` — the executor: the pass loop hands in its persistent
 ///   [`Team`](crate::parallel::team::Team); tests may use
 ///   [`Exec::scoped`] for the spawn-per-loop reference path.
@@ -53,12 +57,14 @@ pub fn local_moving(
     params: &LouvainParams,
     m: f64,
     tau: f64,
+    order: Option<&ScanOrder>,
     exec: Exec,
 ) -> MoveOutcome {
     let n = g.num_vertices();
     let memb = as_atomic_u32(membership);
     let sig = as_atomic_f64(sigma);
     let flags = as_atomic_u32(affected);
+    let pf = params.prefetch_distance;
 
     let mut out = MoveOutcome::default();
     let opts = ParallelOpts {
@@ -67,6 +73,7 @@ pub fn local_moving(
         chunk: params.chunk,
         record: params.record_chunks,
     };
+    let spec = order.map(|o| o.spec()).unwrap_or(DealSpec::Flat);
 
     for _li in 0..params.max_iterations {
         let dq_iter = AtomicF64::new(0.0);
@@ -75,11 +82,14 @@ pub fn local_moving(
         let table_ops = AtomicU64::new(0);
         let processed = AtomicU64::new(0);
         let pruned = AtomicU64::new(0);
+        let small_scans = AtomicU64::new(0);
+        let large_scans = AtomicU64::new(0);
 
-        let stats = exec.run_ctx(
+        let stats = exec.run_ctx_spec(
             n,
             opts,
-            |tid| pool.table(tid),
+            spec,
+            |tid| pool.hybrid_table(tid, params.small_degree),
             |table, range| {
                 let mut l_dq = 0.0f64;
                 let mut l_scanned = 0u64;
@@ -87,7 +97,15 @@ pub fn local_moving(
                 let mut l_ops = 0u64;
                 let mut l_proc = 0u64;
                 let mut l_pruned = 0u64;
-                for i in range {
+                let mut l_small = 0u64;
+                let mut l_large = 0u64;
+                for pos in range {
+                    // Under DegreeBucketed the dealt range indexes the
+                    // scan order's positions; otherwise it *is* the ids.
+                    let i = match order {
+                        Some(o) => o.ids[pos] as usize,
+                        None => pos,
+                    };
                     if params.pruning {
                         // Claim-and-clear the processed mark (prune).
                         if flags[i].swap(0, Ordering::Relaxed) == 0 {
@@ -102,16 +120,32 @@ pub fn local_moving(
                     }
                     // scanCommunities (self = false). Hot loop: unchecked
                     // indexing (targets are validated at CSR build time)
-                    // — see EXPERIMENTS.md §Perf.
-                    table.clear();
-                    for (t, w) in ts.iter().zip(ws) {
-                        if *t as usize == i {
+                    // — see EXPERIMENTS.md §Perf.  Degree routes the row
+                    // into the SmallTable or the pooled slab (PR 6).
+                    table.begin_row(ts.len());
+                    for idx in 0..ts.len() {
+                        if pf > 0 {
+                            // Pull the membership word we'll gather `pf`
+                            // neighbours from now into cache.
+                            if let Some(&tf) = ts.get(idx + pf) {
+                                prefetch_read(memb, tf as usize);
+                            }
+                        }
+                        // SAFETY: idx < ts.len() == ws.len().
+                        let t = unsafe { *ts.get_unchecked(idx) };
+                        let w = unsafe { *ws.get_unchecked(idx) };
+                        if t as usize == i {
                             continue;
                         }
                         // SAFETY: `validate()` guarantees t < |V'|.
-                        let cj = unsafe { memb.get_unchecked(*t as usize) }
+                        let cj = unsafe { memb.get_unchecked(t as usize) }
                             .load(Ordering::Relaxed);
-                        table.accumulate(cj, *w as f64);
+                        table.accumulate(cj, w as f64);
+                    }
+                    if table.used_small() {
+                        l_small += 1;
+                    } else {
+                        l_large += 1;
                     }
                     l_ops += ts.len() as u64;
                     l_scanned += ts.len() as u64;
@@ -156,6 +190,8 @@ pub fn local_moving(
                 table_ops.fetch_add(l_ops, Ordering::Relaxed);
                 processed.fetch_add(l_proc, Ordering::Relaxed);
                 pruned.fetch_add(l_pruned, Ordering::Relaxed);
+                small_scans.fetch_add(l_small, Ordering::Relaxed);
+                large_scans.fetch_add(l_large, Ordering::Relaxed);
             },
         );
 
@@ -167,6 +203,8 @@ pub fn local_moving(
         out.counters.table_ops += table_ops.load(Ordering::Relaxed);
         out.counters.vertices_processed += processed.load(Ordering::Relaxed);
         out.counters.vertices_pruned += pruned.load(Ordering::Relaxed);
+        out.counters.small_path_scans += small_scans.load(Ordering::Relaxed);
+        out.counters.large_path_scans += large_scans.load(Ordering::Relaxed);
         if params.record_chunks {
             out.loops.push((params.schedule, stats.chunks));
         }
@@ -206,7 +244,7 @@ mod tests {
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, 6, 1);
         let m = g.total_weight();
-        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
         assert!(out.iterations >= 1);
         assert_eq!(memb[0], memb[1]);
         assert_eq!(memb[1], memb[2]);
@@ -226,7 +264,7 @@ mod tests {
             let params = LouvainParams::default();
             let pool = TablePool::new(TableKind::FarKv, n, 1);
             let m = g.total_weight();
-            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
             let q1 = modularity(&g, &memb);
             assert!(q1 >= q0 - 1e-9, "{f:?}: q0={q0} q1={q1}");
         }
@@ -240,7 +278,7 @@ mod tests {
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, n, 1);
         let m = g.total_weight();
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
         // Σ'[c] must equal the sum of K over members of c.
         let mut want = vec![0f64; n];
         for v in 0..n {
@@ -261,7 +299,7 @@ mod tests {
             let (mut memb, k, mut sigma, mut aff) = setup(&g);
             let params = LouvainParams { table: kind, ..Default::default() };
             let pool = TablePool::new(kind, n, 1);
-            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
             results.push(modularity(&g, &memb));
         }
         // Map iterates keys in ascending order, KV in first-touch order:
@@ -280,7 +318,7 @@ mod tests {
             let (mut memb, k, mut sigma, mut aff) = setup(&g);
             let params = LouvainParams { pruning, ..Default::default() };
             let pool = TablePool::new(TableKind::FarKv, n, 1);
-            let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+            let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
             if pruning {
                 assert!(out.counters.vertices_pruned > 0, "pruning never skipped a vertex");
             }
@@ -296,7 +334,7 @@ mod tests {
         let (mut memb, k, mut sigma, mut aff) = setup(&g);
         let params = LouvainParams { max_iterations: 3, ..Default::default() };
         let pool = TablePool::new(TableKind::FarKv, n, 1);
-        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 0.0, Exec::scoped());
+        let out = local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 0.0, None, Exec::scoped());
         assert!(out.iterations <= 3);
     }
 
@@ -308,7 +346,7 @@ mod tests {
         let params = LouvainParams { threads: 4, ..Default::default() };
         let pool = TablePool::new(TableKind::FarKv, n, 4);
         let m = g.total_weight();
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, Exec::scoped());
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, Exec::scoped());
         let q = modularity(&g, &memb);
         assert!(q > 0.4, "multithreaded local-moving broke quality: q={q}");
         // Σ invariant still holds after concurrent updates.
@@ -335,11 +373,11 @@ mod tests {
 
             let (mut memb_a, k, mut sigma_a, mut aff_a) = setup(&g);
             let pool_a = TablePool::new(TableKind::FarKv, n, 1);
-            let a = local_moving(&g, &mut memb_a, &k, &mut sigma_a, &mut aff_a, &pool_a, &params, m, 1e-9, Exec::scoped());
+            let a = local_moving(&g, &mut memb_a, &k, &mut sigma_a, &mut aff_a, &pool_a, &params, m, 1e-9, None, Exec::scoped());
 
             let (mut memb_b, _, mut sigma_b, mut aff_b) = setup(&g);
             let pool_b = TablePool::new(TableKind::FarKv, n, 1);
-            let b = local_moving(&g, &mut memb_b, &k, &mut sigma_b, &mut aff_b, &pool_b, &params, m, 1e-9, Exec::team(&team));
+            let b = local_moving(&g, &mut memb_b, &k, &mut sigma_b, &mut aff_b, &pool_b, &params, m, 1e-9, None, Exec::team(&team));
 
             assert_eq!(memb_a, memb_b, "{f:?}");
             assert_eq!(sigma_a, sigma_b, "{f:?}");
@@ -360,7 +398,7 @@ mod tests {
         for exec in [Exec::scoped(), Exec::team(&team)] {
             let (mut memb, k, mut sigma, mut aff) = setup(&g);
             let pool = TablePool::new(TableKind::FarKv, n, 4);
-            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, exec);
+            local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, exec);
             qs.push(modularity(&g, &memb));
         }
         // Benign races make 4-thread runs nondeterministic on both
@@ -374,7 +412,7 @@ mod tests {
         let (mut memb, k, mut sigma, mut aff) = setup(&g);
         let params = LouvainParams::default();
         let pool = TablePool::new(TableKind::FarKv, 5, 1);
-        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 1e-9, Exec::scoped());
+        local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, g.total_weight(), 1e-9, None, Exec::scoped());
         for v in 2..5 {
             assert_eq!(memb[v], v as u32);
         }

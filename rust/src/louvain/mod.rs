@@ -52,6 +52,12 @@ pub struct Counters {
     pub vertices_processed: u64,
     /// Vertices skipped by pruning.
     pub vertices_pruned: u64,
+    /// Rows whose scan *completed* in the `SmallTable` fast path
+    /// (PR 6; a row that spilled counts as large — the slab did the
+    /// work).
+    pub small_path_scans: u64,
+    /// Rows whose scan completed in the pooled big table.
+    pub large_path_scans: u64,
 }
 
 impl Counters {
@@ -62,5 +68,7 @@ impl Counters {
         self.table_ops += o.table_ops;
         self.vertices_processed += o.vertices_processed;
         self.vertices_pruned += o.vertices_pruned;
+        self.small_path_scans += o.small_path_scans;
+        self.large_path_scans += o.large_path_scans;
     }
 }

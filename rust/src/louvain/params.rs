@@ -23,6 +23,15 @@ impl TableKind {
             TableKind::FarKv => "far-kv",
         }
     }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "map" => Some(TableKind::Map),
+            "close-kv" => Some(TableKind::CloseKv),
+            "far-kv" => Some(TableKind::FarKv),
+            _ => None,
+        }
+    }
 }
 
 /// How the aggregation phase stores intermediate structures
@@ -59,6 +68,20 @@ pub struct LouvainParams {
     /// Record per-chunk work for the strong-scaling replay model.
     pub record_chunks: bool,
     pub seed: u64,
+    /// Degree-aware scan engine (PR 6): rows with degree ≤ this scan
+    /// into the stack-resident `SmallTable` instead of the Far-KV slab
+    /// (no |V|-sized touch, no clear).  0 disables the fast path.
+    /// Forced to 0 under `TableKind::Map` to keep the Fig 2 Map
+    /// ablation pure.
+    pub small_degree: usize,
+    /// Bucket boundary for `Schedule::DegreeBucketed`: vertices with
+    /// degree > this form the heavy tail, drained first with small
+    /// dynamic chunks.  Clamped up to `small_degree`.
+    pub hub_degree: usize,
+    /// Lookahead distance (in neighbours) for the software prefetch of
+    /// `membership[neighbour]` in the scan loops.  0 disables; a no-op
+    /// on targets without a prefetch intrinsic.
+    pub prefetch_distance: usize,
 }
 
 impl Default for LouvainParams {
@@ -77,6 +100,9 @@ impl Default for LouvainParams {
             aggregation: AggregationKind::Csr,
             record_chunks: false,
             seed: 42,
+            small_degree: 16,
+            hub_degree: 256,
+            prefetch_distance: 8,
         }
     }
 }
@@ -119,6 +145,17 @@ mod tests {
         assert_eq!(p.chunk, 2048);
         assert_eq!(p.table, TableKind::FarKv);
         assert_eq!(p.aggregation, AggregationKind::Csr);
+        assert_eq!(p.small_degree, 16);
+        assert_eq!(p.hub_degree, 256);
+        assert_eq!(p.prefetch_distance, 8);
+    }
+
+    #[test]
+    fn table_kind_parse_round_trips() {
+        for k in [TableKind::Map, TableKind::CloseKv, TableKind::FarKv] {
+            assert_eq!(TableKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TableKind::parse("bogus"), None);
     }
 
     #[test]

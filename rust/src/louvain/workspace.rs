@@ -35,6 +35,7 @@ use super::hashtable::TablePool;
 use super::params::LouvainParams;
 use crate::graph::Csr;
 use crate::parallel::pool::ParallelOpts;
+use crate::parallel::schedule::ScanOrder;
 use crate::parallel::team::{shared_team, Exec, Team};
 use std::sync::Arc;
 
@@ -65,6 +66,9 @@ pub struct LouvainWorkspace {
     pub(crate) super_b: Csr,
     /// Rank table for the parallel community renumbering.
     pub(crate) renumber_scratch: Vec<usize>,
+    /// Degree-bucketed vertex order for the local-moving scan loops,
+    /// rebuilt once per pass under `Schedule::DegreeBucketed` (PR 6).
+    pub(crate) scan_order: ScanOrder,
 }
 
 impl LouvainWorkspace {
@@ -80,6 +84,7 @@ impl LouvainWorkspace {
             super_a: Csr::default(),
             super_b: Csr::default(),
             renumber_scratch: Vec::new(),
+            scan_order: ScanOrder::default(),
         }
     }
 
@@ -91,7 +96,14 @@ impl LouvainWorkspace {
     pub fn prepare(&mut self, params: &LouvainParams, n_cap: usize) {
         let threads = params.threads.max(1);
         self.ensure_team(threads);
-        TablePool::ensure(&mut self.pool, params.table, n_cap, threads);
+        // First-touch the Far-KV slabs from their owning workers when
+        // the pool is (re)built (PR 6 satellite, ROADMAP NUMA item);
+        // reused pools keep their page placement.
+        let exec = match &self.team {
+            Some(t) if threads > 1 => Exec::team(t),
+            _ => Exec::scoped(),
+        };
+        TablePool::ensure_with_exec(&mut self.pool, params.table, n_cap, threads, exec);
     }
 
     /// Ensure the (shared) team exists at this width — the team half of

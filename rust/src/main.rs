@@ -13,8 +13,8 @@
 //! registry has no clap.
 
 use anyhow::{bail, Context, Result};
-use gve_louvain::baselines::{run_system, System};
-use gve_louvain::coordinator::cli::Opts;
+use gve_louvain::baselines::{gve_outcome_with_params, run_system, System};
+use gve_louvain::coordinator::cli::{louvain_params_from, Opts};
 use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
 use gve_louvain::coordinator::report::Table;
 use gve_louvain::coordinator::runner::{compare_on_entry, mean_speedup};
@@ -66,6 +66,10 @@ USAGE: repro <subcommand> [--key value ...]
   generate  --graph NAME|--family F [--scale S] [--seed N] --out PATH
   run       --system S --graph NAME [--offset N] [--threads T] [--seed N]
             systems: gve-louvain nu-louvain vite grappolo networkit cugraph nido
+            gve-louvain also takes the scan-engine knobs:
+              [--schedule static|dynamic|guided|auto|degree-bucketed]
+              [--chunk C] [--table map|close-kv|far-kv]
+              [--small-degree D] [--hub-degree H] [--prefetch-distance P]
   compare   [--graphs quick|all] [--systems a,b,c] [--offset N] [--repeats R]
   pjrt      --graph NAME [--offset N]         three-layer PJRT ν-Louvain
   config    --file PATH                       run a configs/*.toml experiment
@@ -145,7 +149,14 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     let (g, name) = load_graph(opts)?;
     let threads = opts.get_i("threads", 1) as usize;
     let seed = opts.get_i("seed", 42) as u64;
-    let out = run_system(system, &g, threads, seed);
+    // GVE honours the full scan-engine knob set (--schedule --chunk
+    // --table --small-degree --hub-degree --prefetch-distance); the
+    // baseline re-implementations keep their documented configs.
+    let out = if system == System::GveLouvain {
+        gve_outcome_with_params(&g, louvain_params_from(opts))
+    } else {
+        run_system(system, &g, threads, seed)
+    };
     println!(
         "{} on {name}: Q={:.4} |Γ|={} passes={} wall={} modeled={} rate={:.1}M edges/s",
         system.name(),

@@ -5,7 +5,9 @@
 //! registry has no rayon, so this module provides the substrate from
 //! scratch: a persistent worker [`team`] (spawn-once, park between
 //! loops — the hot path), a scoped fork-join [`pool`] kept as the
-//! reference path, chunk [`schedule`]s matching OpenMP semantics, a
+//! reference path, chunk [`schedule`]s matching OpenMP semantics (plus
+//! the degree-bucketed dealer for the Louvain scan loops), a cfg-gated
+//! software [`prefetch`] hint for the membership gather, a
 //! parallel prefix [`scan`], parallel [`scatter`] accumulators
 //! (warm-start Σ' init and batch-delta counting), a parallel *stable*
 //! [`sort`] (the batch-delta op sort), CAS-loop [`atomics`]
@@ -16,6 +18,7 @@
 
 pub mod atomics;
 pub mod pool;
+pub mod prefetch;
 pub mod prng;
 pub mod replay;
 pub mod scan;
@@ -24,6 +27,9 @@ pub mod schedule;
 pub mod sort;
 pub mod team;
 
-pub use pool::{parallel_for, parallel_for_ctx, parallel_for_disjoint_mut, ParallelOpts, WorkStats};
-pub use schedule::Schedule;
+pub use pool::{
+    parallel_for, parallel_for_ctx, parallel_for_ctx_spec, parallel_for_disjoint_mut, ParallelOpts,
+    WorkStats,
+};
+pub use schedule::{DealSpec, ScanOrder, Schedule};
 pub use team::{shared_team, Exec, Team};

@@ -19,7 +19,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use super::schedule::{ChunkDealer, Schedule, DEFAULT_CHUNK};
+use super::schedule::{DealCursor, DealSpec, Dealer, Schedule, DEFAULT_CHUNK};
 
 /// Options for a parallel loop.
 #[derive(Clone, Copy, Debug)]
@@ -92,7 +92,7 @@ impl WorkStats {
 /// persistent [`Team`](super::team::Team): team/scoped replay parity is
 /// structural, not test-enforced.
 pub(crate) fn run_chunks_for_tid<C, F>(
-    dealer: &ChunkDealer,
+    dealer: &Dealer,
     tid: usize,
     record: bool,
     ctx: &mut C,
@@ -101,7 +101,7 @@ pub(crate) fn run_chunks_for_tid<C, F>(
 where
     F: Fn(&mut C, std::ops::Range<usize>) + Sync,
 {
-    let mut cursor = 0usize;
+    let mut cursor = DealCursor::default();
     let mut busy = 0u64;
     let mut local: Vec<ChunkRecord> = Vec::new();
     while let Some(r) = dealer.next_chunk(tid, &mut cursor) {
@@ -130,8 +130,27 @@ where
     I: Fn(usize) -> C + Sync,
     F: Fn(&mut C, std::ops::Range<usize>) + Sync,
 {
+    parallel_for_ctx_spec(n, opts, DealSpec::Flat, init, body)
+}
+
+/// [`parallel_for_ctx`] with an explicit [`DealSpec`] — the degree-aware
+/// scan loops pass `ScanOrder::spec()` so chunks come from the
+/// three-legged [`BucketDealer`](super::schedule::BucketDealer) instead
+/// of a flat dealer.
+pub fn parallel_for_ctx_spec<C, I, F>(
+    n: usize,
+    opts: ParallelOpts,
+    spec: DealSpec,
+    init: I,
+    body: F,
+) -> WorkStats
+where
+    C: Send,
+    I: Fn(usize) -> C + Sync,
+    F: Fn(&mut C, std::ops::Range<usize>) + Sync,
+{
     let threads = opts.threads.max(1);
-    let dealer = ChunkDealer::new(n, threads, opts.schedule, opts.chunk);
+    let dealer = spec.build(n, threads, opts.schedule, opts.chunk);
 
     if threads == 1 {
         // Fast path: no spawn, same dealing order.
@@ -312,6 +331,32 @@ mod tests {
             },
         );
         assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32 * 10));
+    }
+
+    #[test]
+    fn ctx_spec_bucketed_covers_all_positions() {
+        for t in [1, 3] {
+            let n = 3001;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let opts = ParallelOpts {
+                threads: t,
+                schedule: Schedule::DegreeBucketed,
+                chunk: 64,
+                record: false,
+            };
+            parallel_for_ctx_spec(
+                n,
+                opts,
+                DealSpec::Bucketed { lo_end: 2000, mid_end: 2900 },
+                |_tid| (),
+                |_, r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "t={t}");
+        }
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Software prefetch for the membership-gather scan loops (PR 6).
+//!
+//! The local-moving hot loop walks a vertex's CSR neighbour list and
+//! gathers `membership[neighbour]` — a data-dependent random access
+//! per edge that the hardware prefetcher cannot predict.  The paper's
+//! 560 M-edges/s rate (§3) lives or dies on this gather; issuing an
+//! explicit prefetch a fixed distance ahead in the neighbour list hides
+//! most of the miss latency on large graphs where the membership array
+//! far exceeds LLC.
+//!
+//! `prefetch_read` is a *hint*: it is bounds-checked, has no observable
+//! effect on program semantics, and compiles to a no-op on targets
+//! without a prefetch intrinsic (the cfg gate keeps the build portable
+//! — only `x86_64` emits `PREFETCHT0` today).  The lookahead distance
+//! is a [`LouvainParams`](crate::louvain::LouvainParams) knob
+//! (`prefetch_distance`, 0 disables).
+
+/// Hint the CPU to pull `data[index]` into all cache levels.
+///
+/// Out-of-range indices are ignored, so callers can prefetch blindly
+/// past the end of a neighbour list without branching on the tail.
+#[inline(always)]
+pub fn prefetch_read<T>(data: &[T], index: usize) {
+    if index < data.len() {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            // _MM_HINT_T0: fetch into every level; the gathered value
+            // is consumed within a few iterations, so temporal locality
+            // is the right hint.
+            core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+                data.as_ptr().add(index) as *const i8,
+            );
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            // Portable fallback: no-op.  (aarch64 has `prfm` but no
+            // stable core::arch intrinsic; the reference to `data`
+            // keeps the signature identical across targets.)
+            let _ = data;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn in_bounds_and_out_of_bounds_are_safe() {
+        let v: Vec<u64> = (0..100).collect();
+        for i in 0..200 {
+            prefetch_read(&v, i); // must never fault, even past the end
+        }
+        assert_eq!(v[99], 99);
+    }
+
+    #[test]
+    fn works_on_atomic_slices() {
+        // The scan loops prefetch `&[AtomicU32]` membership words.
+        let memb: Vec<AtomicU32> = (0..8).map(AtomicU32::new).collect();
+        prefetch_read(&memb, 3);
+        prefetch_read(&memb, 8); // one past the end: ignored
+        let empty: [AtomicU32; 0] = [];
+        prefetch_read(&empty, 0);
+    }
+}

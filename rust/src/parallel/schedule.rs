@@ -1,4 +1,5 @@
-//! OpenMP-style loop schedules (paper §4.1.1).
+//! OpenMP-style loop schedules (paper §4.1.1) plus the degree-bucketed
+//! extension (PR 6).
 //!
 //! The paper evaluates `static`, `dynamic`, `guided` and `auto` with a
 //! chunk size of 2048 and adopts **dynamic** (7% faster than auto on
@@ -11,6 +12,15 @@
 //!   (`max(remaining / (2T), chunk_min)`);
 //! * `Auto`    — implementation-defined in OpenMP; here (as in libgomp)
 //!   it maps to contiguous static blocks of `n / T`.
+//! * `DegreeBucketed` — degree-aware dealing for the Louvain scan
+//!   loops: the caller partitions vertex ids once per pass into
+//!   low/mid/high-degree buckets ([`ScanOrder`]) and the loop runs over
+//!   *positions* of that order through a [`BucketDealer`] — the heavy
+//!   tail is drained first, dynamically, with small chunks, so no
+//!   worker tail-stalls on a hub vertex; the low-degree bulk is dealt
+//!   statically (near-uniform cost, zero dealing contention).  Loops
+//!   that carry no degree information (init, scatter, fold) fall back
+//!   to `Dynamic` dealing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -24,6 +34,10 @@ pub enum Schedule {
     Dynamic,
     Guided,
     Auto,
+    /// Degree-bucketed dealing (PR 6): scan loops run over a
+    /// [`ScanOrder`] through a [`BucketDealer`]; degree-blind loops
+    /// fall back to `Dynamic`.
+    DegreeBucketed,
 }
 
 impl Schedule {
@@ -33,6 +47,7 @@ impl Schedule {
             Schedule::Dynamic => "dynamic",
             Schedule::Guided => "guided",
             Schedule::Auto => "auto",
+            Schedule::DegreeBucketed => "degree-bucketed",
         }
     }
 
@@ -42,12 +57,18 @@ impl Schedule {
             "dynamic" => Some(Schedule::Dynamic),
             "guided" => Some(Schedule::Guided),
             "auto" => Some(Schedule::Auto),
+            "degree-bucketed" => Some(Schedule::DegreeBucketed),
             _ => None,
         }
     }
 
-    pub const ALL: [Schedule; 4] =
-        [Schedule::Static, Schedule::Dynamic, Schedule::Guided, Schedule::Auto];
+    pub const ALL: [Schedule; 5] = [
+        Schedule::Static,
+        Schedule::Dynamic,
+        Schedule::Guided,
+        Schedule::Auto,
+        Schedule::DegreeBucketed,
+    ];
 }
 
 /// Shared state handing out chunks of `0..n` to `nthreads` workers.
@@ -93,7 +114,10 @@ impl ChunkDealer {
                 }
                 Some(start..(start + per).min(self.n))
             }
-            Schedule::Dynamic => {
+            // Degree-blind loops have no ScanOrder to bucket by, so
+            // DegreeBucketed degrades to the adopted Dynamic dealing;
+            // the scan loops build a `BucketDealer` instead.
+            Schedule::Dynamic | Schedule::DegreeBucketed => {
                 let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
                 if start >= self.n {
                     return None;
@@ -118,6 +142,166 @@ impl ChunkDealer {
                     }
                 }
             }
+        }
+    }
+}
+
+/// Degree partition of `0..n` driving [`Schedule::DegreeBucketed`].
+///
+/// `ids` holds every vertex (or community) id exactly once, grouped as
+/// `[low | mid | high]` by degree, ascending id within each bucket
+/// (stable counting sort, so single-thread runs stay deterministic):
+///
+/// * low  — degree ≤ `small` (the `SmallTable` fast-path rows);
+/// * mid  — `small` < degree ≤ `hub`;
+/// * high — degree > `hub` (the heavy tail / hub vertices).
+///
+/// Scan loops iterate *positions* of `ids` through a [`BucketDealer`];
+/// `lo_end` / `mid_end` are the bucket boundaries in position space.
+/// The buffer is a reused pass-workspace scratch: `build` never
+/// allocates once the first (largest) pass sized it.
+#[derive(Debug, Default)]
+pub struct ScanOrder {
+    pub ids: Vec<u32>,
+    pub lo_end: usize,
+    pub mid_end: usize,
+}
+
+impl ScanOrder {
+    /// Partition `0..n` by `degree_of` into the reused buffer.
+    pub fn build(&mut self, n: usize, small: usize, hub: usize, degree_of: impl Fn(usize) -> usize) {
+        let hub = hub.max(small);
+        let (mut lo, mut mid) = (0usize, 0usize);
+        for v in 0..n {
+            let d = degree_of(v);
+            if d <= small {
+                lo += 1;
+            } else if d <= hub {
+                mid += 1;
+            }
+        }
+        self.lo_end = lo;
+        self.mid_end = lo + mid;
+        self.ids.clear();
+        self.ids.resize(n, 0);
+        let (mut at_lo, mut at_mid, mut at_hi) = (0usize, lo, lo + mid);
+        for v in 0..n {
+            let d = degree_of(v);
+            let slot = if d <= small {
+                &mut at_lo
+            } else if d <= hub {
+                &mut at_mid
+            } else {
+                &mut at_hi
+            };
+            self.ids[*slot] = v as u32;
+            *slot += 1;
+        }
+        debug_assert_eq!(at_lo, self.lo_end);
+        debug_assert_eq!(at_mid, self.mid_end);
+        debug_assert_eq!(at_hi, n);
+    }
+
+    /// The dealing spec for a loop over this order's positions.
+    pub fn spec(&self) -> DealSpec {
+        DealSpec::Bucketed { lo_end: self.lo_end, mid_end: self.mid_end }
+    }
+}
+
+/// How a loop's chunks should be dealt — resolved to a [`Dealer`] once
+/// the effective thread count is known (the team clamps `opts.threads`
+/// to its width, so the spec travels and the dealer is built late).
+#[derive(Clone, Copy, Debug)]
+pub enum DealSpec {
+    /// One [`ChunkDealer`] over `0..n` per `opts.schedule`.
+    Flat,
+    /// A [`BucketDealer`] over the positions of a [`ScanOrder`] with
+    /// these bucket boundaries.
+    Bucketed { lo_end: usize, mid_end: usize },
+}
+
+impl DealSpec {
+    pub fn build(self, n: usize, nthreads: usize, schedule: Schedule, chunk: usize) -> Dealer {
+        match self {
+            DealSpec::Flat => Dealer::Flat(ChunkDealer::new(n, nthreads, schedule, chunk)),
+            DealSpec::Bucketed { lo_end, mid_end } => {
+                Dealer::Bucketed(BucketDealer::new(n, lo_end, mid_end, nthreads, chunk))
+            }
+        }
+    }
+}
+
+/// Hub chunks are `chunk / HUB_CHUNK_DIV` (min 1): a degree-200k hub
+/// must not ride in a 2048-wide chunk next to 2047 leaves.
+const HUB_CHUNK_DIV: usize = 32;
+
+/// Three-legged dealer over the positions of a [`ScanOrder`]:
+///
+/// * leg 0 — high bucket (`mid_end..n`), `Dynamic`, small chunks: the
+///   expensive rows go first and are balanced finely;
+/// * leg 1 — mid bucket (`lo_end..mid_end`), `Dynamic`, full chunks;
+/// * leg 2 — low bucket (`0..lo_end`), `Static`, full chunks: the
+///   near-uniform bulk needs no dealing contention at all.
+///
+/// Legs drain in that order; together they hand out every position of
+/// `0..n` exactly once (the same disjoint-cover contract as
+/// [`ChunkDealer`], asserted by the schedule tests).
+pub struct BucketDealer {
+    legs: [ChunkDealer; 3],
+    offsets: [usize; 3],
+}
+
+impl BucketDealer {
+    pub fn new(n: usize, lo_end: usize, mid_end: usize, nthreads: usize, chunk: usize) -> Self {
+        let lo_end = lo_end.min(n);
+        let mid_end = mid_end.clamp(lo_end, n);
+        let hub_chunk = (chunk / HUB_CHUNK_DIV).max(1);
+        Self {
+            legs: [
+                ChunkDealer::new(n - mid_end, nthreads, Schedule::Dynamic, hub_chunk),
+                ChunkDealer::new(mid_end - lo_end, nthreads, Schedule::Dynamic, chunk),
+                ChunkDealer::new(lo_end, nthreads, Schedule::Static, chunk),
+            ],
+            offsets: [mid_end, lo_end, 0],
+        }
+    }
+
+    /// Next chunk of positions for worker `tid`, or `None` when all
+    /// three legs are drained.
+    pub fn next_chunk(&self, tid: usize, cursor: &mut DealCursor) -> Option<std::ops::Range<usize>> {
+        while cursor.leg < self.legs.len() {
+            if let Some(r) = self.legs[cursor.leg].next_chunk(tid, &mut cursor.static_cursor) {
+                let off = self.offsets[cursor.leg];
+                return Some(r.start + off..r.end + off);
+            }
+            cursor.leg += 1;
+            cursor.static_cursor = 0;
+        }
+        None
+    }
+}
+
+/// Per-worker dealing cursor shared by both dealer kinds (`leg` is
+/// unused by the flat dealer).
+#[derive(Default)]
+pub struct DealCursor {
+    pub leg: usize,
+    pub static_cursor: usize,
+}
+
+/// A resolved chunk dealer: flat (one schedule over `0..n`) or
+/// degree-bucketed (three legs over scan-order positions).
+pub enum Dealer {
+    Flat(ChunkDealer),
+    Bucketed(BucketDealer),
+}
+
+impl Dealer {
+    #[inline]
+    pub fn next_chunk(&self, tid: usize, cursor: &mut DealCursor) -> Option<std::ops::Range<usize>> {
+        match self {
+            Dealer::Flat(d) => d.next_chunk(tid, &mut cursor.static_cursor),
+            Dealer::Bucketed(d) => d.next_chunk(tid, cursor),
         }
     }
 }
@@ -204,5 +388,148 @@ mod tests {
             assert_eq!(Schedule::parse(s.name()), Some(s));
         }
         assert_eq!(Schedule::parse("bogus"), None);
+    }
+
+    fn drain_bucketed(
+        n: usize,
+        lo_end: usize,
+        mid_end: usize,
+        t: usize,
+        chunk: usize,
+    ) -> Vec<std::ops::Range<usize>> {
+        let dealer = BucketDealer::new(n, lo_end, mid_end, t, chunk);
+        let mut out = Vec::new();
+        let mut cursors: Vec<DealCursor> = (0..t).map(|_| DealCursor::default()).collect();
+        let mut live: Vec<usize> = (0..t).collect();
+        while !live.is_empty() {
+            live.retain(|&tid| {
+                if let Some(r) = dealer.next_chunk(tid, &mut cursors[tid]) {
+                    out.push(r);
+                    true
+                } else {
+                    false
+                }
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn bucket_dealer_covers_disjointly() {
+        // (n, lo_end, mid_end) shapes: mixed, all-low, all-high,
+        // all-mid, empty buckets at both ends, tiny and chunk-straddling.
+        for (n, lo, mid) in [
+            (10_000, 7_000, 9_500),
+            (513, 513, 513),
+            (513, 0, 0),
+            (513, 0, 513),
+            (1, 0, 0),
+            (1, 1, 1),
+            (4096, 100, 4000),
+            (100, 33, 66),
+        ] {
+            for t in [1, 3, 8] {
+                for c in [1, 16, 2048] {
+                    let chunks = drain_bucketed(n, lo, mid, t, c);
+                    assert_cover(n, &chunks);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_dealer_drains_high_bucket_first() {
+        // Single worker: every high-bucket position must be dealt
+        // before any mid or low one, and mid before low.
+        let chunks = drain_bucketed(300, 100, 200, 1, 16);
+        let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+        let first_mid = flat.iter().position(|&i| (100..200).contains(&i)).unwrap();
+        let first_lo = flat.iter().position(|&i| i < 100).unwrap();
+        let last_hi = flat.iter().rposition(|&i| i >= 200).unwrap();
+        assert!(last_hi < first_mid, "high bucket not drained before mid");
+        assert!(first_mid < first_lo, "mid bucket not drained before low");
+    }
+
+    #[test]
+    fn bucket_dealer_uses_small_hub_chunks() {
+        // High leg chunk = (2048/32).max(1) = 64.
+        let chunks = drain_bucketed(10_000, 0, 0, 4, 2048);
+        assert!(chunks.iter().all(|r| r.len() <= 64));
+        assert_cover(10_000, &chunks);
+    }
+
+    #[test]
+    fn deal_spec_builds_matching_dealer() {
+        let flat = DealSpec::Flat.build(100, 2, Schedule::Dynamic, 16);
+        assert!(matches!(flat, Dealer::Flat(_)));
+        let bucketed =
+            DealSpec::Bucketed { lo_end: 10, mid_end: 20 }.build(100, 2, Schedule::DegreeBucketed, 16);
+        assert!(matches!(bucketed, Dealer::Bucketed(_)));
+        // Unified cursor drain through the Dealer wrapper still covers.
+        let mut cur = DealCursor::default();
+        let mut seen = vec![false; 100];
+        while let Some(r) = bucketed.next_chunk(0, &mut cur) {
+            for i in r {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        // Drain tid 1 too: any static-leg chunks round-robined to it
+        // must not overlap what tid 0 already took.
+        let mut cur1 = DealCursor::default();
+        while let Some(r) = bucketed.next_chunk(1, &mut cur1) {
+            for i in r {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn scan_order_partitions_by_degree() {
+        // degree(v) = v: 0..=4 low, 5..=8 mid, 9.. high with (4, 8).
+        let mut order = ScanOrder::default();
+        order.build(12, 4, 8, |v| v);
+        assert_eq!(order.lo_end, 5);
+        assert_eq!(order.mid_end, 9);
+        assert_eq!(order.ids[..5], [0, 1, 2, 3, 4]);
+        assert_eq!(order.ids[5..9], [5, 6, 7, 8]);
+        assert_eq!(order.ids[9..], [9, 10, 11]);
+        assert!(matches!(order.spec(), DealSpec::Bucketed { lo_end: 5, mid_end: 9 }));
+    }
+
+    #[test]
+    fn scan_order_is_stable_and_reusable() {
+        let degs = [3usize, 900, 2, 17, 500, 1, 17, 1000, 4];
+        let mut order = ScanOrder::default();
+        // Build twice into the same buffer — reuse must not leak state.
+        for _ in 0..2 {
+            order.build(degs.len(), 16, 256, |v| degs[v]);
+            // Ascending ids within each bucket (stable counting sort).
+            assert_eq!(order.ids[..order.lo_end], [0, 2, 5, 8]);
+            assert_eq!(order.ids[order.lo_end..order.mid_end], [3, 6]);
+            assert_eq!(order.ids[order.mid_end..], [1, 4, 7]);
+        }
+        // Shrinking n reuses the allocation and re-derives the bounds.
+        order.build(3, 16, 256, |v| degs[v]);
+        assert_eq!(order.ids.len(), 3);
+        assert_eq!(order.ids[..order.lo_end], [0, 2]);
+        assert_eq!(order.ids[order.mid_end..], [1]);
+    }
+
+    #[test]
+    fn scan_order_degenerate_thresholds() {
+        let mut order = ScanOrder::default();
+        // hub < small is clamped to small: no mid bucket.
+        order.build(6, 10, 2, |v| v);
+        assert_eq!(order.lo_end, order.mid_end);
+        // All vertices in one bucket still covers everything once.
+        order.build(6, 0, 0, |_| 5);
+        assert_eq!(order.lo_end, 0);
+        assert_eq!(order.mid_end, 0);
+        let mut ids: Vec<u32> = order.ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, [0, 1, 2, 3, 4, 5]);
     }
 }

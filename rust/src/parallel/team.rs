@@ -45,8 +45,11 @@ fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-use super::pool::{parallel_for_ctx, run_chunks_for_tid, ChunkRecord, ParallelOpts, RawSend, WorkStats};
-use super::schedule::ChunkDealer;
+use super::pool::{
+    parallel_for_ctx, parallel_for_ctx_spec, run_chunks_for_tid, ChunkRecord, ParallelOpts, RawSend,
+    WorkStats,
+};
+use super::schedule::DealSpec;
 
 /// Total OS threads ever spawned by [`Team`]s in this process (tests
 /// assert spawns per `GveLouvain::run` are O(1) in passes/iterations).
@@ -74,7 +77,12 @@ struct TeamState {
     /// Bumped once per dispatched job; workers run a job exactly once.
     epoch: u64,
     job: Option<Job>,
-    /// Workers still running the current job.
+    /// Participant count of the current job: workers with `tid >= width`
+    /// skip it at the protocol level — they re-sleep without touching
+    /// the job pointer or `remaining` (ROADMAP "narrow jobs on a wide
+    /// team").  The caller is always participant 0.
+    width: usize,
+    /// Participating workers still running the current job.
     remaining: usize,
     /// First worker panic payload of the current job, re-raised on the
     /// caller (payload preserved for parity with the scoped path).
@@ -113,6 +121,13 @@ fn worker_loop(shared: &TeamShared, tid: usize) {
                 return;
             }
             seen = st.epoch;
+            if tid >= st.width {
+                // Not a participant of this job: skip without touching
+                // `job` or `remaining`.  (The job may even be torn down
+                // already — the dispatcher's barrier only counts
+                // participants — so the pointer must not be read here.)
+                continue;
+            }
             st.job.expect("epoch bumped without a published job")
         };
         // SAFETY: see `Job` — the dispatcher keeps the closure alive
@@ -146,6 +161,7 @@ impl Team {
             state: Mutex::new(TeamState {
                 epoch: 0,
                 job: None,
+                width: 0,
                 remaining: 0,
                 panic_payload: None,
                 shutdown: false,
@@ -178,10 +194,14 @@ impl Team {
         self.workers.len()
     }
 
-    /// Run `f(tid)` on every team member; caller participates as tid 0.
-    /// Returns only after *all* members finished, re-raising any panic.
-    fn dispatch<F: Fn(usize) + Sync>(&self, f: &F) {
-        if self.workers.is_empty() {
+    /// Run `f(tid)` on members `0..participants`; caller participates
+    /// as tid 0, workers with `tid >= participants` re-sleep without
+    /// touching the job (the condvar still broadcasts — the skip is in
+    /// the epoch/remaining protocol, not the wakeup).  Returns only
+    /// after all participants finished, re-raising any panic.
+    fn dispatch<F: Fn(usize) + Sync>(&self, f: &F, participants: usize) {
+        let participants = participants.clamp(1, self.workers.len() + 1);
+        if participants == 1 || self.workers.is_empty() {
             f(0);
             return;
         }
@@ -199,7 +219,8 @@ impl Team {
             let mut st = lock_ignore_poison(&self.shared.state);
             st.job = Some(Job { ptr: f as *const F as *const (), call: trampoline::<F> });
             st.epoch += 1;
-            st.remaining = self.workers.len();
+            st.width = participants;
+            st.remaining = participants - 1;
         }
         self.shared.work_cv.notify_all();
         // Save/restore (not reset): clobbering an enclosing team's
@@ -229,7 +250,8 @@ impl Team {
     /// identical chunk dealing and [`ChunkRecord`] semantics.
     ///
     /// `opts.threads` is clamped to the team width; members beyond the
-    /// effective count skip the job.
+    /// effective count are skipped at the dispatch protocol level
+    /// (they never run `init` or touch the job).
     ///
     /// Dispatch is serialized and **non-reentrant**: a job body must
     /// not launch another multi-threaded loop on the *same* team (a
@@ -243,17 +265,33 @@ impl Team {
         I: Fn(usize) -> C + Sync,
         F: Fn(&mut C, Range<usize>) + Sync,
     {
+        self.run_ctx_spec(n, opts, DealSpec::Flat, init, body)
+    }
+
+    /// [`Team::run_ctx`] with an explicit [`DealSpec`]: the degree-aware
+    /// scan loops pass `ScanOrder::spec()` to get the three-legged
+    /// bucketed dealer; everything else uses [`DealSpec::Flat`].
+    pub fn run_ctx_spec<C, I, F>(
+        &self,
+        n: usize,
+        opts: ParallelOpts,
+        spec: DealSpec,
+        init: I,
+        body: F,
+    ) -> WorkStats
+    where
+        C: Send,
+        I: Fn(usize) -> C + Sync,
+        F: Fn(&mut C, Range<usize>) + Sync,
+    {
         let effective = opts.threads.max(1).min(self.threads);
-        let dealer = ChunkDealer::new(n, effective, opts.schedule, opts.chunk);
+        let dealer = spec.build(n, effective, opts.schedule, opts.chunk);
         // Result slots exist only on the instrumentation path: without
         // `record`, stats are all zeros in both runtimes, so the common
         // case allocates nothing per loop.
         let slots: Vec<Slot> =
             if opts.record { (0..effective).map(|_| Slot::default()).collect() } else { Vec::new() };
         let job = |tid: usize| {
-            if tid >= effective {
-                return;
-            }
             let mut ctx = init(tid);
             let (busy, local) = run_chunks_for_tid(&dealer, tid, opts.record, &mut ctx, &body);
             if opts.record {
@@ -267,7 +305,7 @@ impl Team {
         if effective == 1 {
             job(0); // inline: no wakeup, no barrier
         } else {
-            self.dispatch(&job);
+            self.dispatch(&job, effective);
         }
         let mut out = WorkStats { chunks: Vec::new(), busy_ns: vec![0; effective] };
         for (tid, slot) in slots.iter().enumerate() {
@@ -387,6 +425,27 @@ impl<'t> Exec<'t> {
         match self.team {
             Some(t) => t.run_ctx(n, opts, init, body),
             None => parallel_for_ctx(n, opts, init, body),
+        }
+    }
+
+    /// [`Exec::run_ctx`] with an explicit [`DealSpec`] (degree-bucketed
+    /// dealing for the Louvain scan loops).
+    pub fn run_ctx_spec<C, I, F>(
+        self,
+        n: usize,
+        opts: ParallelOpts,
+        spec: DealSpec,
+        init: I,
+        body: F,
+    ) -> WorkStats
+    where
+        C: Send,
+        I: Fn(usize) -> C + Sync,
+        F: Fn(&mut C, Range<usize>) + Sync,
+    {
+        match self.team {
+            Some(t) => t.run_ctx_spec(n, opts, spec, init, body),
+            None => parallel_for_ctx_spec(n, opts, spec, init, body),
         }
     }
 
@@ -538,6 +597,66 @@ mod tests {
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         assert_eq!(stats.busy_ns.len(), 2);
+    }
+
+    #[test]
+    fn narrow_jobs_skip_non_participants() {
+        // A 2-thread job on a 6-wide team must only ever run init/body
+        // on tids 0 and 1 — the other four workers are skipped at the
+        // dispatch protocol level (ROADMAP item).
+        let team = Team::new(6);
+        for _ in 0..20 {
+            let inits = AtomicUsize::new(0);
+            let max_tid = AtomicUsize::new(0);
+            let n = 4001;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            team.run_ctx(
+                n,
+                opts(2, Schedule::Dynamic, 64, false),
+                |tid| {
+                    inits.fetch_add(1, Ordering::Relaxed);
+                    max_tid.fetch_max(tid, Ordering::Relaxed);
+                },
+                |_, r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            assert_eq!(inits.load(Ordering::Relaxed), 2);
+            assert!(max_tid.load(Ordering::Relaxed) < 2);
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+        // Full-width jobs still engage everyone afterwards.
+        let inits = AtomicUsize::new(0);
+        team.run_ctx(
+            6, // one Static chunk per tid with chunk=1
+            opts(6, Schedule::Static, 1, false),
+            |_tid| inits.fetch_add(1, Ordering::Relaxed),
+            |_, _r| {},
+        );
+        assert_eq!(inits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn run_ctx_spec_bucketed_covers_on_team() {
+        let team = Team::new(4);
+        for t in [1, 4] {
+            let n = 6007;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            team.run_ctx_spec(
+                n,
+                opts(t, Schedule::DegreeBucketed, 128, false),
+                DealSpec::Bucketed { lo_end: 4000, mid_end: 5500 },
+                |_tid| (),
+                |_, r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "t={t}");
+        }
     }
 
     #[test]

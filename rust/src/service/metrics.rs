@@ -9,7 +9,69 @@
 use super::snapshot::EpochStats;
 use crate::coordinator::metrics::median;
 
-/// Cumulative service counters plus the full epoch-latency history.
+/// Retained epoch-stat entries; a long-lived service overwrites the
+/// oldest past this point instead of growing without bound (PR 6).
+pub const EPOCH_HISTORY_CAP: usize = 1024;
+
+/// Bounded ring of per-epoch stats in publish order.  Index 0 is the
+/// *oldest retained* epoch: until the ring wraps that is the boot
+/// epoch, afterwards `evicted()` says how many fell off the front.
+#[derive(Clone, Debug, Default)]
+pub struct EpochHistory {
+    buf: Vec<EpochStats>,
+    /// Position of the oldest retained entry once the ring is full.
+    start: usize,
+    evicted: u64,
+}
+
+impl EpochHistory {
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Epochs overwritten after the ring filled up.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    pub fn push(&mut self, s: EpochStats) {
+        if self.buf.len() < EPOCH_HISTORY_CAP {
+            self.buf.push(s);
+        } else {
+            self.buf[self.start] = s;
+            self.start = (self.start + 1) % self.buf.len();
+            self.evicted += 1;
+        }
+    }
+
+    /// Oldest-to-newest iteration over the retained entries.
+    pub fn iter(&self) -> impl Iterator<Item = &EpochStats> {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+}
+
+impl std::ops::Index<usize> for EpochHistory {
+    type Output = EpochStats;
+
+    fn index(&self, i: usize) -> &EpochStats {
+        assert!(i < self.buf.len(), "epoch index {i} out of range {}", self.buf.len());
+        &self.buf[(self.start + i) % self.buf.len()]
+    }
+}
+
+/// Nearest-rank latency percentiles over the retained update epochs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EpochPercentiles {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+/// Cumulative service counters plus the retained epoch-latency history.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceMetrics {
     /// Edge ops accepted (commit markers excluded).
@@ -25,8 +87,9 @@ pub struct ServiceMetrics {
     /// the boot epoch too).
     pub total_apply_ns: u64,
     pub total_detect_ns: u64,
-    /// Per-epoch stats in publish order (initial epoch included).
-    pub epoch_history: Vec<EpochStats>,
+    /// Per-epoch stats in publish order (initial epoch included until
+    /// the ring wraps), bounded at [`EPOCH_HISTORY_CAP`] entries.
+    pub epoch_history: EpochHistory,
     /// Modularity of the initial full run.
     pub initial_modularity: f64,
     /// Modularity of the latest epoch.
@@ -69,13 +132,25 @@ impl ServiceMetrics {
         self.ops_ingested as f64 * 1e9 / ns as f64
     }
 
-    /// Median ingest-to-publish latency over *update* epochs (the
-    /// initial full run is a different animal and excluded).
+    /// Entries to skip at the front of the retained history so the
+    /// derived latencies cover *update* epochs only: the boot epoch is
+    /// entry 0 until the ring wraps, after which it has already been
+    /// evicted and every retained entry is an update epoch.
+    fn boot_skip(&self) -> usize {
+        if self.epoch_history.evicted() == 0 {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Median ingest-to-publish latency over retained *update* epochs
+    /// (the initial full run is a different animal and excluded).
     pub fn median_epoch_ns(&self) -> u64 {
         let walls: Vec<f64> = self
             .epoch_history
             .iter()
-            .skip(1)
+            .skip(self.boot_skip())
             .map(|e| e.wall_ns() as f64)
             .collect();
         if walls.is_empty() {
@@ -85,9 +160,30 @@ impl ServiceMetrics {
         }
     }
 
-    /// Worst epoch latency (same exclusion as the median).
+    /// Worst retained epoch latency (same exclusion as the median).
     pub fn max_epoch_ns(&self) -> u64 {
-        self.epoch_history.iter().skip(1).map(|e| e.wall_ns()).max().unwrap_or(0)
+        self.epoch_history.iter().skip(self.boot_skip()).map(|e| e.wall_ns()).max().unwrap_or(0)
+    }
+
+    /// Nearest-rank p50/p95/p99 ingest-to-publish latency over retained
+    /// update epochs (boot excluded like the median; all-zero when no
+    /// update epoch has been published yet).
+    pub fn epoch_percentiles(&self) -> EpochPercentiles {
+        let mut walls: Vec<u64> = self
+            .epoch_history
+            .iter()
+            .skip(self.boot_skip())
+            .map(|e| e.wall_ns())
+            .collect();
+        if walls.is_empty() {
+            return EpochPercentiles::default();
+        }
+        walls.sort_unstable();
+        let nearest = |p: f64| {
+            let rank = ((p / 100.0) * walls.len() as f64).ceil() as usize;
+            walls[rank.clamp(1, walls.len()) - 1]
+        };
+        EpochPercentiles { p50: nearest(50.0), p95: nearest(95.0), p99: nearest(99.0) }
     }
 
     /// Signed quality drift since the initial run (negative = lost
@@ -135,5 +231,52 @@ mod tests {
         assert_eq!(m.median_epoch_ns(), 0);
         assert_eq!(m.max_epoch_ns(), 0);
         assert_eq!(m.ingest_ops_per_sec(), 0.0);
+        assert_eq!(m.epoch_percentiles(), EpochPercentiles::default());
+    }
+
+    #[test]
+    fn epoch_percentiles_nearest_rank() {
+        let mut m = ServiceMetrics::default();
+        m.record_initial(stats(0, 1_000_000), 0.9);
+        // Update-epoch walls 10, 20, ..., 1000 (boot excluded).
+        for i in 1..=100u64 {
+            m.record_epoch(stats(0, i * 10), 0.9);
+        }
+        let p = m.epoch_percentiles();
+        assert_eq!(p.p50, 500);
+        assert_eq!(p.p95, 950);
+        assert_eq!(p.p99, 990);
+        // One update epoch: every percentile is that sample.
+        let mut m = ServiceMetrics::default();
+        m.record_initial(stats(0, 999), 0.9);
+        m.record_epoch(stats(3, 4), 0.9);
+        assert_eq!(m.epoch_percentiles(), EpochPercentiles { p50: 7, p95: 7, p99: 7 });
+    }
+
+    #[test]
+    fn history_ring_is_bounded_and_drops_oldest() {
+        let mut m = ServiceMetrics::default();
+        m.record_initial(stats(0, 7), 0.9);
+        let extra = 25;
+        for i in 0..(EPOCH_HISTORY_CAP as u64 - 1 + extra) {
+            m.record_epoch(stats(0, 1000 + i), 0.9);
+        }
+        let h = &m.epoch_history;
+        assert_eq!(h.len(), EPOCH_HISTORY_CAP, "history must stay bounded");
+        assert_eq!(h.evicted(), extra, "boot + {} oldest epochs evicted", extra - 1);
+        // Oldest retained entry is update epoch `extra - 1`
+        // (0-indexed), newest is the last pushed.
+        assert_eq!(h[0].detect_ns, 1000 + extra - 1);
+        assert_eq!(h[h.len() - 1].detect_ns, 1000 + EPOCH_HISTORY_CAP as u64 - 2 + extra);
+        // iter() agrees with Index and stays oldest-to-newest.
+        let walls: Vec<u64> = h.iter().map(|e| e.detect_ns).collect();
+        assert_eq!(walls.len(), EPOCH_HISTORY_CAP);
+        assert!(walls.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(walls[0], h[0].detect_ns);
+        // Post-wrap the boot epoch is gone, so nothing is skipped:
+        // max is the newest wall, and batches_applied still counts
+        // every update epoch ever applied.
+        assert_eq!(m.max_epoch_ns(), 1000 + EPOCH_HISTORY_CAP as u64 - 2 + extra);
+        assert_eq!(m.batches_applied, EPOCH_HISTORY_CAP as u64 - 1 + extra);
     }
 }

@@ -64,7 +64,7 @@ fn local_moving_team_equals_scoped_reference() {
             let mut aff = vec![1u32; n];
             let pool = TablePool::new(TableKind::FarKv, n, 1);
             let out =
-                local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, exec);
+                local_moving(&g, &mut memb, &k, &mut sigma, &mut aff, &pool, &params, m, 1e-9, None, exec);
             (memb, sigma, out.dq_total, out.iterations)
         };
         let scoped = run(Exec::scoped());
