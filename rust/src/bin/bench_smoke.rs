@@ -1,24 +1,27 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
 //! cells, PR 2 dynamic cells, PR 3 service cells, PR 6 scan-engine
-//! cells).
+//! cells, PR 7 trace cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
 //! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
 //! dynamic timeline per [`SeedStrategy`] (PR 2), replays the
 //! same-shaped stream through the long-lived `CommunityService` per
-//! strategy (PR 3), and — since PR 6 — runs the `"scan_engine"`
-//! scenario: the Web family with the hybrid SmallTable fast path
-//! on/off crossed with dynamic vs degree-bucketed scheduling,
-//! reporting table ops, edges scanned and the small-path fraction.
-//! Output is a `BENCH_PR6.json` — the fixed yardstick future PRs
-//! compare against.  Hand-rolled JSON (the offline registry has no
-//! serde).
+//! strategy (PR 3), runs the `"scan_engine"` scenario (PR 6): the Web
+//! family with the hybrid SmallTable fast path on/off crossed with
+//! dynamic vs degree-bucketed scheduling, reporting table ops, edges
+//! scanned and the small-path fraction — and, since PR 7, the
+//! `"trace"` scenario: the same web graph at the top thread count with
+//! tracing off vs on, reporting the measured span-capture overhead %
+//! and the mean per-pass parallelism efficiency derived from the
+//! per-worker busy spans.  Output is a `BENCH_PR7.json` — the fixed
+//! yardstick future PRs compare against.  Hand-rolled JSON (the
+//! offline registry has no serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR6.json
+//! bench_smoke [OUT.json]          # default BENCH_PR7.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! ```
@@ -28,8 +31,8 @@
 //! `edges_per_sec` / `ops_per_sec` fields:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR6_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR6.json
+//! git stash && cargo bench-smoke BENCH_PR7_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR7.json
 //! ```
 
 use gve_louvain::bench::{bench_scale_offset, bench_seed};
@@ -41,6 +44,7 @@ use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
 use gve_louvain::parallel::Schedule;
 use gve_louvain::service::{BatchPolicy, ServiceConfig};
+use gve_louvain::trace::{report, TraceSession};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -101,6 +105,20 @@ struct ScanCell {
     small_fraction: f64,
 }
 
+/// PR 7 trace cell: measured span-capture overhead + derived
+/// utilization on the web family at the top thread count.
+struct TraceCell {
+    threads: usize,
+    median_off_ns: u64,
+    median_on_ns: u64,
+    /// `(on / off - 1) × 100` — the overhead contract, measured.
+    overhead_pct: f64,
+    events: usize,
+    passes: usize,
+    /// Mean per-pass Σ worker-busy / (wall × threads).
+    mean_efficiency: f64,
+}
+
 /// Median via the crate-wide convention (`coordinator::metrics`), so
 /// `BENCH_PR3.json` uses the same statistic as every other bench figure.
 fn median_ns(samples: &[u64]) -> u64 {
@@ -108,7 +126,7 @@ fn median_ns(samples: &[u64]) -> u64 {
 }
 
 fn main() {
-    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR6.json".into());
+    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR7.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -305,9 +323,60 @@ fn main() {
         }
     }
 
+    // --- Trace scenario (PR 7): the observability overhead contract,
+    // measured.  The web family at the top thread count: median wall
+    // with tracing disabled (the always-compiled relaxed-load branch)
+    // vs enabled (span capture into the per-worker rings), plus the
+    // mean per-pass parallelism efficiency derived from the last
+    // captured trace — the number the paper argues CPU Louvain wins on.
+    let trace_cell: TraceCell;
+    {
+        let g = generate(GraphFamily::Web, scale, seed);
+        let threads = *THREADS.last().expect("THREADS is non-empty");
+        let algo = GveLouvain::new(LouvainParams::with_threads(threads));
+        let _ = algo.run(&g); // warmup
+        let mut off = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let t0 = Instant::now();
+            let _ = algo.run(&g);
+            off.push(t0.elapsed().as_nanos() as u64);
+        }
+        let mut on = Vec::with_capacity(repeats);
+        let mut last = None;
+        for _ in 0..repeats {
+            let session = TraceSession::start();
+            let t0 = Instant::now();
+            let out = algo.run(&g);
+            on.push(t0.elapsed().as_nanos() as u64);
+            last = Some((out, session.finish()));
+        }
+        let (out, trace) = last.expect("repeats >= 1");
+        let util = report::derive_pass_utilization(&trace, threads);
+        let median_off_ns = median_ns(&off);
+        let median_on_ns = median_ns(&on);
+        trace_cell = TraceCell {
+            threads,
+            median_off_ns,
+            median_on_ns,
+            overhead_pct: (median_on_ns as f64 / median_off_ns.max(1) as f64 - 1.0) * 100.0,
+            events: trace.events.len(),
+            passes: out.passes,
+            mean_efficiency: report::mean_efficiency(&util),
+        };
+        eprintln!(
+            "trace t={} off {:>12} ns  on {:>12} ns  overhead {:+.2}%  {} events  eff~{:.2}",
+            trace_cell.threads,
+            trace_cell.median_off_ns,
+            trace_cell.median_on_ns,
+            trace_cell.overhead_pct,
+            trace_cell.events,
+            trace_cell.mean_efficiency,
+        );
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr6_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr7_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -401,7 +470,20 @@ fn main() {
             comma
         );
     }
-    let _ = writeln!(json, "  ]}}");
+    let _ = writeln!(json, "  ]}},");
+    let _ = writeln!(
+        json,
+        "  \"trace\": {{\"family\": \"web\", \"threads\": {}, \"median_off_ns\": {}, \
+         \"median_on_ns\": {}, \"overhead_pct\": {:.2}, \"events\": {}, \"passes\": {}, \
+         \"mean_efficiency\": {:.4}}}",
+        trace_cell.threads,
+        trace_cell.median_off_ns,
+        trace_cell.median_on_ns,
+        trace_cell.overhead_pct,
+        trace_cell.events,
+        trace_cell.passes,
+        trace_cell.mean_efficiency,
+    );
     let _ = writeln!(json, "}}");
 
     std::fs::write(&out_path, &json).unwrap_or_else(|e| {

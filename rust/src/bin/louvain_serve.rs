@@ -14,7 +14,13 @@
 //!               --strategy delta --threads 4
 //! louvain_serve --input graph.bin --stream updates.ups --max-ops 2048
 //! louvain_serve --family web --write-stream /tmp/churn.ups   # keep it
+//! louvain_serve --family web --trace serve.json   # Perfetto timeline
 //! ```
+//!
+//! `--trace PATH` records the whole replay (epoch apply/detect/publish
+//! spans, the per-pass Louvain spans inside each detection, per-worker
+//! busy slices) into Chrome trace-event JSON — open it at
+//! <https://ui.perfetto.dev>.
 //!
 //! Arguments are hand-parsed (`--key value`); the offline registry has
 //! no clap.
@@ -104,6 +110,14 @@ fn run(opts: &Opts) -> Result<()> {
         threads.saturating_sub(1),
     );
 
+    // Optional tracing (PR 7): the session wraps the whole replay, so
+    // the Perfetto timeline shows every epoch's apply/detect/publish
+    // spans with the per-pass Louvain spans nested inside.
+    let trace_session = opts
+        .flags
+        .get("trace")
+        .map(|_| gve_louvain::trace::TraceSession::start());
+
     let mut epochs: Vec<Arc<EpochSnapshot>> = Vec::new();
     let reader = UpdateStreamReader::open(&stream_path)?;
     for op in reader {
@@ -113,6 +127,18 @@ fn run(opts: &Opts) -> Result<()> {
     }
     if let Some(snap) = svc.flush() {
         epochs.push(snap);
+    }
+
+    if let (Some(session), Some(path)) = (trace_session, opts.flags.get("trace")) {
+        let trace = session.finish();
+        gve_louvain::trace::chrome::write(&trace, path)
+            .with_context(|| format!("writing trace to {path}"))?;
+        eprintln!(
+            "trace: {} events across {} threads ({} dropped) -> {path} (open in https://ui.perfetto.dev)",
+            trace.events.len(),
+            trace.threads.len(),
+            trace.dropped,
+        );
     }
 
     // --- Per-epoch table.

@@ -32,6 +32,14 @@
 //!   streaming ingest with batch coalescing, incremental re-detection
 //!   over the dynamic subsystem, and an epoch-snapshot query surface —
 //!   the north-star serving story.
+//! * [`trace`] — per-pass span tracing (PR 7): always compiled,
+//!   branch-disabled (one relaxed load per site when off), per-worker
+//!   ring-buffer `TraceSink`s, Chrome trace-event JSON export
+//!   (Perfetto-loadable) and derived per-pass utilization tables.
+//!   Capture with `repro run ... --trace out.json` or
+//!   `louvain_serve ... --trace out.json`, then open the file at
+//!   <https://ui.perfetto.dev> — the CLI also prints a per-pass table
+//!   with parallelism efficiency and small-path fraction.
 //! * [`coordinator`] — CLI, config, experiment runner, metrics
 //!   (phase/pass splits) and report generation.
 //! * [`prop`] / [`bench`] — in-tree property-testing and benchmark
@@ -60,6 +68,7 @@ pub mod parallel;
 pub mod prop;
 pub mod runtime;
 pub mod service;
+pub mod trace;
 
 /// Crate-wide vertex id type (paper: 32-bit vertex identifiers).
 pub type VertexId = u32;

@@ -139,6 +139,8 @@ pub fn aggregate_csr_into(
     let mut loops = Vec::new();
 
     // --- Community-vertices CSR G'_{C'} (lines 3-6).
+    let sub_span = |name| crate::trace::span(name, crate::trace::Category::Agg, [n_comm as u64; 4]);
+    let community_order_span = sub_span("agg.community_order");
     scratch.counts.clear();
     scratch.counts.resize(n_comm + 1, 0);
     {
@@ -167,8 +169,10 @@ pub fn aggregate_csr_into(
             loops.push((params.schedule, s.chunks));
         }
     }
+    drop(community_order_span);
 
     // --- Super-vertex graph offsets: community total degree (lines 8-9).
+    let offsets_span = sub_span("agg.offsets");
     scratch.tot_deg.clear();
     scratch.tot_deg.resize(n_comm + 1, 0);
     {
@@ -186,6 +190,7 @@ pub fn aggregate_csr_into(
     }
     exclusive_scan_exec(&mut scratch.tot_deg, params.threads, exec);
     scratch.holey.reset_with_offsets(&mut scratch.tot_deg);
+    drop(offsets_span);
 
     // --- Fill the holey CSR (lines 11-17).
     //
@@ -195,6 +200,7 @@ pub fn aggregate_csr_into(
     // same bound routes each row into the SmallTable fast path or the
     // pooled slab; rows are target-sorted afterwards, so the community
     // visit order cannot change the output graph.
+    let scatter_span = sub_span("agg.scatter");
     let scanned = AtomicU64::new(0);
     let ops = AtomicU64::new(0);
     let small_scans = AtomicU64::new(0);
@@ -202,7 +208,14 @@ pub fn aggregate_csr_into(
     let pf = params.prefetch_distance;
     if params.schedule == Schedule::DegreeBucketed {
         let (order, holey) = (&mut scratch.order, &scratch.holey);
-        order.build(n_comm, params.small_degree, params.hub_degree, |c| holey.capacity(c));
+        order.build_exec(
+            n_comm,
+            params.small_degree,
+            params.hub_degree,
+            |c| holey.capacity(c),
+            ParallelOpts { record: false, ..opts },
+            exec,
+        );
     }
     {
         let cv = &scratch.comm_vertices;
@@ -268,11 +281,17 @@ pub fn aggregate_csr_into(
     counters.table_ops = ops.load(Ordering::Relaxed);
     counters.small_path_scans = small_scans.load(Ordering::Relaxed);
     counters.large_path_scans = large_scans.load(Ordering::Relaxed);
+    drop(scatter_span);
 
     // --- Compact + normalize row order (prefix-sum over used degrees,
     // then chunked copy; both on `exec`, into the caller's graph).
+    let mut compact_span = sub_span("agg.compact");
     let s_compact = scratch.holey.compact_into(out, opts, exec);
     let s = sort_rows_parallel(out, opts, exec);
+    if let Some(g) = compact_span.as_mut() {
+        g.args = [n_comm as u64, out.num_edges() as u64, 0, 0];
+    }
+    drop(compact_span);
     if params.record_chunks {
         loops.push((params.schedule, s_compact.chunks));
         loops.push((params.schedule, s.chunks));

@@ -21,6 +21,7 @@ use crate::parallel::pool::{ChunkRecord, ParallelOpts};
 use crate::parallel::scatter::scatter_add_f64;
 use crate::parallel::schedule::Schedule;
 use crate::parallel::team::Exec;
+use crate::trace;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -40,6 +41,11 @@ pub struct PassStats {
     pub other_ns: u64,
     /// Total accepted ΔQ.
     pub dq: f64,
+    /// Work-counter delta of *this pass* (move + aggregation; PR 7 —
+    /// run-global totals in [`LouvainResult::counters`] are the sum of
+    /// these).  Surfaces the per-pass small-path fraction the paper's
+    /// shrinking-workload argument needs.
+    pub counters: Counters,
 }
 
 /// Result of a full Louvain run.
@@ -236,6 +242,11 @@ impl GveLouvain {
             };
             let np = gp.num_vertices();
             let t_pass = Instant::now();
+            let _pass_span = trace::span(
+                "pass",
+                trace::Category::Pass,
+                [pass as u64, np as u64, gp.num_edges() as u64, 0],
+            );
 
             // Init: K', Σ', C' (Algorithm 1 lines 4-5) into the reused
             // pass buffers — all parallel loops now (identity /
@@ -264,7 +275,7 @@ impl GveLouvain {
             // vertex ids once into low/mid/high-degree buckets; the
             // local-moving iterations reuse the order unchanged.
             let order = if p.schedule == Schedule::DegreeBucketed {
-                scan_order.build(np, p.small_degree, p.hub_degree, |v| gp.degree(v));
+                scan_order.build_exec(np, p.small_degree, p.hub_degree, |v| gp.degree(v), aux_opts, exec);
                 Some(&*scan_order)
             } else {
                 None
@@ -272,6 +283,7 @@ impl GveLouvain {
 
             // Local-moving phase (line 6).
             let t0 = Instant::now();
+            let mut move_span = trace::span("move", trace::Category::Move, [pass as u64, 0, 0, 0]);
             let mv = local_moving(
                 gp,
                 &mut membership[..],
@@ -285,6 +297,10 @@ impl GveLouvain {
                 order,
                 exec,
             );
+            if let Some(g) = move_span.as_mut() {
+                g.args = [pass as u64, mv.iterations as u64, mv.counters.moves_applied, 0];
+            }
+            drop(move_span);
             let move_ns = t0.elapsed().as_nanos() as u64;
             result.counters.merge(&mv.counters);
             result.loops.extend(mv.loops);
@@ -318,12 +334,14 @@ impl GveLouvain {
                 agg_ns: 0,
                 other_ns: 0,
                 dq: mv.dq_total,
+                counters: mv.counters,
             };
 
             if converged || low_shrink || pass + 1 == p.max_passes {
                 // Everything not covered by the move phase is "other".
                 stats.other_ns =
                     (t_pass.elapsed().as_nanos() as u64).saturating_sub(stats.move_ns);
+                snapshot_pass_counters(pass, &stats);
                 result.pass_stats.push(stats);
                 result.passes = pass + 1;
                 break;
@@ -332,6 +350,8 @@ impl GveLouvain {
             // Aggregation phase (line 12), on the same team with the
             // reused scratch, compacted into the other ping-pong slot.
             let t2 = Instant::now();
+            let _agg_span =
+                trace::span("agg", trace::Category::Agg, [pass as u64, n_comm as u64, 0, 0]);
             let agg_info = match p.aggregation {
                 AggregationKind::Csr => {
                     aggregate_csr_into(gp, &membership[..], n_comm, pool, p, exec, agg, next)
@@ -342,9 +362,13 @@ impl GveLouvain {
                     AggInfo { counters: o.counters, loops: o.loops }
                 }
             };
+            drop(_agg_span);
             stats.agg_ns = t2.elapsed().as_nanos() as u64;
-            result.counters.edges_scanned_agg += agg_info.counters.edges_scanned_agg;
-            result.counters.table_ops += agg_info.counters.table_ops;
+            // Full aggregation-counter merge (PR 7): the pass snapshot
+            // and the run totals now both include the aggregation rows'
+            // small/large path split (previously dropped run-globally).
+            stats.counters.merge(&agg_info.counters);
+            result.counters.merge(&agg_info.counters);
             result.loops.extend(agg_info.loops);
 
             // Threshold scaling (line 13).
@@ -355,6 +379,7 @@ impl GveLouvain {
             // dropped, skewing the Fig 14 phase split).
             stats.other_ns = (t_pass.elapsed().as_nanos() as u64)
                 .saturating_sub(stats.move_ns + stats.agg_ns);
+            snapshot_pass_counters(pass, &stats);
             result.pass_stats.push(stats);
             result.passes = pass + 1;
         }
@@ -373,6 +398,22 @@ impl GveLouvain {
         result.serial_ns = result.total_ns.saturating_sub(par_ns);
         result
     }
+}
+
+/// Emit the finished pass's `Counters` snapshot as a trace instant so a
+/// Perfetto timeline carries the per-pass small/large path split next to
+/// the `pass` span it belongs to (PR 7).
+fn snapshot_pass_counters(pass: usize, stats: &PassStats) {
+    trace::instant(
+        "pass.counters",
+        trace::Category::Counter,
+        [
+            pass as u64,
+            stats.counters.small_path_scans,
+            stats.counters.large_path_scans,
+            stats.counters.table_ops,
+        ],
+    );
 }
 
 #[cfg(test)]

@@ -16,7 +16,9 @@ use crate::parallel::pool::{ChunkRecord, ParallelOpts};
 use crate::parallel::prefetch::prefetch_read;
 use crate::parallel::schedule::{DealSpec, ScanOrder, Schedule};
 use crate::parallel::team::Exec;
+use crate::trace;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// Result of one local-moving phase.
 #[derive(Debug, Default)]
@@ -74,8 +76,21 @@ pub fn local_moving(
         record: params.record_chunks,
     };
     let spec = order.map(|o| o.spec()).unwrap_or(DealSpec::Flat);
+    // Hoisted: tracing state cannot change mid-phase (a session wraps
+    // whole runs), so the disabled cost here is one relaxed load total.
+    let traced = trace::enabled();
 
     for _li in 0..params.max_iterations {
+        let mut iter_span = if traced {
+            trace::span("move.iter", trace::Category::Move, [_li as u64, 0, 0, 0])
+        } else {
+            None
+        };
+        // Per-bucket scan time (low/mid/high), accumulated per chunk:
+        // BucketDealer chunks never straddle bucket boundaries, so one
+        // Instant pair per body invocation attributes cleanly.
+        let bucket_ns = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+        let time_buckets = traced && order.is_some();
         let dq_iter = AtomicF64::new(0.0);
         let scanned = AtomicU64::new(0);
         let moves = AtomicU64::new(0);
@@ -91,6 +106,8 @@ pub fn local_moving(
             spec,
             |tid| pool.hybrid_table(tid, params.small_degree),
             |table, range| {
+                let chunk_start = range.start;
+                let t_chunk = if time_buckets { Some(Instant::now()) } else { None };
                 let mut l_dq = 0.0f64;
                 let mut l_scanned = 0u64;
                 let mut l_moves = 0u64;
@@ -192,6 +209,16 @@ pub fn local_moving(
                 pruned.fetch_add(l_pruned, Ordering::Relaxed);
                 small_scans.fetch_add(l_small, Ordering::Relaxed);
                 large_scans.fetch_add(l_large, Ordering::Relaxed);
+                if let (Some(t), Some(o)) = (t_chunk, order) {
+                    let b = if chunk_start < o.lo_end {
+                        0
+                    } else if chunk_start < o.mid_end {
+                        1
+                    } else {
+                        2
+                    };
+                    bucket_ns[b].fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             },
         );
 
@@ -205,6 +232,27 @@ pub fn local_moving(
         out.counters.vertices_pruned += pruned.load(Ordering::Relaxed);
         out.counters.small_path_scans += small_scans.load(Ordering::Relaxed);
         out.counters.large_path_scans += large_scans.load(Ordering::Relaxed);
+        if let Some(g) = iter_span.as_mut() {
+            g.args = [
+                _li as u64,
+                processed.load(Ordering::Relaxed),
+                moves.load(Ordering::Relaxed),
+                pruned.load(Ordering::Relaxed),
+            ];
+        }
+        drop(iter_span);
+        if time_buckets {
+            trace::instant(
+                "move.buckets",
+                trace::Category::Move,
+                [
+                    _li as u64,
+                    bucket_ns[0].load(Ordering::Relaxed),
+                    bucket_ns[1].load(Ordering::Relaxed),
+                    bucket_ns[2].load(Ordering::Relaxed),
+                ],
+            );
+        }
         if params.record_chunks {
             out.loops.push((params.schedule, stats.chunks));
         }

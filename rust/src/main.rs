@@ -70,6 +70,9 @@ USAGE: repro <subcommand> [--key value ...]
               [--schedule static|dynamic|guided|auto|degree-bucketed]
               [--chunk C] [--table map|close-kv|far-kv]
               [--small-degree D] [--hub-degree H] [--prefetch-distance P]
+            and per-pass tracing (gve-louvain only):
+              [--trace out.json]  write Chrome trace-event JSON (open in
+                                  Perfetto) + print per-pass utilization
   compare   [--graphs quick|all] [--systems a,b,c] [--offset N] [--repeats R]
   pjrt      --graph NAME [--offset N]         three-layer PJRT ν-Louvain
   config    --file PATH                       run a configs/*.toml experiment
@@ -149,6 +152,41 @@ fn cmd_run(opts: &Opts) -> Result<()> {
     let (g, name) = load_graph(opts)?;
     let threads = opts.get_i("threads", 1) as usize;
     let seed = opts.get_i("seed", 42) as u64;
+    // Traced run (PR 7): wrap the run in a TraceSession, dump Chrome
+    // trace-event JSON, and print the derived per-pass utilization
+    // table.  GVE only — the baselines don't expose pass stats.
+    if let Some(trace_path) = opts.flags.get("trace") {
+        if system != System::GveLouvain {
+            bail!("--trace is only supported with --system gve-louvain");
+        }
+        let params = louvain_params_from(opts);
+        let trace_threads = params.threads;
+        let session = gve_louvain::trace::TraceSession::start();
+        let result = gve_louvain::louvain::gve::GveLouvain::new(params).run(&g);
+        let trace = session.finish();
+        gve_louvain::trace::chrome::write(&trace, trace_path)
+            .with_context(|| format!("writing trace to {trace_path}"))?;
+        print!(
+            "{}",
+            gve_louvain::trace::report::utilization_table(&result, &trace, trace_threads)
+                .render()
+        );
+        println!(
+            "gve-louvain on {name}: Q={:.4} |Γ|={} passes={} wall={} rate={:.1}M edges/s",
+            result.modularity,
+            result.num_communities,
+            result.passes,
+            fmt_ns(result.total_ns),
+            edges_per_sec(g.num_edges(), result.total_ns) / 1e6,
+        );
+        println!(
+            "trace: {} events across {} threads ({} dropped) -> {trace_path} (open in https://ui.perfetto.dev)",
+            trace.events.len(),
+            trace.threads.len(),
+            trace.dropped,
+        );
+        return Ok(());
+    }
     // GVE honours the full scan-engine knob set (--schedule --chunk
     // --table --small-degree --hub-degree --prefetch-distance); the
     // baseline re-implementations keep their documented configs.

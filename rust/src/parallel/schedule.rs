@@ -24,6 +24,8 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::trace;
+
 /// The paper's default chunk size for static/dynamic/guided.
 pub const DEFAULT_CHUNK: usize = 2048;
 
@@ -165,7 +167,14 @@ pub struct ScanOrder {
     pub ids: Vec<u32>,
     pub lo_end: usize,
     pub mid_end: usize,
+    /// Parallel-build scratch: per-chunk bucket counts in pass 1,
+    /// converted in place to per-chunk per-bucket write offsets for
+    /// pass 2 (reused across passes like `ids`).
+    chunk_counts: Vec<[usize; 3]>,
 }
+
+/// Below this many ids the serial counting sort beats two team jobs.
+const PAR_BUILD_MIN: usize = 8192;
 
 impl ScanOrder {
     /// Partition `0..n` by `degree_of` into the reused buffer.
@@ -200,6 +209,118 @@ impl ScanOrder {
         debug_assert_eq!(at_lo, self.lo_end);
         debug_assert_eq!(at_mid, self.mid_end);
         debug_assert_eq!(at_hi, n);
+    }
+
+    /// [`ScanOrder::build`] parallelized on `exec` (PR-7 ROADMAP
+    /// follow-on): one team job per counting-sort pass.  Pass 1 counts
+    /// bucket sizes per fixed `opts.chunk`-wide id range; a serial
+    /// prefix converts the counts to per-chunk per-bucket write
+    /// offsets; pass 2 scatters ids to those offsets.  Chunks partition
+    /// `0..n` in ascending order and each chunk writes its ids in
+    /// ascending order, so the result is bit-identical to the serial
+    /// build (stable: ascending id within each bucket — asserted by
+    /// `build_exec_matches_serial_build`).  Small or single-threaded
+    /// inputs fall back to the serial path; either way the cost is
+    /// visible as a `scan_order.build` span when tracing.
+    pub fn build_exec(
+        &mut self,
+        n: usize,
+        small: usize,
+        hub: usize,
+        degree_of: impl Fn(usize) -> usize + Sync,
+        opts: super::pool::ParallelOpts,
+        exec: super::team::Exec,
+    ) {
+        let mut sp = trace::span("scan_order.build", trace::Category::Order, [n as u64; 4]);
+        let parallel = opts.threads > 1 && n >= PAR_BUILD_MIN;
+        if !parallel {
+            self.build(n, small, hub, degree_of);
+        } else {
+            self.build_parallel(n, small, hub, &degree_of, opts, exec);
+        }
+        if let Some(g) = sp.as_mut() {
+            g.args = [n as u64, self.lo_end as u64, self.mid_end as u64, parallel as u64];
+        }
+    }
+
+    fn build_parallel(
+        &mut self,
+        n: usize,
+        small: usize,
+        hub: usize,
+        degree_of: &(impl Fn(usize) -> usize + Sync),
+        opts: super::pool::ParallelOpts,
+        exec: super::team::Exec,
+    ) {
+        let hub = hub.max(small);
+        let chunk = opts.chunk.max(1);
+        let nchunks = n.div_ceil(chunk);
+        let bucket_of = |v: usize| {
+            let d = degree_of(v);
+            if d <= small {
+                0usize
+            } else if d <= hub {
+                1
+            } else {
+                2
+            }
+        };
+        // Both team jobs deal whole chunk-count slots statically: the
+        // per-slot work is one `chunk`-wide id scan, near-uniform.
+        let job_opts = super::pool::ParallelOpts {
+            threads: opts.threads,
+            schedule: Schedule::Static,
+            chunk: 1,
+            record: false,
+        };
+        self.chunk_counts.clear();
+        self.chunk_counts.resize(nchunks, [0; 3]);
+        exec.run_disjoint_mut(&mut self.chunk_counts, job_opts, |r, slots| {
+            for (k, slot) in r.zip(slots.iter_mut()) {
+                let mut cnt = [0usize; 3];
+                for v in k * chunk..((k + 1) * chunk).min(n) {
+                    cnt[bucket_of(v)] += 1;
+                }
+                *slot = cnt;
+            }
+        });
+        // Serial prefix over nchunks slots (three adds each): bucket
+        // totals, then counts → write offsets in place.
+        let mut total = [0usize; 3];
+        for c in &self.chunk_counts {
+            for b in 0..3 {
+                total[b] += c[b];
+            }
+        }
+        self.lo_end = total[0];
+        self.mid_end = total[0] + total[1];
+        let mut run = [0, self.lo_end, self.mid_end];
+        for c in self.chunk_counts.iter_mut() {
+            let cnt = *c;
+            *c = run;
+            for b in 0..3 {
+                run[b] += cnt[b];
+            }
+        }
+        debug_assert_eq!(run, [self.lo_end, self.mid_end, n]);
+        self.ids.clear();
+        self.ids.resize(n, 0);
+        let ids = super::pool::RawSend(self.ids.as_mut_ptr());
+        let offsets = &self.chunk_counts;
+        exec.run(nchunks, job_opts, move |r| {
+            let ids = ids;
+            for k in r {
+                let mut at = offsets[k];
+                for v in k * chunk..((k + 1) * chunk).min(n) {
+                    let b = bucket_of(v);
+                    // SAFETY: the offsets are a prefix sum of disjoint
+                    // per-chunk bucket counts, so every slot of
+                    // `0..n` is written by exactly one (chunk, id).
+                    unsafe { *ids.0.add(at[b]) = v as u32 };
+                    at[b] += 1;
+                }
+            }
+        });
     }
 
     /// The dealing spec for a loop over this order's positions.
@@ -516,6 +637,47 @@ mod tests {
         assert_eq!(order.ids.len(), 3);
         assert_eq!(order.ids[..order.lo_end], [0, 2]);
         assert_eq!(order.ids[order.mid_end..], [1]);
+    }
+
+    #[test]
+    fn build_exec_matches_serial_build() {
+        use crate::parallel::pool::ParallelOpts;
+        use crate::parallel::team::{Exec, Team};
+        let team = Team::new(4);
+        let exec = Exec::team(&team);
+        let n = PAR_BUILD_MIN + 1234; // force the parallel path
+        let deg = |v: usize| (v * 7919) % 600; // pseudo-random, all buckets
+        for (small, hub) in [(16, 256), (0, 256), (10, 2), (600, 600)] {
+            let mut serial = ScanOrder::default();
+            serial.build(n, small, hub, deg);
+            let mut par = ScanOrder::default();
+            let opts = ParallelOpts {
+                threads: 4,
+                schedule: Schedule::Dynamic,
+                chunk: 512,
+                record: false,
+            };
+            // Build twice into the same buffer — scratch reuse must not
+            // leak state between passes.
+            for _ in 0..2 {
+                par.build_exec(n, small, hub, deg, opts, exec);
+                assert_eq!(par.lo_end, serial.lo_end);
+                assert_eq!(par.mid_end, serial.mid_end);
+                assert_eq!(par.ids, serial.ids, "(small, hub) = ({small}, {hub})");
+            }
+        }
+        // Small n falls back to the serial path and still matches.
+        let mut serial = ScanOrder::default();
+        serial.build(100, 16, 256, deg);
+        let mut par = ScanOrder::default();
+        let opts = ParallelOpts {
+            threads: 4,
+            schedule: Schedule::Dynamic,
+            chunk: 512,
+            record: false,
+        };
+        par.build_exec(100, 16, 256, deg, opts, exec);
+        assert_eq!(par.ids, serial.ids);
     }
 
     #[test]

@@ -50,6 +50,7 @@ use super::pool::{
     WorkStats,
 };
 use super::schedule::DealSpec;
+use crate::trace::{self, TraceSink};
 
 /// Total OS threads ever spawned by [`Team`]s in this process (tests
 /// assert spawns per `GveLouvain::run` are O(1) in passes/iterations).
@@ -109,7 +110,11 @@ thread_local! {
     static ACTIVE_TEAM: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
 }
 
-fn worker_loop(shared: &TeamShared, tid: usize) {
+fn worker_loop(shared: &TeamShared, tid: usize, sink: Arc<TraceSink>) {
+    // Bind this worker's span ring buffer before the first job: every
+    // span the worker ever records lands in its own slot-held sink,
+    // with no registry lookup on the hot path.
+    trace::install_sink(sink);
     let mut seen = 0u64;
     loop {
         let job = {
@@ -151,6 +156,9 @@ pub struct Team {
     shared: Arc<TeamShared>,
     workers: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Per-worker trace sinks (index 0 = worker tid 1), held strongly so
+    /// a parked worker's recorded spans survive between trace sessions.
+    sinks: Vec<Arc<TraceSink>>,
 }
 
 impl Team {
@@ -170,17 +178,25 @@ impl Team {
             done_cv: Condvar::new(),
             run_lock: Mutex::new(()),
         });
+        let mut sinks = Vec::with_capacity(threads.saturating_sub(1));
         let workers = (1..threads)
             .map(|tid| {
                 let sh = Arc::clone(&shared);
+                let sink = trace::register_named(format!("gve-team-{tid}"));
+                sinks.push(Arc::clone(&sink));
                 OS_SPAWNS.fetch_add(1, Ordering::Relaxed);
                 std::thread::Builder::new()
                     .name(format!("gve-team-{tid}"))
-                    .spawn(move || worker_loop(&sh, tid))
+                    .spawn(move || worker_loop(&sh, tid, sink))
                     .expect("spawn team worker")
             })
             .collect();
-        Self { shared, workers, threads }
+        Self { shared, workers, threads, sinks }
+    }
+
+    /// This team's per-worker trace sinks (empty when `threads == 1`).
+    pub fn trace_sinks(&self) -> &[Arc<TraceSink>] {
+        &self.sinks
     }
 
     /// Team width (including the participating caller).
@@ -291,7 +307,22 @@ impl Team {
         // case allocates nothing per loop.
         let slots: Vec<Slot> =
             if opts.record { (0..effective).map(|_| Slot::default()).collect() } else { Vec::new() };
+        // One relaxed load per job when tracing is off; when on, the job
+        // gets an id correlating the dispatcher's `team.job` span with
+        // each member's `worker.busy` slice (barrier wait = job end −
+        // that worker's busy end, derivable in Perfetto or report.rs).
+        let traced = trace::enabled();
+        let job_id = if traced { trace::next_job_id() } else { 0 };
         let job = |tid: usize| {
+            let _busy = if traced {
+                trace::span(
+                    "worker.busy",
+                    trace::Category::Worker,
+                    [job_id, tid as u64, 0, 0],
+                )
+            } else {
+                None
+            };
             let mut ctx = init(tid);
             let (busy, local) = run_chunks_for_tid(&dealer, tid, opts.record, &mut ctx, &body);
             if opts.record {
@@ -302,10 +333,21 @@ impl Team {
                 s.chunks = local;
             }
         };
-        if effective == 1 {
-            job(0); // inline: no wakeup, no barrier
-        } else {
-            self.dispatch(&job, effective);
+        {
+            let _job_span = if traced {
+                trace::span(
+                    "team.job",
+                    trace::Category::Dispatch,
+                    [job_id, effective as u64, n as u64, 0],
+                )
+            } else {
+                None
+            };
+            if effective == 1 {
+                job(0); // inline: no wakeup, no barrier — still traced
+            } else {
+                self.dispatch(&job, effective);
+            }
         }
         let mut out = WorkStats { chunks: Vec::new(), busy_ns: vec![0; effective] };
         for (tid, slot) in slots.iter().enumerate() {

@@ -34,8 +34,10 @@
 //! replace (which is precisely the batch rule).
 
 use crate::graph::delta::{EdgeBatch, StreamOp};
+use crate::trace::{Clock, SystemClock};
 use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// When the pending batch is cut into an epoch.
 #[derive(Clone, Copy, Debug)]
@@ -78,8 +80,14 @@ pub struct IngestBuffer {
     /// [`Self::take`], keeping ingest O(1) amortized per op.
     dead: Vec<bool>,
     dead_count: usize,
-    /// Arrival time of the oldest pending op (latency trigger).
-    oldest: Option<Instant>,
+    /// Arrival time (clock ns) of the oldest pending op (latency
+    /// trigger).
+    oldest_ns: Option<u64>,
+    /// Time source for the latency trigger — `SystemClock` in
+    /// production, injectable ([`IngestBuffer::with_clock`]) so tests
+    /// drive the max-latency path without real sleeps (PR 7; the trace
+    /// subsystem shares the same `Clock` abstraction).
+    clock: Arc<dyn Clock>,
 }
 
 fn canonical(u: u32, v: u32) -> (u32, u32) {
@@ -92,13 +100,20 @@ fn canonical(u: u32, v: u32) -> (u32, u32) {
 
 impl IngestBuffer {
     pub fn new(policy: BatchPolicy) -> Self {
+        Self::with_clock(policy, Arc::new(SystemClock))
+    }
+
+    /// [`IngestBuffer::new`] with an explicit time source (tests pass a
+    /// [`MockClock`](crate::trace::MockClock)).
+    pub fn with_clock(policy: BatchPolicy, clock: Arc<dyn Clock>) -> Self {
         Self {
             policy,
             pending: EdgeBatch::new(),
             insert_idx: HashMap::new(),
             dead: Vec::new(),
             dead_count: 0,
-            oldest: None,
+            oldest_ns: None,
+            clock,
         }
     }
 
@@ -113,7 +128,7 @@ impl IngestBuffer {
             return true;
         }
         if self.pending.is_empty() {
-            self.oldest = Some(Instant::now());
+            self.oldest_ns = Some(self.clock.now_ns());
         }
         match op {
             StreamOp::Insert(u, v, w) => {
@@ -145,8 +160,13 @@ impl IngestBuffer {
         if self.pending.is_empty() {
             return false;
         }
+        // u128 waiting-time compare: `Duration::MAX.as_nanos()` (the
+        // by_ops sentinel) overflows u64, and must never fire.
+        let waited = |t: u64| {
+            u128::from(self.clock.now_ns().saturating_sub(t)) >= self.policy.max_latency.as_nanos()
+        };
         self.pending.len() >= self.policy.max_ops
-            || self.oldest.map(|t| t.elapsed() >= self.policy.max_latency).unwrap_or(false)
+            || self.oldest_ns.map(waited).unwrap_or(false)
     }
 
     pub fn pending_ops(&self) -> usize {
@@ -162,7 +182,7 @@ impl IngestBuffer {
     /// callers draining a stream manually use it for the trailing
     /// partial batch.
     pub fn take(&mut self) -> EdgeBatch {
-        self.oldest = None;
+        self.oldest_ns = None;
         self.insert_idx.clear();
         let mut batch = std::mem::take(&mut self.pending);
         if self.dead_count > 0 {
@@ -222,9 +242,40 @@ mod tests {
     }
 
     #[test]
+    fn mock_clock_drives_the_latency_trigger_without_sleeping() {
+        use crate::trace::MockClock;
+        let clock = Arc::new(MockClock::new());
+        let mut buf = IngestBuffer::with_clock(
+            BatchPolicy { max_ops: usize::MAX, max_latency: Duration::from_millis(50) },
+            clock.clone(),
+        );
+        assert!(!buf.push(StreamOp::Insert(0, 1, 1.0)));
+        clock.advance(Duration::from_millis(49));
+        assert!(!buf.due(), "49ms < 50ms budget");
+        clock.advance(Duration::from_millis(1));
+        assert!(buf.due(), "oldest op has now waited the full budget");
+        buf.take();
+        assert!(!buf.due());
+        // The oldest-op anchor resets per batch, not per push.
+        buf.push(StreamOp::Insert(2, 3, 1.0));
+        clock.advance(Duration::from_millis(30));
+        buf.push(StreamOp::Insert(4, 5, 1.0));
+        clock.advance(Duration::from_millis(30));
+        assert!(buf.due(), "60ms since the *oldest* op, 30ms since the newest");
+    }
+
+    #[test]
     fn by_ops_policy_ignores_the_clock() {
         let buf = IngestBuffer::new(BatchPolicy::by_ops(10));
         assert_eq!(buf.policy().max_latency, Duration::MAX);
+        // `Duration::MAX.as_nanos()` overflows u64 — the trigger compares
+        // in u128 so the sentinel can never fire, even at clock extremes.
+        use crate::trace::MockClock;
+        let clock = Arc::new(MockClock::new());
+        let mut buf = IngestBuffer::with_clock(BatchPolicy::by_ops(10), clock.clone());
+        buf.push(StreamOp::Insert(0, 1, 1.0));
+        clock.set_ns(u64::MAX);
+        assert!(!buf.due(), "by_ops never flushes on time");
     }
 
     #[test]

@@ -107,6 +107,14 @@ impl CommunityService {
     /// publishes epoch 0 before returning, so the query surface is
     /// never empty.
     pub fn new(g0: Csr, cfg: ServiceConfig) -> Self {
+        Self::new_with_clock(g0, cfg, Arc::new(crate::trace::SystemClock))
+    }
+
+    /// [`CommunityService::new`] with an explicit time source for the
+    /// ingest latency trigger — tests inject a
+    /// [`MockClock`](crate::trace::MockClock) so the max-latency flush
+    /// path runs without real sleeps (PR 7).
+    pub fn new_with_clock(g0: Csr, cfg: ServiceConfig, clock: Arc<dyn crate::trace::Clock>) -> Self {
         let n0 = g0.num_vertices();
         let mut detector = DynamicLouvain::new(cfg.params, cfg.strategy);
         let t0 = Instant::now();
@@ -134,7 +142,7 @@ impl CommunityService {
         Self {
             store: GraphStore::new(g0),
             detector,
-            buffer: IngestBuffer::new(cfg.policy),
+            buffer: IngestBuffer::with_clock(cfg.policy, clock),
             cell: Arc::new(SnapshotCell::new(snapshot)),
             metrics,
             epoch: 0,
@@ -277,18 +285,36 @@ impl CommunityService {
     /// The update loop body: apply the batch to the store, re-detect
     /// with the configured strategy, publish the next epoch.
     fn apply_and_publish(&mut self, batch: &EdgeBatch) -> Arc<EpochSnapshot> {
+        use crate::trace::{self, Category};
+        let next_epoch = self.epoch + 1;
         let t_apply = Instant::now();
         {
+            let _sp = trace::span(
+                "epoch.apply",
+                Category::Service,
+                [next_epoch, batch.len() as u64, 0, 0],
+            );
             let Self { store, detector, .. } = self;
             detector.with_team_exec(|exec, opts| store.apply(batch, opts, exec));
         }
         let apply_ns = t_apply.elapsed().as_nanos() as u64;
 
         let t_detect = Instant::now();
+        let mut detect_span =
+            trace::span("epoch.detect", Category::Service, [next_epoch, 0, 0, 0]);
         let outcome = {
             let Self { store, detector, .. } = self;
             detector.update(store.graph(), batch)
         };
+        if let Some(g) = detect_span.as_mut() {
+            g.args = [
+                next_epoch,
+                outcome.affected_seeded as u64,
+                outcome.result.passes as u64,
+                0,
+            ];
+        }
+        drop(detect_span);
         let detect_ns = t_detect.elapsed().as_nanos() as u64;
 
         self.epoch += 1;
@@ -299,6 +325,11 @@ impl CommunityService {
             apply_ns,
             detect_ns,
         };
+        let _publish_span = trace::span(
+            "epoch.publish",
+            Category::Service,
+            [next_epoch, self.store.num_vertices() as u64, 0, 0],
+        );
         let sizes = community_sizes(
             &self.detector,
             &outcome.result.membership,
@@ -488,6 +519,33 @@ mod tests {
         };
         assert_eq!(epoch.epoch, 1);
         assert_eq!(epoch.stats.batch_ops, 1);
+        assert!(svc.poll().is_none(), "buffer drained");
+    }
+
+    #[test]
+    fn mock_clock_poll_flushes_the_idle_stream_without_sleeping() {
+        // The no-sleep twin of the test above (PR 7): a MockClock
+        // injected through new_with_clock drives the max-latency bound
+        // deterministically.
+        use crate::trace::MockClock;
+        use std::time::Duration;
+        let g = generate(GraphFamily::Road, 7, 5);
+        let cfg = ServiceConfig {
+            policy: BatchPolicy {
+                max_ops: usize::MAX,
+                max_latency: Duration::from_millis(20),
+            },
+            ..quick_cfg(SeedStrategy::NaiveDynamic)
+        };
+        let clock = Arc::new(MockClock::new());
+        let mut svc = CommunityService::new_with_clock(g, cfg, clock.clone());
+        assert!(svc.submit(StreamOp::Insert(0, 1, 1.0)).is_none(), "budget not yet spent");
+        clock.advance(Duration::from_millis(19));
+        assert!(svc.poll().is_none(), "1ms of budget left");
+        clock.advance(Duration::from_millis(1));
+        let snap = svc.poll().expect("budget exhausted: poll must publish");
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.stats.batch_ops, 1);
         assert!(svc.poll().is_none(), "buffer drained");
     }
 

@@ -1,0 +1,187 @@
+//! Chrome trace-event JSON export (PR 7).
+//!
+//! Emits the subset of the trace-event format Perfetto and
+//! `chrome://tracing` load: an object `{"traceEvents": [...]}` with
+//! per-thread `"M"` (thread_name) metadata records, `"X"` (complete)
+//! records for spans, and `"i"` (instant) records for point events.
+//! Timestamps are microseconds (f64) rebased to the session start so
+//! traces open at t=0. Hand-rolled writer — the crate has no JSON dep.
+
+use super::{EventKind, SpanEvent, Trace};
+use std::fmt::Write as _;
+
+/// Human-readable labels for the fixed `[u64; 4]` arg slots, per event
+/// name. Unlisted names fall back to `a0..a3`. Keep in sync with the
+/// instrumentation sites.
+pub fn arg_names(name: &str) -> [&'static str; 4] {
+    match name {
+        "pass" => ["pass", "vertices", "edges", ""],
+        "pass.counters" => ["pass", "small_path_scans", "large_path_scans", "table_ops"],
+        "move" => ["pass", "iterations", "moves", ""],
+        "move.iter" => ["iter", "processed", "moves", "pruned"],
+        "move.buckets" => ["iter", "lo_ns", "mid_ns", "hi_ns"],
+        "agg" => ["pass", "communities", "", ""],
+        "agg.community_order" => ["communities", "", "", ""],
+        "agg.offsets" => ["communities", "", "", ""],
+        "agg.scatter" => ["communities", "", "", ""],
+        "agg.compact" => ["communities", "edges_out", "", ""],
+        "scan_order.build" => ["n", "lo_end", "mid_end", "parallel"],
+        "team.job" => ["job", "workers", "items", ""],
+        "worker.busy" => ["job", "tid", "chunks", ""],
+        "epoch.apply" => ["epoch", "batch_ops", "", ""],
+        "epoch.detect" => ["epoch", "affected_seeded", "passes", ""],
+        "epoch.publish" => ["epoch", "vertices", "", ""],
+        _ => ["a0", "a1", "a2", "a3"],
+    }
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn write_args(out: &mut String, ev: &SpanEvent) {
+    let names = arg_names(ev.name);
+    out.push_str("{");
+    let mut first = true;
+    for (i, label) in names.iter().enumerate() {
+        if label.is_empty() {
+            continue;
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "\"{}\":{}", label, ev.args[i]);
+    }
+    out.push('}');
+}
+
+/// Serialize a finished trace. ~150 bytes per event; a full Louvain run
+/// on a scale-13 graph is a few hundred KiB.
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let mut out = String::with_capacity(trace.events.len() * 160 + 1024);
+    out.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    // Thread-name metadata first so viewers label tracks before events.
+    for (tid, label) in trace.threads.iter().enumerate() {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\""
+        );
+        escape_into(&mut out, if label.is_empty() { "thread" } else { label });
+        out.push_str("\"}}");
+    }
+    for ev in &trace.events {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let ts_us = ev.start_ns.saturating_sub(trace.start_ns) as f64 / 1000.0;
+        match ev.kind {
+            EventKind::Span => {
+                let dur_us = ev.dur_ns as f64 / 1000.0;
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{:.3},\"dur\":{:.3},\"args\":",
+                    ev.tid,
+                    ev.name,
+                    ev.cat.name(),
+                    ts_us,
+                    dur_us
+                );
+            }
+            EventKind::Instant => {
+                let _ = write!(
+                    out,
+                    "{{\"ph\":\"i\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{:.3},\"s\":\"t\",\"args\":",
+                    ev.tid,
+                    ev.name,
+                    ev.cat.name(),
+                    ts_us
+                );
+            }
+        }
+        write_args(&mut out, ev);
+        out.push('}');
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write the Chrome JSON to `path`.
+pub fn write(trace: &Trace, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_chrome_json(trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Category;
+
+    fn ev(name: &'static str, kind: EventKind, start: u64, dur: u64) -> SpanEvent {
+        SpanEvent {
+            name,
+            cat: Category::Pass,
+            kind,
+            tid: 0,
+            start_ns: start,
+            dur_ns: dur,
+            args: [1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn json_shape_has_metadata_and_events() {
+        let trace = Trace {
+            events: vec![
+                ev("pass", EventKind::Span, 1000, 5000),
+                ev("pass.counters", EventKind::Instant, 6000, 0),
+            ],
+            threads: vec!["main".into()],
+            dropped: 0,
+            start_ns: 1000,
+            end_ns: 10_000,
+        };
+        let json = to_chrome_json(&trace);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"thread_name\""));
+        // Span rebased to session start: ts 0.000, dur 5.000 µs.
+        assert!(json.contains("\"ph\":\"X\",\"pid\":1,\"tid\":0,\"name\":\"pass\""));
+        assert!(json.contains("\"ts\":0.000"));
+        assert!(json.contains("\"dur\":5.000"));
+        assert!(json.contains("\"ph\":\"i\""));
+        // Named args, empty slots skipped.
+        assert!(json.contains("\"pass\":1,\"vertices\":2,\"edges\":3"));
+        assert!(!json.contains("\"\":"));
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let trace = Trace {
+            events: vec![],
+            threads: vec!["we\"ird\\name".into()],
+            dropped: 0,
+            start_ns: 0,
+            end_ns: 0,
+        };
+        let json = to_chrome_json(&trace);
+        assert!(json.contains("we\\\"ird\\\\name"));
+    }
+}

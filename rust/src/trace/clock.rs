@@ -1,0 +1,128 @@
+//! Injectable monotonic clock (PR 7 satellite).
+//!
+//! One abstraction serves two consumers: the trace subsystem's span
+//! timestamps and `service::IngestBuffer`'s max-latency flush bound
+//! (the ROADMAP mock-clock item). Production code never constructs a
+//! clock explicitly — `SystemClock` is the default everywhere — and the
+//! trace hot path doesn't even go through the trait: `now_ns()` reads a
+//! process-epoch `Instant` directly unless a test installed an override.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Monotonic nanosecond source. `Send + Sync` so one instance can back
+/// an `IngestBuffer` on the writer thread and assertions on the test
+/// thread.
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// Real time: nanoseconds since the first call in this process.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        process_now_ns()
+    }
+}
+
+/// Test clock: time advances only when told to.
+#[derive(Debug, Default)]
+pub struct MockClock {
+    ns: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.ns
+            .fetch_add(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX), Ordering::SeqCst);
+    }
+
+    pub fn set_ns(&self, ns: u64) {
+        self.ns.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since process trace epoch (first use). Saturates at
+/// u64::MAX after ~584 years of uptime.
+pub fn process_now_ns() -> u64 {
+    u64::try_from(process_epoch().elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+static CUSTOM_CLOCK_SET: AtomicBool = AtomicBool::new(false);
+
+fn custom_clock_slot() -> &'static Mutex<Option<Arc<dyn Clock>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<dyn Clock>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a clock override for the trace subsystem (tests only — this
+/// puts a mutex on every timestamp read). Pass `None` to restore the
+/// default `Instant` path.
+pub fn set_trace_clock(clock: Option<Arc<dyn Clock>>) {
+    let mut slot = match custom_clock_slot().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    CUSTOM_CLOCK_SET.store(clock.is_some(), Ordering::SeqCst);
+    *slot = clock;
+}
+
+/// Trace-internal timestamp: default path is one relaxed load + an
+/// `Instant::elapsed`, no trait object in sight.
+#[inline]
+pub(crate) fn now_ns() -> u64 {
+    if !CUSTOM_CLOCK_SET.load(Ordering::Relaxed) {
+        return process_now_ns();
+    }
+    let slot = match custom_clock_slot().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    match slot.as_ref() {
+        Some(c) => c.now_ns(),
+        None => process_now_ns(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock;
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn mock_clock_advances_only_when_told() {
+        let c = MockClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now_ns(), 5_000_000);
+        c.set_ns(42);
+        assert_eq!(c.now_ns(), 42);
+        c.advance(Duration::from_nanos(8));
+        assert_eq!(c.now_ns(), 50);
+    }
+}

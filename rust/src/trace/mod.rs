@@ -1,0 +1,487 @@
+//! Low-overhead span tracing (PR 7).
+//!
+//! Always compiled, branch-disabled: every instrumentation site costs one
+//! relaxed atomic load when no `TraceSession` is active (see `enabled`).
+//! When a session is active, spans are recorded into per-thread
+//! `TraceSink` ring buffers — preallocated, owner-thread-only pushes
+//! (the sink mutex is uncontended on the hot path), `&'static str` names
+//! and fixed `[u64; 4]` args so recording never allocates.
+//!
+//! Structure:
+//!
+//! - `TraceSink` — one per recording thread. `Team` workers get theirs at
+//!   spawn (`parallel::team` holds them in the worker slots); any other
+//!   thread lazily self-registers on first span.
+//! - `TraceSession` — RAII over the process-global enabled flag. Starting
+//!   a session clears every registered sink and flips the flag; `finish`
+//!   flips it back and drains all sinks into a merged, time-sorted
+//!   `Trace`. One session at a time per process.
+//! - `Trace` — the merged event list plus thread labels. Feed it to
+//!   `chrome::to_chrome_json` (Perfetto-loadable) or
+//!   `report::derive_pass_utilization` (per-pass efficiency table).
+//!
+//! Timing comes from `clock::Clock` — a monotonic ns counter that
+//! defaults to `Instant` and can be swapped for a `MockClock` in tests
+//! (the same abstraction `service::IngestBuffer` uses for its
+//! max-latency bound).
+
+pub mod chrome;
+pub mod clock;
+pub mod report;
+
+pub use clock::{Clock, MockClock, SystemClock};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Per-sink ring capacity. At ~48 bytes/event this is ~3 MiB per thread,
+/// far beyond any pass loop's span count; overflow drops newest and
+/// bumps `TraceSink::dropped` rather than reallocating mid-run.
+pub const SINK_CAPACITY: usize = 65_536;
+
+/// Process-global "a session is recording" flag. The *only* state a
+/// disabled span site reads — one relaxed load, then fall through.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Monotonically increasing id tying a `team.job` span to the
+/// `worker.busy` spans it dispatched (arg slot 0 on both sides).
+static JOB_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// True while a `TraceSession` is active. The documented overhead
+/// contract: when this returns false, an instrumented site does nothing
+/// else — no clock read, no sink lookup, no allocation.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Next dispatch id for correlating team jobs with worker slices.
+#[inline]
+pub fn next_job_id() -> u64 {
+    JOB_SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Coarse event category; becomes the Chrome `cat` field so Perfetto can
+/// filter phases independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    /// Whole Louvain pass (local-moving + aggregation + bookkeeping).
+    Pass,
+    /// Local-moving: per-iteration spans and bucket-time instants.
+    Move,
+    /// Aggregation sub-steps: community-order / offsets / scatter / compact.
+    Agg,
+    /// Team dispatch: one span per `run_ctx_spec` job.
+    Dispatch,
+    /// Per-worker busy slices inside a dispatch.
+    Worker,
+    /// Service epochs: apply / detect / publish.
+    Service,
+    /// `ScanOrder` bucketing prep.
+    Order,
+    /// Counter snapshots (instant events carrying `Counters` deltas).
+    Counter,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Pass => "pass",
+            Category::Move => "move",
+            Category::Agg => "agg",
+            Category::Dispatch => "dispatch",
+            Category::Worker => "worker",
+            Category::Service => "service",
+            Category::Order => "order",
+            Category::Counter => "counter",
+        }
+    }
+}
+
+/// What a recorded event is: a closed duration or a point marker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// One recorded event. `Copy`, fixed-size, `&'static` name — pushing one
+/// into a sink is a bounds check and a memcpy.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub cat: Category,
+    pub kind: EventKind,
+    /// Recording thread id (trace-local, dense; 0 = first registrant).
+    pub tid: u32,
+    /// Start time, ns on the session clock.
+    pub start_ns: u64,
+    /// Duration in ns (0 for instants).
+    pub dur_ns: u64,
+    /// Per-name payload; labels come from `chrome::arg_names`.
+    pub args: [u64; 4],
+}
+
+/// Per-thread event buffer. Held strongly by the global registry (and by
+/// `Team` worker slots), so a sink outlives any one session and a
+/// long-parked worker's events are never orphaned.
+pub struct TraceSink {
+    tid: u32,
+    label: String,
+    events: Mutex<Vec<SpanEvent>>,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    fn new(tid: u32, label: String) -> Self {
+        TraceSink {
+            tid,
+            label,
+            events: Mutex::new(Vec::with_capacity(SINK_CAPACITY)),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Events dropped because the ring was full (session lifetime total).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn push(&self, ev: SpanEvent) {
+        let mut buf = lock_ignore_poison(&self.events);
+        if buf.len() < SINK_CAPACITY {
+            buf.push(ev);
+        } else {
+            drop(buf);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn clear(&self) {
+        lock_ignore_poison(&self.events).clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    fn drain(&self) -> Vec<SpanEvent> {
+        std::mem::take(&mut *lock_ignore_poison(&self.events))
+    }
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Registry of every sink ever created. Strong `Arc`s, never removed:
+/// team workers park between runs holding their sink, and sessions must
+/// still see those sinks next time. Session start clears each sink's
+/// *events*, not the registry.
+struct Registry {
+    sinks: Mutex<Vec<Arc<TraceSink>>>,
+    session_active: AtomicBool,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        sinks: Mutex::new(Vec::new()),
+        session_active: AtomicBool::new(false),
+    })
+}
+
+thread_local! {
+    static LOCAL_SINK: RefCell<Option<Arc<TraceSink>>> = const { RefCell::new(None) };
+}
+
+/// Create a sink labelled `label` and register it globally. `Team::new`
+/// calls this per worker slot; the worker installs it via `install_sink`
+/// as its first action.
+pub fn register_named(label: String) -> Arc<TraceSink> {
+    let reg = registry();
+    let mut sinks = lock_ignore_poison(&reg.sinks);
+    let tid = sinks.len() as u32;
+    let sink = Arc::new(TraceSink::new(tid, label));
+    sinks.push(sink.clone());
+    sink
+}
+
+/// Bind `sink` as the calling thread's recording target.
+pub fn install_sink(sink: Arc<TraceSink>) {
+    LOCAL_SINK.with(|s| *s.borrow_mut() = Some(sink));
+}
+
+/// The calling thread's sink, self-registering on first use (label from
+/// the OS thread name, or `thread-{tid}`).
+fn current_sink() -> Arc<TraceSink> {
+    LOCAL_SINK.with(|s| {
+        let mut slot = s.borrow_mut();
+        if let Some(sink) = slot.as_ref() {
+            return sink.clone();
+        }
+        let label = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_default();
+        let sink = {
+            let reg = registry();
+            let mut sinks = lock_ignore_poison(&reg.sinks);
+            let tid = sinks.len() as u32;
+            let label = if label.is_empty() {
+                format!("thread-{tid}")
+            } else {
+                label
+            };
+            let sink = Arc::new(TraceSink::new(tid, label));
+            sinks.push(sink.clone());
+            sink
+        };
+        *slot = Some(sink.clone());
+        sink
+    })
+}
+
+/// Open a span. Returns `None` (and does nothing else) when disabled —
+/// the `?`-free call shape is `let _s = trace::span(...)`, which drops
+/// the guard (closing the span) at scope end. Mutate `args` through the
+/// guard before it drops to attach results computed inside the span.
+#[inline]
+pub fn span(name: &'static str, cat: Category, args: [u64; 4]) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    Some(SpanGuard {
+        name,
+        cat,
+        args,
+        start_ns: clock::now_ns(),
+    })
+}
+
+/// Record a point event (zero duration) when enabled.
+#[inline]
+pub fn instant(name: &'static str, cat: Category, args: [u64; 4]) {
+    if !enabled() {
+        return;
+    }
+    let sink = current_sink();
+    sink.push(SpanEvent {
+        name,
+        cat,
+        kind: EventKind::Instant,
+        tid: sink.tid(),
+        start_ns: clock::now_ns(),
+        dur_ns: 0,
+        args,
+    });
+}
+
+/// RAII span: records its complete event (start + duration) on drop, on
+/// whichever thread drops it.
+pub struct SpanGuard {
+    name: &'static str,
+    cat: Category,
+    pub args: [u64; 4],
+    start_ns: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = clock::now_ns();
+        let sink = current_sink();
+        sink.push(SpanEvent {
+            name: self.name,
+            cat: self.cat,
+            kind: EventKind::Span,
+            tid: sink.tid(),
+            start_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            args: self.args,
+        });
+    }
+}
+
+/// A finished session's merged output.
+pub struct Trace {
+    /// All events from all sinks, sorted by (start_ns, tid).
+    pub events: Vec<SpanEvent>,
+    /// Thread labels, indexed by `SpanEvent::tid`.
+    pub threads: Vec<String>,
+    /// Events lost to full rings (0 in any sane run).
+    pub dropped: u64,
+    /// Session bounds on the session clock, ns.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Trace {
+    /// Number of events with the given name (spans + instants).
+    pub fn count(&self, name: &str) -> usize {
+        self.events.iter().filter(|e| e.name == name).count()
+    }
+
+    /// Iterate duration spans with the given name, in start order.
+    pub fn spans<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a SpanEvent> + 'a {
+        self.events
+            .iter()
+            .filter(move |e| e.kind == EventKind::Span && e.name == name)
+    }
+
+    /// Iterate instants with the given name, in start order.
+    pub fn instants<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a SpanEvent> + 'a {
+        self.events
+            .iter()
+            .filter(move |e| e.kind == EventKind::Instant && e.name == name)
+    }
+
+    /// (name → count) map of the trace's structure, timings ignored.
+    /// Deterministic across replays of a deterministic run.
+    pub fn structure(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for e in &self.events {
+            *m.entry(e.name).or_insert(0usize) += 1;
+        }
+        m
+    }
+
+    pub fn wall_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// RAII over the global enabled flag. `start` clears all sinks and
+/// enables recording; `finish` (or drop) disables it. One at a time —
+/// `start` panics if a session is already active, so tests sharing a
+/// process must serialize sessions.
+pub struct TraceSession {
+    start_ns: u64,
+    finished: bool,
+}
+
+impl TraceSession {
+    /// Begin recording. Panics if another session is active in this
+    /// process (the enabled flag is global).
+    pub fn start() -> TraceSession {
+        let reg = registry();
+        if reg.session_active.swap(true, Ordering::SeqCst) {
+            panic!("trace: a TraceSession is already active in this process");
+        }
+        {
+            let sinks = lock_ignore_poison(&reg.sinks);
+            for s in sinks.iter() {
+                s.clear();
+            }
+        }
+        let start_ns = clock::now_ns();
+        ENABLED.store(true, Ordering::SeqCst);
+        TraceSession {
+            start_ns,
+            finished: false,
+        }
+    }
+
+    /// Stop recording and merge every sink into a time-sorted `Trace`.
+    pub fn finish(mut self) -> Trace {
+        self.finished = true;
+        ENABLED.store(false, Ordering::SeqCst);
+        let end_ns = clock::now_ns();
+        let reg = registry();
+        let mut events = Vec::new();
+        let mut threads = Vec::new();
+        let mut dropped = 0u64;
+        {
+            let sinks = lock_ignore_poison(&reg.sinks);
+            for s in sinks.iter() {
+                events.extend(s.drain());
+                dropped += s.dropped();
+            }
+            // tids are dense registration indices; label table mirrors that.
+            threads.resize(sinks.len(), String::new());
+            for s in sinks.iter() {
+                threads[s.tid() as usize] = s.label().to_string();
+            }
+        }
+        events.sort_by_key(|e| (e.start_ns, e.tid));
+        reg.session_active.store(false, Ordering::SeqCst);
+        Trace {
+            events,
+            threads,
+            dropped,
+            start_ns: self.start_ns,
+            end_ns,
+        }
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        if !self.finished {
+            ENABLED.store(false, Ordering::SeqCst);
+            registry().session_active.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here avoid TraceSession (the flag is process-global and
+    // `cargo test` is multithreaded); session behaviour is covered by
+    // the serialized integration tests in tests/trace.rs.
+
+    #[test]
+    fn disabled_span_site_is_none() {
+        assert!(!enabled());
+        assert!(span("x", Category::Pass, [0; 4]).is_none());
+        instant("y", Category::Counter, [0; 4]); // no-op, must not panic
+    }
+
+    #[test]
+    fn sink_ring_drops_newest_past_capacity() {
+        let sink = TraceSink::new(0, "t".into());
+        let ev = SpanEvent {
+            name: "e",
+            cat: Category::Pass,
+            kind: EventKind::Instant,
+            tid: 0,
+            start_ns: 0,
+            dur_ns: 0,
+            args: [0; 4],
+        };
+        for _ in 0..SINK_CAPACITY + 7 {
+            sink.push(ev);
+        }
+        assert_eq!(sink.dropped(), 7);
+        assert_eq!(sink.drain().len(), SINK_CAPACITY);
+        assert_eq!(sink.dropped(), 7); // drain does not reset the counter
+        sink.clear();
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn registry_assigns_dense_tids() {
+        let a = register_named("a".into());
+        let b = register_named("b".into());
+        assert!(b.tid() > a.tid());
+        assert_eq!(a.label(), "a");
+    }
+
+    #[test]
+    fn job_ids_increase() {
+        let x = next_job_id();
+        let y = next_job_id();
+        assert!(y > x);
+    }
+}

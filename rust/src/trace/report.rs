@@ -1,0 +1,195 @@
+//! Derived per-pass utilization numbers (PR 7).
+//!
+//! Turns a raw `Trace` into the quantities the paper argues from:
+//! per-pass parallelism efficiency (Σ worker-busy / (wall × threads)),
+//! per-bucket low/mid/high scan time (from the PR-6 `ScanOrder`
+//! bucketing, recorded as `move.buckets` instants), and the small-path
+//! fraction per pass (from the per-pass `Counters` snapshot). The
+//! aligned table goes through `coordinator::report::Table`, same as
+//! every other CLI report in the repo.
+
+use super::{EventKind, Trace};
+use crate::coordinator::metrics::fmt_ns;
+use crate::coordinator::report::Table;
+use crate::louvain::LouvainResult;
+
+/// Utilization numbers for one Louvain pass, derived purely from spans.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PassUtil {
+    /// Pass index (arg 0 of the `pass` span).
+    pub pass: u64,
+    /// Pass span duration.
+    pub wall_ns: u64,
+    /// Σ over workers of `worker.busy` time clipped to the pass window.
+    pub busy_ns: u64,
+    /// busy / (wall × threads), clamped to [0, 1].
+    pub efficiency: f64,
+    /// Accumulated low/mid/high bucket scan ns (`move.buckets` instants).
+    pub bucket_ns: [u64; 3],
+}
+
+/// Per-pass utilization from the raw span stream. `threads` is the
+/// parallelism the run was configured with (the efficiency denominator);
+/// busy slices recorded by *any* worker inside a pass window count, so
+/// inline single-thread execution shows up as efficiency ≈ 1/threads
+/// only if threads > 1 went idle — exactly the signal we want.
+pub fn derive_pass_utilization(trace: &Trace, threads: usize) -> Vec<PassUtil> {
+    let threads = threads.max(1) as u64;
+    let mut utils: Vec<PassUtil> = Vec::new();
+    for p in trace.spans("pass") {
+        let (lo, hi) = (p.start_ns, p.start_ns.saturating_add(p.dur_ns));
+        let mut u = PassUtil {
+            pass: p.args[0],
+            wall_ns: p.dur_ns,
+            ..PassUtil::default()
+        };
+        for w in &trace.events {
+            match (w.kind, w.name) {
+                (EventKind::Span, "worker.busy") => {
+                    let (ws, we) = (w.start_ns, w.start_ns.saturating_add(w.dur_ns));
+                    let clipped = we.min(hi).saturating_sub(ws.max(lo));
+                    u.busy_ns += clipped;
+                }
+                (EventKind::Instant, "move.buckets") if w.start_ns >= lo && w.start_ns <= hi => {
+                    u.bucket_ns[0] += w.args[1];
+                    u.bucket_ns[1] += w.args[2];
+                    u.bucket_ns[2] += w.args[3];
+                }
+                _ => {}
+            }
+        }
+        let denom = (u.wall_ns.max(1) * threads) as f64;
+        u.efficiency = (u.busy_ns as f64 / denom).min(1.0);
+        utils.push(u);
+    }
+    utils.sort_by_key(|u| u.pass);
+    utils
+}
+
+/// Mean per-pass efficiency (the single number bench cells carry).
+pub fn mean_efficiency(utils: &[PassUtil]) -> f64 {
+    if utils.is_empty() {
+        return 0.0;
+    }
+    utils.iter().map(|u| u.efficiency).sum::<f64>() / utils.len() as f64
+}
+
+fn pct(num: u64, den: u64) -> String {
+    if den == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.1}", 100.0 * num as f64 / den as f64)
+    }
+}
+
+/// Aligned per-pass table: wall time, parallelism efficiency, small-path
+/// fraction (from the per-pass `Counters` snapshot in `PassStats`), and
+/// the low/mid/high bucket time split when degree-bucketed dealing ran.
+pub fn utilization_table(result: &LouvainResult, trace: &Trace, threads: usize) -> Table {
+    let utils = derive_pass_utilization(trace, threads);
+    let mut t = Table::new(
+        "per-pass utilization",
+        &[
+            "pass", "|V'|", "iters", "wall", "eff%", "small%", "lo%", "mid%", "hi%",
+        ],
+    );
+    for (i, ps) in result.pass_stats.iter().enumerate() {
+        let u = utils
+            .iter()
+            .find(|u| u.pass as usize == i)
+            .copied()
+            .unwrap_or_default();
+        let scans = ps.counters.small_path_scans + ps.counters.large_path_scans;
+        let bucket_total: u64 = u.bucket_ns.iter().sum();
+        t.row(vec![
+            i.to_string(),
+            ps.vertices.to_string(),
+            ps.iterations.to_string(),
+            fmt_ns(if u.wall_ns > 0 {
+                u.wall_ns
+            } else {
+                ps.move_ns + ps.agg_ns + ps.other_ns
+            }),
+            format!("{:.1}", 100.0 * u.efficiency),
+            pct(ps.counters.small_path_scans, scans),
+            pct(u.bucket_ns[0], bucket_total),
+            pct(u.bucket_ns[1], bucket_total),
+            pct(u.bucket_ns[2], bucket_total),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Category, SpanEvent};
+
+    fn span(name: &'static str, tid: u32, start: u64, dur: u64, args: [u64; 4]) -> SpanEvent {
+        SpanEvent {
+            name,
+            cat: Category::Pass,
+            kind: EventKind::Span,
+            tid,
+            start_ns: start,
+            dur_ns: dur,
+            args,
+        }
+    }
+
+    fn instant(name: &'static str, start: u64, args: [u64; 4]) -> SpanEvent {
+        SpanEvent {
+            name,
+            cat: Category::Move,
+            kind: EventKind::Instant,
+            tid: 0,
+            start_ns: start,
+            dur_ns: 0,
+            args,
+        }
+    }
+
+    #[test]
+    fn efficiency_sums_clipped_busy_time() {
+        // Pass [0, 1000); two workers busy 400ns each fully inside, one
+        // slice half-outside contributing 100.
+        let trace = Trace {
+            events: vec![
+                span("pass", 0, 0, 1000, [0, 0, 0, 0]),
+                span("worker.busy", 1, 100, 400, [1, 0, 0, 0]),
+                span("worker.busy", 2, 100, 400, [1, 1, 0, 0]),
+                span("worker.busy", 3, 900, 200, [2, 2, 0, 0]),
+                instant("move.buckets", 500, [0, 10, 20, 70]),
+            ],
+            threads: vec![],
+            dropped: 0,
+            start_ns: 0,
+            end_ns: 1000,
+        };
+        let utils = derive_pass_utilization(&trace, 2);
+        assert_eq!(utils.len(), 1);
+        let u = &utils[0];
+        assert_eq!(u.wall_ns, 1000);
+        assert_eq!(u.busy_ns, 400 + 400 + 100);
+        assert!((u.efficiency - 900.0 / 2000.0).abs() < 1e-9);
+        assert_eq!(u.bucket_ns, [10, 20, 70]);
+        assert!((mean_efficiency(&utils) - u.efficiency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_clamps_at_one() {
+        let trace = Trace {
+            events: vec![
+                span("pass", 0, 0, 100, [0, 0, 0, 0]),
+                span("worker.busy", 1, 0, 100, [1, 0, 0, 0]),
+                span("worker.busy", 2, 0, 100, [1, 1, 0, 0]),
+            ],
+            threads: vec![],
+            dropped: 0,
+            start_ns: 0,
+            end_ns: 100,
+        };
+        let utils = derive_pass_utilization(&trace, 1);
+        assert_eq!(utils[0].efficiency, 1.0);
+    }
+}

@@ -1,0 +1,332 @@
+//! Integration tests for the tracing subsystem (PR 7 acceptance
+//! criteria):
+//!
+//! * a traced run emits spans for every pass's local-moving and
+//!   aggregation phases plus per-worker busy slices, and the spans obey
+//!   stack discipline per thread (nested or disjoint, never partially
+//!   overlapping);
+//! * with tracing disabled nothing is recorded and results are
+//!   bit-identical run to run — and a traced run does not perturb a
+//!   deterministic single-threaded result either;
+//! * replaying a deterministic run under two sessions yields an
+//!   identical trace *structure* (event names and counts; timings of
+//!   course differ);
+//! * the Chrome export parses as a single well-formed JSON value
+//!   (hand-rolled recursive-descent check — the offline registry has no
+//!   serde) with thread metadata and complete events;
+//! * the derived utilization table has one row per pass with
+//!   efficiency in (0, 1].
+//!
+//! The enabled flag is process-global and `cargo test` runs tests on
+//! multiple threads, so every test here serializes through
+//! [`session_lock`] — including the "disabled" ones, which would
+//! otherwise record into a concurrently-active session's sinks.
+
+use gve_louvain::graph::delta::StreamOp;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::Csr;
+use gve_louvain::louvain::gve::GveLouvain;
+use gve_louvain::louvain::params::LouvainParams;
+use gve_louvain::louvain::LouvainResult;
+use gve_louvain::parallel::schedule::Schedule;
+use gve_louvain::service::{BatchPolicy, CommunityService, ServiceConfig};
+use gve_louvain::trace::{chrome, report, EventKind, Trace, TraceSession};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Mutex, MutexGuard};
+
+fn session_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn traced_run(params: LouvainParams, g: &Csr) -> (LouvainResult, Trace) {
+    let session = TraceSession::start();
+    let out = GveLouvain::new(params).run(g);
+    (out, session.finish())
+}
+
+/// Per tid, spans must nest or be disjoint — a span partially
+/// overlapping its enclosing span means a guard leaked across scopes.
+fn assert_stack_discipline(trace: &Trace) {
+    let mut by_tid: HashMap<u32, Vec<(u64, u64)>> = HashMap::new();
+    for e in &trace.events {
+        if e.kind == EventKind::Span {
+            by_tid.entry(e.tid).or_default().push((e.start_ns, e.start_ns + e.dur_ns));
+        }
+    }
+    for (tid, mut spans) in by_tid {
+        // Start order; at equal starts the longer span is the parent.
+        spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut stack: Vec<u64> = Vec::new();
+        for (s, e) in spans {
+            while stack.last().is_some_and(|&top| top <= s) {
+                stack.pop();
+            }
+            if let Some(&top) = stack.last() {
+                assert!(
+                    e <= top,
+                    "tid {tid}: span [{s}, {e}) partially overlaps an enclosing span ending {top}"
+                );
+            }
+            stack.push(e);
+        }
+    }
+}
+
+#[test]
+fn traced_run_emits_well_formed_spans_for_every_pass() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 10, 7);
+    let params =
+        LouvainParams { threads: 2, schedule: Schedule::DegreeBucketed, ..LouvainParams::default() };
+    let (out, trace) = traced_run(params, &g);
+    let passes = out.pass_stats.len();
+    assert!(passes > 0);
+    assert_eq!(trace.dropped, 0, "scale-10 run must fit the rings");
+
+    // Pass-granularity spans: one pass / move / counters-instant per
+    // pass; aggregation only on passes that did not break first.
+    assert_eq!(trace.count("pass"), passes);
+    assert_eq!(trace.count("move"), passes);
+    assert_eq!(trace.count("pass.counters"), passes);
+    let aggs = trace.count("agg");
+    assert!(
+        aggs == passes || aggs + 1 == passes,
+        "agg spans {aggs} vs {passes} passes (last pass may break before aggregating)"
+    );
+    for sub in ["agg.community_order", "agg.offsets", "agg.scatter", "agg.compact"] {
+        assert_eq!(trace.count(sub), aggs, "one {sub} per aggregation");
+    }
+    assert!(trace.count("move.iter") >= passes, "every pass moves at least once");
+    assert!(trace.count("scan_order.build") >= 1, "degree-bucketed runs build a ScanOrder");
+    assert!(trace.count("move.buckets") >= 1, "bucketed iterations record bucket times");
+
+    // The first pass span carries the input graph's shape.
+    let first = trace.spans("pass").next().expect("pass span");
+    assert_eq!(first.args[0], 0);
+    assert_eq!(first.args[1], g.num_vertices() as u64);
+    assert_eq!(first.args[2], g.num_edges() as u64);
+
+    // Dispatch granularity: every worker.busy slice belongs to a
+    // recorded team.job (correlated through arg slot 0).
+    assert!(trace.count("team.job") > 0);
+    assert!(trace.count("worker.busy") > 0);
+    let jobs: HashSet<u64> = trace.spans("team.job").map(|e| e.args[0]).collect();
+    for w in trace.spans("worker.busy") {
+        assert!(jobs.contains(&w.args[0]), "worker.busy job {} has no team.job span", w.args[0]);
+    }
+
+    assert_stack_discipline(&trace);
+}
+
+#[test]
+fn disabled_tracing_records_nothing_and_results_are_bit_exact() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 9, 11);
+    assert!(!gve_louvain::trace::enabled());
+    let run = || GveLouvain::new(LouvainParams::default()).run(&g);
+    let a = run();
+    let b = run();
+    assert_eq!(a.membership, b.membership);
+    assert_eq!(a.modularity.to_bits(), b.modularity.to_bits());
+
+    // The disabled runs above left nothing behind in any sink.
+    let trace = TraceSession::start().finish();
+    assert_eq!(trace.events.len(), 0, "disabled span sites must record nothing");
+
+    // And recording does not perturb a deterministic run.
+    let session = TraceSession::start();
+    let c = run();
+    let trace = session.finish();
+    assert!(trace.count("pass") > 0);
+    assert_eq!(a.membership, c.membership, "tracing changed the clustering");
+    assert_eq!(a.modularity.to_bits(), c.modularity.to_bits());
+}
+
+#[test]
+fn replaying_a_deterministic_run_yields_identical_structure() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Social, 9, 3);
+    let (out_a, a) = traced_run(LouvainParams::default(), &g);
+    let (out_b, b) = traced_run(LouvainParams::default(), &g);
+    assert_eq!(out_a.membership, out_b.membership);
+    let (sa, sb) = (a.structure(), b.structure());
+    assert!(sa.contains_key("pass") && sa.contains_key("move.iter"));
+    assert_eq!(sa, sb, "same run, same span structure (timings aside)");
+}
+
+/// Minimal strict JSON reader: panics (failing the test) on anything
+/// malformed, checks every number parses as f64 and every string escape
+/// is legal.
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Json<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> u8 {
+        self.ws();
+        *self.b.get(self.i).expect("unexpected end of JSON")
+    }
+
+    fn eat(&mut self, c: u8) {
+        self.ws();
+        assert_eq!(self.b.get(self.i).copied(), Some(c), "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+    }
+
+    fn value(&mut self) {
+        match self.peek() {
+            b'{' => {
+                self.eat(b'{');
+                if self.peek() != b'}' {
+                    loop {
+                        self.string();
+                        self.eat(b':');
+                        self.value();
+                        if self.peek() != b',' {
+                            break;
+                        }
+                        self.eat(b',');
+                    }
+                }
+                self.eat(b'}');
+            }
+            b'[' => {
+                self.eat(b'[');
+                if self.peek() != b']' {
+                    loop {
+                        self.value();
+                        if self.peek() != b',' {
+                            break;
+                        }
+                        self.eat(b',');
+                    }
+                }
+                self.eat(b']');
+            }
+            b'"' => self.string(),
+            b't' => self.lit("true"),
+            b'f' => self.lit("false"),
+            b'n' => self.lit("null"),
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) {
+        self.eat(b'"');
+        loop {
+            match self.b[self.i] {
+                b'"' => break,
+                b'\\' => {
+                    self.i += 1;
+                    match self.b[self.i] {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => self.i += 1,
+                        b'u' => {
+                            for k in 1..=4 {
+                                assert!(self.b[self.i + k].is_ascii_hexdigit(), "bad \\u escape");
+                            }
+                            self.i += 5;
+                        }
+                        c => panic!("illegal escape \\{:?}", c as char),
+                    }
+                }
+                c => {
+                    assert!(c >= 0x20, "raw control byte {c:#x} inside a JSON string");
+                    self.i += 1;
+                }
+            }
+        }
+        self.i += 1;
+    }
+
+    fn lit(&mut self, s: &str) {
+        self.ws();
+        assert!(self.b[self.i..].starts_with(s.as_bytes()), "expected literal {s}");
+        self.i += s.len();
+    }
+
+    fn number(&mut self) {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number");
+        assert!(
+            !text.is_empty() && text.parse::<f64>().is_ok(),
+            "bad JSON number {text:?} at byte {start}"
+        );
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_expected_shape() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 9, 19);
+    let (_out, trace) = traced_run(LouvainParams::with_threads(2), &g);
+    assert!(!trace.events.is_empty());
+    let json = chrome::to_chrome_json(&trace);
+    let mut p = Json { b: json.as_bytes(), i: 0 };
+    p.value();
+    p.ws();
+    assert_eq!(p.i, p.b.len(), "trailing bytes after the top-level JSON value");
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.contains("\"ph\":\"M\""), "thread_name metadata records");
+    assert!(json.contains("\"ph\":\"X\""), "complete (duration) events");
+    assert!(json.contains("\"name\":\"pass\""), "pass spans exported by name");
+}
+
+#[test]
+fn utilization_table_has_one_row_per_pass() {
+    let _lock = session_lock();
+    let threads = 2usize;
+    let g = generate(GraphFamily::Web, 9, 29);
+    let (out, trace) = traced_run(LouvainParams::with_threads(threads), &g);
+    let util = report::derive_pass_utilization(&trace, threads);
+    assert_eq!(util.len(), out.pass_stats.len());
+    for u in &util {
+        assert!(u.wall_ns > 0, "pass {}: empty wall", u.pass);
+        assert!(
+            u.efficiency > 0.0 && u.efficiency <= 1.0,
+            "pass {}: efficiency {} out of (0, 1]",
+            u.pass,
+            u.efficiency
+        );
+    }
+    let rendered = report::utilization_table(&out, &trace, threads).render();
+    for header in ["pass", "eff%", "small%"] {
+        assert!(rendered.contains(header), "missing column {header:?}\n{rendered}");
+    }
+    assert!(
+        rendered.lines().count() >= out.pass_stats.len() + 2,
+        "fewer lines than passes + header:\n{rendered}"
+    );
+}
+
+#[test]
+fn service_epochs_record_apply_detect_publish_spans() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Road, 7, 5);
+    let cfg = ServiceConfig { policy: BatchPolicy::by_ops(1), ..Default::default() };
+    let mut svc = CommunityService::new(g, cfg);
+    let session = TraceSession::start();
+    let snap = svc.submit(StreamOp::Insert(0, 5, 1.0));
+    let trace = session.finish();
+    assert!(snap.is_some(), "by_ops(1) publishes after a single op");
+    for name in ["epoch.apply", "epoch.detect", "epoch.publish"] {
+        assert_eq!(trace.count(name), 1, "{name}");
+    }
+    assert_stack_discipline(&trace);
+}

@@ -1,25 +1,28 @@
 #!/usr/bin/env bash
-# Bench smoke runner: emits BENCH_PR6.json with GVE-Louvain edges/sec
+# Bench smoke runner: emits BENCH_PR7.json with GVE-Louvain edges/sec
 # for every planted GraphFamily at 1 and 4 threads (median of
 # GVE_BENCH_REPEATS, default 3; GVE_BENCH_SCALE shifts graph sizes),
 # the PR-2 dynamic scenario (per-seeding-strategy throughput over a
 # 10-batch / 1%-churn timeline on the web family), the PR-3 service
 # scenario (the same stream replayed through the long-lived
 # CommunityService: ingest ops/sec + epoch-latency cells per strategy),
-# and the PR-6 scan_engine scenario (hybrid SmallTable on/off ×
+# the PR-6 scan_engine scenario (hybrid SmallTable on/off ×
 # dynamic/degree-bucketed scheduling on the web family: table ops,
-# edges scanned and the small-path fraction).
+# edges scanned and the small-path fraction), and the PR-7 trace
+# scenario (tracing off vs on on the web family at the top thread
+# count: measured span-capture overhead % + mean per-pass parallelism
+# efficiency derived from the per-worker busy spans).
 #
 # Usage:
-#   scripts/bench_smoke.sh                 # writes BENCH_PR6.json
+#   scripts/bench_smoke.sh                 # writes BENCH_PR7.json
 #   scripts/bench_smoke.sh out.json        # custom output path
 #
 # Comparing against a baseline (same runner, same machine): commits
 # before PR 1 carry no Cargo manifests and are not buildable; PR 1's
-# yardstick was BENCH_PR1.json, PR 2's BENCH_PR2.json and PRs 3-5's
-# BENCH_PR3.json (the static "results" array here stays
-# schema-compatible with all of them, "dynamic" with PR 2's, "service"
-# with PR 3's). From PR 4 on:
+# yardstick was BENCH_PR1.json, PR 2's BENCH_PR2.json, PRs 3-5's
+# BENCH_PR3.json and PR 6's BENCH_PR6.json (the static "results" array
+# here stays schema-compatible with all of them, "dynamic" with PR 2's,
+# "service" with PR 3's, "scan_engine" with PR 6's). From PR 4 on:
 #   uncommitted changes:  git stash && scripts/bench_smoke.sh base.json \
 #                           && git stash pop && scripts/bench_smoke.sh
 #   committed baseline:   git worktree add /tmp/bb <rev>
@@ -27,10 +30,11 @@
 #                         git worktree remove /tmp/bb
 #   # then diff edges_per_sec / ops_per_sec; every family should be >=
 #   # baseline, in "dynamic" delta-screening should beat full per batch,
-#   # in "service" delta-screening should beat full per epoch, and in
+#   # in "service" delta-screening should beat full per epoch, in
 #   # "scan_engine" hybrid=true should cut table_ops on the web family
-#   # with small_fraction > 0.5.
+#   # with small_fraction > 0.5, and in "trace" overhead_pct should
+#   # stay in the low single digits.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-OUT="${1:-BENCH_PR6.json}"
+OUT="${1:-BENCH_PR7.json}"
 cargo run --release --manifest-path rust/Cargo.toml --bin bench_smoke -- "$OUT"
