@@ -10,6 +10,8 @@ use crate::coordinator::metrics::{fmt_ns, geomean, median};
 use crate::coordinator::report::Table;
 use std::time::Instant;
 
+pub mod json;
+
 /// One measured series.
 #[derive(Clone, Debug)]
 pub struct Measurement {

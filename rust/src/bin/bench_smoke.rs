@@ -1,6 +1,6 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
 //! cells, PR 2 dynamic cells, PR 3 service cells, PR 6 scan-engine
-//! cells, PR 7 trace cells).
+//! cells, PR 7 trace cells, PR 8 metrics cells + regression gate).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
 //! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
@@ -13,29 +13,44 @@
 //! `"trace"` scenario: the same web graph at the top thread count with
 //! tracing off vs on, reporting the measured span-capture overhead %
 //! and the mean per-pass parallelism efficiency derived from the
-//! per-worker busy spans.  Output is a `BENCH_PR7.json` — the fixed
-//! yardstick future PRs compare against.  Hand-rolled JSON (the
-//! offline registry has no serde).
+//! per-worker busy spans.  Since PR 8 there is also a `"metrics"`
+//! scenario — the live registry's zero-cost contract, measured: the
+//! same web run with the metrics registry enabled (the default) vs
+//! disabled, reported as an overhead % that should sit inside noise
+//! (< 1%).  Output is a `BENCH_PR8.json` — the fixed yardstick future
+//! PRs compare against.  Hand-rolled JSON writer; the reader for the
+//! gate below is `bench::json` (the offline registry has no serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR7.json
+//! bench_smoke [OUT.json]          # default BENCH_PR8.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
+//! bench_smoke --trace slowest.json        # Chrome trace of the
+//!                                         # slowest static cell
+//! bench_smoke --baseline BENCH_PR8.json   # regression gate
+//! bench_smoke --baseline BENCH_PR8.json --noise-pct 15
 //! ```
 //!
-//! To compare against a pre-change baseline, run the *same* binary on
-//! the baseline commit with a different output path and diff the
-//! `edges_per_sec` / `ops_per_sec` fields:
+//! `--baseline FILE` (PR 8) turns the run into a gate: after writing
+//! OUT.json it parses FILE, matches throughput cells by identity
+//! (family/strategy/schedule × threads), and **exits non-zero** if any
+//! current rate sits more than `--noise-pct` (default 25%) below its
+//! baseline.  Rates, not wall times, so bigger is always better; the
+//! default tolerance is wide because smoke scales are noisy — tighten
+//! it on quiet machines.  To produce a baseline, run the same binary
+//! on the baseline commit:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR7_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR7.json
+//! git stash && cargo bench-smoke BENCH_PR8_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR8.json --baseline BENCH_PR8_baseline.json
 //! ```
 
+use gve_louvain::bench::json::Json;
 use gve_louvain::bench::{bench_scale_offset, bench_seed};
+use gve_louvain::coordinator::cli::Opts;
 use gve_louvain::coordinator::dynamic::{churn_timeline, replay_timeline, summarize};
 use gve_louvain::coordinator::metrics::{edges_per_sec, median};
 use gve_louvain::coordinator::service::{replay_service, summarize_service};
@@ -44,7 +59,8 @@ use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
 use gve_louvain::parallel::Schedule;
 use gve_louvain::service::{BatchPolicy, ServiceConfig};
-use gve_louvain::trace::{report, TraceSession};
+use gve_louvain::obs;
+use gve_louvain::trace::{chrome, report, TraceSession};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -119,6 +135,18 @@ struct TraceCell {
     mean_efficiency: f64,
 }
 
+/// PR 8 metrics cell: the live registry's overhead contract, measured.
+/// Same shape as the trace cell — web family, top thread count —
+/// with the process-wide metrics registry enabled (the default) vs
+/// disabled via `obs::set_enabled`.
+struct MetricsCell {
+    threads: usize,
+    median_on_ns: u64,
+    median_off_ns: u64,
+    /// `(on / off - 1) × 100` — the < 1% contract, measured.
+    overhead_pct: f64,
+}
+
 /// Median via the crate-wide convention (`coordinator::metrics`), so
 /// `BENCH_PR3.json` uses the same statistic as every other bench figure.
 fn median_ns(samples: &[u64]) -> u64 {
@@ -126,7 +154,13 @@ fn median_ns(samples: &[u64]) -> u64 {
 }
 
 fn main() {
-    let out_path = std::env::args().nth(1).unwrap_or_else(|| "BENCH_PR7.json".into());
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = Opts::parse(&args);
+    let out_path = opts
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "BENCH_PR8.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -374,9 +408,53 @@ fn main() {
         );
     }
 
+    // --- Metrics scenario (PR 8): the live registry's zero-cost
+    // contract, measured.  Same shape as the trace cell: the web
+    // family at the top thread count with the registry enabled (the
+    // default — one relaxed load + sharded relaxed adds per site) vs
+    // disabled (the relaxed-load branch alone).  Unlike tracing, the
+    // registry is on in production, so this overhead is the one users
+    // always pay — the acceptance bar is < 1%, inside run-to-run noise.
+    let metrics_cell: MetricsCell;
+    {
+        let g = generate(GraphFamily::Web, scale, seed);
+        let threads = *THREADS.last().expect("THREADS is non-empty");
+        let algo = GveLouvain::new(LouvainParams::with_threads(threads));
+        let _ = algo.run(&g); // warmup
+        let mut on = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let t0 = Instant::now();
+            let _ = algo.run(&g);
+            on.push(t0.elapsed().as_nanos() as u64);
+        }
+        obs::set_enabled(false);
+        let mut off = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let t0 = Instant::now();
+            let _ = algo.run(&g);
+            off.push(t0.elapsed().as_nanos() as u64);
+        }
+        obs::set_enabled(true);
+        let median_on_ns = median_ns(&on);
+        let median_off_ns = median_ns(&off);
+        metrics_cell = MetricsCell {
+            threads,
+            median_on_ns,
+            median_off_ns,
+            overhead_pct: (median_on_ns as f64 / median_off_ns.max(1) as f64 - 1.0) * 100.0,
+        };
+        eprintln!(
+            "metrics t={} off {:>12} ns  on {:>12} ns  overhead {:+.2}%",
+            metrics_cell.threads,
+            metrics_cell.median_off_ns,
+            metrics_cell.median_on_ns,
+            metrics_cell.overhead_pct,
+        );
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr7_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr8_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -475,7 +553,7 @@ fn main() {
         json,
         "  \"trace\": {{\"family\": \"web\", \"threads\": {}, \"median_off_ns\": {}, \
          \"median_on_ns\": {}, \"overhead_pct\": {:.2}, \"events\": {}, \"passes\": {}, \
-         \"mean_efficiency\": {:.4}}}",
+         \"mean_efficiency\": {:.4}}},",
         trace_cell.threads,
         trace_cell.median_off_ns,
         trace_cell.median_on_ns,
@@ -483,6 +561,15 @@ fn main() {
         trace_cell.events,
         trace_cell.passes,
         trace_cell.mean_efficiency,
+    );
+    let _ = writeln!(
+        json,
+        "  \"metrics\": {{\"family\": \"web\", \"threads\": {}, \"median_off_ns\": {}, \
+         \"median_on_ns\": {}, \"overhead_pct\": {:.2}}}",
+        metrics_cell.threads,
+        metrics_cell.median_off_ns,
+        metrics_cell.median_on_ns,
+        metrics_cell.overhead_pct,
     );
     let _ = writeln!(json, "}}");
 
@@ -492,4 +579,135 @@ fn main() {
     });
     println!("{json}");
     eprintln!("wrote {out_path}");
+
+    // --- `--trace PATH` (PR 8, satellite): dump a Chrome trace of the
+    // *slowest* static cell — the one whose profile is worth staring
+    // at — so a bench regression comes with its own timeline attached.
+    if let Some(trace_path) = opts.flags.get("trace") {
+        let slowest = cells
+            .iter()
+            .max_by_key(|c| c.median_ns)
+            .expect("static scenario produced at least one cell");
+        let family = GraphFamily::parse(slowest.family).expect("cell family round-trips");
+        let g = generate(family, scale, seed);
+        let algo = GveLouvain::new(LouvainParams::with_threads(slowest.threads));
+        let _ = algo.run(&g); // warmup
+        let session = TraceSession::start();
+        let _ = algo.run(&g);
+        let trace = session.finish();
+        if let Err(e) = chrome::write(&trace, trace_path) {
+            eprintln!("error: cannot write {trace_path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!(
+            "trace: slowest static cell ({} t={}, {} ns median) -> {trace_path} \
+             ({} events, {} dropped; open in https://ui.perfetto.dev)",
+            slowest.family,
+            slowest.threads,
+            slowest.median_ns,
+            trace.events.len(),
+            trace.dropped,
+        );
+    }
+
+    // --- `--baseline FILE` (PR 8): the regression gate.  Parse the
+    // JSON we just wrote plus the committed yardstick, match
+    // throughput cells by identity, and fail the run if any rate fell
+    // more than the noise allowance below its baseline.
+    if let Some(baseline_path) = opts.flags.get("baseline") {
+        let noise_pct = opts.get_f("noise-pct", 25.0).max(0.0);
+        let base_text = std::fs::read_to_string(baseline_path).unwrap_or_else(|e| {
+            eprintln!("error: cannot read baseline {baseline_path}: {e}");
+            std::process::exit(1);
+        });
+        let base = Json::parse(&base_text).unwrap_or_else(|e| {
+            eprintln!("error: baseline {baseline_path} is not valid JSON: {e}");
+            std::process::exit(1);
+        });
+        let cur = Json::parse(&json).expect("bench_smoke wrote invalid JSON");
+        let regressions = gate_against_baseline(&cur, &base, noise_pct);
+        if regressions > 0 {
+            eprintln!(
+                "regression gate: FAIL — {regressions} cell(s) more than {noise_pct:.0}% \
+                 below baseline {baseline_path}"
+            );
+            std::process::exit(1);
+        }
+        eprintln!("regression gate: ok — all cells within {noise_pct:.0}% of baseline {baseline_path}");
+    }
+}
+
+/// The comparable surface of a bench JSON: throughput cells keyed by
+/// identity (section/family-or-strategy/threads).  Rates, not wall
+/// times, so bigger is always better and the gate is one-sided.
+fn collect_rates(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(cells) = doc.get("results").and_then(Json::as_arr) {
+        for c in cells {
+            if let (Some(f), Some(t), Some(r)) =
+                (c.str("family"), c.num("threads"), c.num("edges_per_sec"))
+            {
+                out.push((format!("static/{f}/t{t}"), r));
+            }
+        }
+    }
+    for (section, metric) in [("dynamic", "edges_per_sec"), ("service", "ops_per_sec")] {
+        let cells = doc.get(section).and_then(|s| s.get("results")).and_then(Json::as_arr);
+        for c in cells.unwrap_or(&[]) {
+            if let (Some(s), Some(t), Some(r)) =
+                (c.str("strategy"), c.num("threads"), c.num(metric))
+            {
+                out.push((format!("{section}/{s}/t{t}"), r));
+            }
+        }
+    }
+    let scan = doc.get("scan_engine").and_then(|s| s.get("results")).and_then(Json::as_arr);
+    for c in scan.unwrap_or(&[]) {
+        if let (Some(h), Some(sch), Some(t), Some(r)) = (
+            c.get("hybrid").and_then(Json::as_bool),
+            c.str("schedule"),
+            c.num("threads"),
+            c.num("edges_per_sec"),
+        ) {
+            out.push((format!("scan/hybrid={h}/{sch}/t{t}"), r));
+        }
+    }
+    out
+}
+
+/// Print the per-cell delta table (stderr, like all bench progress) and
+/// count cells more than `noise_pct` *below* their baseline rate.
+/// Cells present on only one side are reported but never gate — a PR
+/// that adds a scenario must not need a time machine for its baseline.
+fn gate_against_baseline(cur: &Json, base: &Json, noise_pct: f64) -> usize {
+    let base_rates: std::collections::HashMap<String, f64> =
+        collect_rates(base).into_iter().collect();
+    let cur_rates = collect_rates(cur);
+    let cur_keys: std::collections::HashSet<&str> =
+        cur_rates.iter().map(|(k, _)| k.as_str()).collect();
+    let mut regressions = 0;
+    eprintln!("{:<44} {:>14} {:>14} {:>9}", "cell", "baseline", "current", "delta");
+    for (key, cur_rate) in &cur_rates {
+        match base_rates.get(key) {
+            Some(&base_rate) => {
+                let delta_pct = (cur_rate / base_rate.max(1e-9) - 1.0) * 100.0;
+                let flag = if delta_pct < -noise_pct {
+                    regressions += 1;
+                    "  REGRESSION"
+                } else {
+                    ""
+                };
+                eprintln!(
+                    "{key:<44} {base_rate:>14.0} {cur_rate:>14.0} {delta_pct:>+8.1}%{flag}"
+                );
+            }
+            None => eprintln!("{key:<44} {:>14} {cur_rate:>14.0}       new", "-"),
+        }
+    }
+    for key in base_rates.keys() {
+        if !cur_keys.contains(key.as_str()) {
+            eprintln!("{key:<44} baseline-only (not gated)");
+        }
+    }
+    regressions
 }

@@ -22,6 +22,21 @@
 //! busy slices) into Chrome trace-event JSON — open it at
 //! <https://ui.perfetto.dev>.
 //!
+//! `--http-port N` (PR 8) starts the live introspection endpoint on
+//! `127.0.0.1:N` (0 = OS-assigned, printed at boot) for the whole
+//! replay: `/metrics` (Prometheus text), `/metrics.json`, `/healthz`,
+//! and `/epochs` (current epoch snapshot + latency percentiles +
+//! drift).  The server runs on its own thread and reads through the
+//! lock-free snapshot handle, so scraping never blocks ingest.  Replays
+//! finish fast; `--linger SECS` keeps the process (and the endpoint)
+//! alive after the final epoch so a scraper can catch the end state:
+//!
+//! ```text
+//! louvain_serve --family web --scale 12 --http-port 9184 --linger 60 &
+//! curl -s localhost:9184/epochs | python3 -m json.tool
+//! curl -s localhost:9184/metrics | grep gve_service_
+//! ```
+//!
 //! Arguments are hand-parsed (`--key value`); the offline registry has
 //! no clap.
 
@@ -34,9 +49,10 @@ use gve_louvain::graph::delta::StreamOp;
 use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::graph::io::{load, write_update_stream, UpdateStreamReader};
 use gve_louvain::louvain::dynamic::SeedStrategy;
+use gve_louvain::obs::http::{IntrospectionServer, ServeState};
 use gve_louvain::service::{BatchPolicy, CommunityService, EpochSnapshot, ServiceConfig};
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -110,6 +126,30 @@ fn run(opts: &Opts) -> Result<()> {
         threads.saturating_sub(1),
     );
 
+    // Optional live introspection (PR 8): the HTTP thread reads the
+    // lock-free snapshot handle plus a `Copy` summary struct this loop
+    // overwrites after each publish — scrapes never block ingest.
+    let summary = Arc::new(Mutex::new(svc.metrics().summary()));
+    let server = match opts.flags.get("http-port") {
+        Some(p) => {
+            let port: u16 = p
+                .parse()
+                .with_context(|| format!("--http-port {p:?} is not a port number"))?;
+            let state = ServeState {
+                snapshots: Some(svc.handle()),
+                summary: Arc::clone(&summary),
+            };
+            let srv = IntrospectionServer::start(port, state)
+                .with_context(|| format!("binding introspection server on 127.0.0.1:{port}"))?;
+            eprintln!(
+                "introspection: http://{}  (/metrics /metrics.json /healthz /epochs)",
+                srv.local_addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
+
     // Optional tracing (PR 7): the session wraps the whole replay, so
     // the Perfetto timeline shows every epoch's apply/detect/publish
     // spans with the per-pass Louvain spans nested inside.
@@ -123,11 +163,13 @@ fn run(opts: &Opts) -> Result<()> {
     for op in reader {
         if let Some(snap) = svc.submit(op?) {
             epochs.push(snap);
+            *summary.lock().unwrap() = svc.metrics().summary();
         }
     }
     if let Some(snap) = svc.flush() {
         epochs.push(snap);
     }
+    *summary.lock().unwrap() = svc.metrics().summary();
 
     if let (Some(session), Some(path)) = (trace_session, opts.flags.get("trace")) {
         let trace = session.finish();
@@ -139,6 +181,12 @@ fn run(opts: &Opts) -> Result<()> {
             trace.threads.len(),
             trace.dropped,
         );
+        if trace.dropped > 0 {
+            eprintln!(
+                "trace: dropped by thread: {}",
+                gve_louvain::trace::report::dropped_summary(&trace)
+            );
+        }
     }
 
     // --- Per-epoch table.
@@ -181,5 +229,19 @@ fn run(opts: &Opts) -> Result<()> {
         m.quality_drift(),
         m.min_modularity,
     );
+
+    // Keep the introspection endpoint up after the replay so scrapers
+    // can read the end state (replays on smoke sizes finish in ms).
+    if let Some(srv) = server {
+        let linger = opts.get_i("linger", 0).max(0) as u64;
+        if linger > 0 {
+            eprintln!(
+                "lingering {linger}s with introspection live at http://{}",
+                srv.local_addr()
+            );
+            std::thread::sleep(std::time::Duration::from_secs(linger));
+        }
+        drop(srv); // stop + join the HTTP thread before exit
+    }
     Ok(())
 }

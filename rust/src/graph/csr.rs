@@ -30,6 +30,23 @@ impl Csr {
         self.offsets.len().saturating_sub(1)
     }
 
+    /// Heap bytes *reserved* by the three arrays (capacity — what the
+    /// allocator holds; memory-accounting surface, PR 8).
+    pub fn reserved_bytes(&self) -> usize {
+        self.offsets.capacity() * std::mem::size_of::<usize>()
+            + self.targets.capacity() * std::mem::size_of::<VertexId>()
+            + self.weights.capacity() * std::mem::size_of::<EdgeWeight>()
+    }
+
+    /// Heap bytes *logically used* (length — what the graph needs).
+    /// The reserved − used gap is the ping-pong slack a steady-state
+    /// service deliberately keeps.
+    pub fn used_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.targets.len() * std::mem::size_of::<VertexId>()
+            + self.weights.len() * std::mem::size_of::<EdgeWeight>()
+    }
+
     /// Number of directed edge slots (undirected edges count twice).
     #[inline]
     pub fn num_edges(&self) -> usize {
@@ -162,6 +179,15 @@ pub struct HoleyCsr {
 }
 
 impl HoleyCsr {
+    /// Heap bytes reserved by the holey arrays (capacity; PR 8 memory
+    /// accounting — the fill cursors count too, they scale with |V|).
+    pub fn reserved_bytes(&self) -> usize {
+        self.offsets.capacity() * std::mem::size_of::<usize>()
+            + self.fill.capacity() * std::mem::size_of::<AtomicUsize>()
+            + self.targets.capacity() * std::mem::size_of::<VertexId>()
+            + self.weights.capacity() * std::mem::size_of::<EdgeWeight>()
+    }
+
     /// Allocate from an offsets array (already exclusive-scanned).
     pub fn with_offsets(offsets: Vec<usize>) -> Self {
         let cap = *offsets.last().unwrap_or(&0);

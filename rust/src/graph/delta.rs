@@ -158,6 +158,21 @@ impl DeltaScratch {
             holey: HoleyCsr::with_offsets(vec![0]),
         }
     }
+
+    /// Heap bytes reserved across the merge buffers (capacity; the
+    /// fields are private, so the accounting lives here — PR 8).
+    /// Scratch is all high-water-mark storage: "used" equals reserved
+    /// by design, so only one number is meaningful.
+    pub fn reserved_bytes(&self) -> usize {
+        let op = std::mem::size_of::<DirectedOp>();
+        let us = std::mem::size_of::<usize>();
+        self.ops.capacity() * op
+            + self.ops_scratch.capacity() * op
+            + self.src_keys.capacity() * std::mem::size_of::<u32>()
+            + self.op_off.capacity() * us
+            + self.cap.capacity() * us
+            + self.holey.reserved_bytes()
+    }
 }
 
 impl Default for DeltaScratch {

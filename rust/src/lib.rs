@@ -32,6 +32,13 @@
 //!   streaming ingest with batch coalescing, incremental re-detection
 //!   over the dynamic subsystem, and an epoch-snapshot query surface —
 //!   the north-star serving story.
+//! * [`obs`] — live telemetry (PR 8): a process-wide lock-free metrics
+//!   registry (sharded counters/gauges, log2 latency histograms) with
+//!   Prometheus text + JSON renderers, byte-level memory accounting for
+//!   the long-lived buffers, and a std-`TcpListener` HTTP introspection
+//!   server (`louvain_serve --http-port N` → `/metrics`, `/healthz`,
+//!   `/epochs`) — the always-on complement to [`trace`]'s attachable
+//!   sessions.
 //! * [`trace`] — per-pass span tracing (PR 7): always compiled,
 //!   branch-disabled (one relaxed load per site when off), per-worker
 //!   ring-buffer `TraceSink`s, Chrome trace-event JSON export
@@ -64,6 +71,7 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod graph;
 pub mod louvain;
+pub mod obs;
 pub mod parallel;
 pub mod prop;
 pub mod runtime;

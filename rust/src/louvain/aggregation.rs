@@ -75,6 +75,17 @@ impl AggScratch {
             order: ScanOrder::default(),
         }
     }
+
+    /// Heap bytes reserved by the aggregation buffers (capacity; PR 8
+    /// memory accounting — all high-water-mark scratch).
+    pub fn reserved_bytes(&self) -> usize {
+        let us = std::mem::size_of::<usize>();
+        self.counts.capacity() * us
+            + self.tot_deg.capacity() * us
+            + self.comm_vertices.reserved_bytes()
+            + self.holey.reserved_bytes()
+            + self.order.reserved_bytes()
+    }
 }
 
 impl Default for AggScratch {

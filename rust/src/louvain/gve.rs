@@ -396,6 +396,21 @@ impl GveLouvain {
             .flat_map(|(_, c)| c.iter().map(|r| r.ns))
             .sum();
         result.serial_ns = result.total_ns.saturating_sub(par_ns);
+        // Live-registry mirror (PR 8): one batch of counter adds per
+        // *run* from the already-aggregated totals — the pass/iteration
+        // hot paths record nothing registry-side — plus the workspace
+        // byte gauges while the buffers are still borrowed-for-read.
+        if crate::obs::enabled() {
+            use crate::obs::sites;
+            sites::louvain_runs().inc();
+            sites::louvain_passes().add(result.passes as u64);
+            sites::louvain_move_iterations()
+                .add(result.pass_stats.iter().map(|s| s.iterations as u64).sum());
+            sites::louvain_moves_applied().add(result.counters.moves_applied);
+            sites::louvain_small_path_scans().add(result.counters.small_path_scans);
+            sites::louvain_large_path_scans().add(result.counters.large_path_scans);
+            ws.publish_mem_gauges();
+        }
         result
     }
 }

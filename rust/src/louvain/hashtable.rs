@@ -98,6 +98,26 @@ impl TablePool {
         self.threads
     }
 
+    /// Heap bytes reserved by the pool's backing storage (capacity;
+    /// PR 8 memory accounting).  `Map` tables allocate per-scan inside
+    /// std — the pool holds nothing for them and reports 0.
+    pub fn reserved_bytes(&self) -> usize {
+        let close = self.close_keys.capacity() * std::mem::size_of::<u32>()
+            + self.close_values.capacity() * std::mem::size_of::<f64>()
+            + self.close_counts.capacity() * std::mem::size_of::<u32>();
+        let far: usize = self
+            .far
+            .iter()
+            .map(|f| {
+                f.keys.capacity() * std::mem::size_of::<u32>()
+                    + f.values.capacity() * std::mem::size_of::<f64>()
+                    + std::mem::size_of::<u32>()
+                    + f._pad.capacity()
+            })
+            .sum();
+        close + far
+    }
+
     /// Reuse `slot`'s pool when its kind, capacity and thread count
     /// suffice; otherwise (re)build it.  This is how the pass loops
     /// keep `TablePool` allocation O(1) per run: the first pass (the

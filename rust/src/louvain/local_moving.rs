@@ -241,6 +241,25 @@ pub fn local_moving(
             ];
         }
         drop(iter_span);
+        // Per-iteration counter *deltas* (PR 8 satellite): the atomics
+        // above are fresh each iteration, so their loads are exactly
+        // this iteration's work — `pass.counters` only snapshots once
+        // per pass, which hides how pruning converges *within* one.
+        if traced {
+            trace::instant(
+                "move.iter.counters",
+                trace::Category::Counter,
+                [
+                    _li as u64,
+                    small_scans.load(Ordering::Relaxed),
+                    large_scans.load(Ordering::Relaxed),
+                    table_ops.load(Ordering::Relaxed),
+                ],
+            );
+        }
+        // Same delta into the live registry's convergence histogram:
+        // one zero-alloc record per iteration, nothing per vertex.
+        crate::obs::sites::louvain_move_iter_moves().record(moves.load(Ordering::Relaxed));
         if time_buckets {
             trace::instant(
                 "move.buckets",

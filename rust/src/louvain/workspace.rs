@@ -135,6 +135,79 @@ impl LouvainWorkspace {
     pub fn spawned_workers(&self) -> usize {
         self.team.as_ref().map(|t| t.spawned_workers()).unwrap_or(0)
     }
+
+    /// Byte-level memory accounting over every long-lived buffer this
+    /// workspace owns (PR 8).  "Reserved" is allocator capacity;
+    /// "used" is logical length — the gap is the shrink-only reuse
+    /// slack the zero-allocation contract deliberately keeps (pass
+    /// buffers are sized by the *first* pass and logically shrunk).
+    pub fn mem_report(&self) -> WorkspaceMem {
+        let f64s = std::mem::size_of::<f64>();
+        let u32s = std::mem::size_of::<u32>();
+        let us = std::mem::size_of::<usize>();
+        let vec_pairs = [
+            (self.k.capacity() * f64s, self.k.len() * f64s),
+            (self.sigma.capacity() * f64s, self.sigma.len() * f64s),
+            (self.membership.capacity() * u32s, self.membership.len() * u32s),
+            (self.affected.capacity() * u32s, self.affected.len() * u32s),
+            (self.renumber_scratch.capacity() * us, self.renumber_scratch.len() * us),
+        ];
+        let pass_reserved: usize = vec_pairs.iter().map(|&(r, _)| r).sum::<usize>()
+            + self.scan_order.reserved_bytes();
+        let pass_used: usize = vec_pairs.iter().map(|&(_, u)| u).sum::<usize>()
+            + self.scan_order.ids.len() * u32s;
+        WorkspaceMem {
+            table_pool: self.pool.as_ref().map(|p| p.reserved_bytes()).unwrap_or(0),
+            pass_buffers_reserved: pass_reserved,
+            pass_buffers_used: pass_used,
+            agg_scratch: self.agg.reserved_bytes(),
+            super_graphs_reserved: self.super_a.reserved_bytes() + self.super_b.reserved_bytes(),
+            super_graphs_used: self.super_a.used_bytes() + self.super_b.used_bytes(),
+        }
+    }
+
+    /// Publish the current [`Self::mem_report`] into the process
+    /// registry's byte gauges (one call per run, after the pass loop).
+    pub fn publish_mem_gauges(&self) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        use crate::obs::sites::mem_bytes;
+        let m = self.mem_report();
+        mem_bytes("reserved", "table_pool").set(m.table_pool as i64);
+        mem_bytes("reserved", "workspace").set((m.pass_buffers_reserved + m.agg_scratch) as i64);
+        mem_bytes("used", "workspace").set(m.pass_buffers_used as i64);
+        mem_bytes("reserved", "super_graphs").set(m.super_graphs_reserved as i64);
+        mem_bytes("used", "super_graphs").set(m.super_graphs_used as i64);
+    }
+}
+
+/// One workspace's byte-level footprint (PR 8; see
+/// [`LouvainWorkspace::mem_report`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkspaceMem {
+    /// Per-thread community-table slabs (capacity == use by design).
+    pub table_pool: usize,
+    /// K'/Σ'/C'/affected/renumber/scan-order capacities.
+    pub pass_buffers_reserved: usize,
+    /// Same buffers at their current logical lengths.
+    pub pass_buffers_used: usize,
+    /// Aggregation scratch (high-water-mark storage; reserved only).
+    pub agg_scratch: usize,
+    /// Super-vertex ping-pong pair capacities.
+    pub super_graphs_reserved: usize,
+    pub super_graphs_used: usize,
+}
+
+impl WorkspaceMem {
+    pub fn total_reserved(&self) -> usize {
+        self.table_pool + self.pass_buffers_reserved + self.agg_scratch
+            + self.super_graphs_reserved
+    }
+
+    pub fn total_used(&self) -> usize {
+        self.pass_buffers_used + self.super_graphs_used
+    }
 }
 
 /// Parallel pass-buffer init (PR 2 satellite: the identity membership

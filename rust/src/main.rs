@@ -185,6 +185,12 @@ fn cmd_run(opts: &Opts) -> Result<()> {
             trace.threads.len(),
             trace.dropped,
         );
+        if trace.dropped > 0 {
+            println!(
+                "trace: dropped by thread: {}",
+                gve_louvain::trace::report::dropped_summary(&trace)
+            );
+        }
         return Ok(());
     }
     // GVE honours the full scan-engine knob set (--schedule --chunk

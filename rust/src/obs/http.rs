@@ -1,0 +1,208 @@
+//! Minimal HTTP/1.1 introspection server over `std::net::TcpListener`
+//! — the repo's first wire protocol (PR 8, seeds the ROADMAP "real
+//! server front end" item).
+//!
+//! One dedicated thread owns the listener and serves requests
+//! sequentially; nothing here shares a lock with the ingest loop:
+//!
+//! * `/metrics` — Prometheus text scrape of the process registry;
+//! * `/metrics.json` — the same snapshot as JSON;
+//! * `/healthz` — liveness probe (`200 ok`);
+//! * `/epochs` — current [`EpochSnapshot`] stats plus the ingest
+//!   loop's latest [`ServiceSummary`] (epoch percentiles, drift,
+//!   throughput) as JSON.
+//!
+//! `/epochs` reads through a [`SnapshotHandle`] (an `Arc` swap — the
+//! same lock-free query surface every other reader uses) and a tiny
+//! `Mutex<ServiceSummary>` the ingest loop overwrites with a `Copy`
+//! struct after each publish; the scrape side holds that mutex only
+//! for a by-value copy, so scrapes never block ingest in any
+//! observable way.
+//!
+//! The listener binds loopback only: this is an introspection port,
+//! not a public API.  Bind port 0 to let the OS pick (tests do).
+
+use super::{registry, render};
+use crate::service::metrics::ServiceSummary;
+use crate::service::SnapshotHandle;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What the server reads from the service side (both optional so the
+/// endpoint also works for processes that run no service).
+#[derive(Clone, Default)]
+pub struct ServeState {
+    /// Lock-free reader handle to the current epoch.
+    pub snapshots: Option<SnapshotHandle>,
+    /// Latest derived metrics, overwritten by the ingest loop after
+    /// each publish (`ServiceMetrics::summary`).
+    pub summary: Arc<Mutex<ServiceSummary>>,
+}
+
+/// Handle to the serving thread; dropping it stops the server.
+pub struct IntrospectionServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl IntrospectionServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving on a
+    /// dedicated `gve-obs-http` thread.
+    pub fn start(port: u16, state: ServeState) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("gve-obs-http".into())
+            .spawn(move || serve_loop(listener, stop2, state))?;
+        Ok(Self { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for IntrospectionServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Relaxed);
+        // The accept loop is blocked in accept(); a throwaway local
+        // connection wakes it so it can observe the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, stop: Arc<AtomicBool>, state: ServeState) {
+    for conn in listener.incoming() {
+        if stop.load(Relaxed) {
+            break;
+        }
+        let Ok(mut stream) = conn else { continue };
+        let _ = handle(&mut stream, &state);
+    }
+}
+
+/// Read up to the header terminator (bounded), answer, close.
+fn handle(stream: &mut TcpStream, state: &ServeState) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !contains_terminator(&buf) && buf.len() < 16 * 1024 {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let request_line = std::str::from_utf8(&buf)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("")
+        .to_string();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+            "/metrics" => (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                render::prometheus_text(&registry().snapshot()),
+            ),
+            "/metrics.json" => {
+                ("200 OK", "application/json", render::json(&registry().snapshot()))
+            }
+            "/epochs" => ("200 OK", "application/json", epochs_json(state)),
+            _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+        }
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+fn contains_terminator(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// `/epochs` body: current snapshot stats + derived service summary.
+fn epochs_json(state: &ServeState) -> String {
+    let summary = *state.summary.lock().unwrap();
+    let snap_part = match &state.snapshots {
+        Some(h) => {
+            let s = h.load();
+            format!(
+                "\"epoch\":{},\"vertices\":{},\"edges\":{},\"modularity\":{:.6},\
+                 \"num_communities\":{},\"stats\":{{\"batch_ops\":{},\"affected_seeded\":{},\
+                 \"passes\":{},\"apply_ns\":{},\"detect_ns\":{},\"wall_ns\":{}}}",
+                s.epoch,
+                s.vertices,
+                s.edges,
+                s.modularity,
+                s.num_communities(),
+                s.stats.batch_ops,
+                s.stats.affected_seeded,
+                s.stats.passes,
+                s.stats.apply_ns,
+                s.stats.detect_ns,
+                s.stats.wall_ns(),
+            )
+        }
+        None => "\"epoch\":null".to_string(),
+    };
+    format!(
+        "{{{snap_part},\"epochs_published\":{},\"ops_ingested\":{},\"ops_rejected\":{},\
+         \"ingest_ops_per_sec\":{:.1},\"epoch_percentiles\":{{\"p50\":{},\"p95\":{},\"p99\":{}}},\
+         \"median_epoch_ns\":{},\"max_epoch_ns\":{},\"initial_modularity\":{:.6},\
+         \"last_modularity\":{:.6},\"quality_drift\":{:.6}}}",
+        summary.epochs_published,
+        summary.ops_ingested,
+        summary.ops_rejected,
+        summary.ingest_ops_per_sec,
+        summary.percentiles.p50,
+        summary.percentiles.p95,
+        summary.percentiles.p99,
+        summary.median_epoch_ns,
+        summary.max_epoch_ns,
+        summary.initial_modularity,
+        summary.last_modularity,
+        summary.quality_drift,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epochs_json_without_a_service_is_still_valid() {
+        let body = epochs_json(&ServeState::default());
+        assert!(body.starts_with("{\"epoch\":null,"));
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+    }
+
+    #[test]
+    fn terminator_detection() {
+        assert!(contains_terminator(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(contains_terminator(b"GET / HTTP/1.0\n\n"));
+        assert!(!contains_terminator(b"GET / HTTP/1.1\r\n"));
+    }
+}

@@ -1,0 +1,608 @@
+//! Live telemetry: a process-wide metrics registry (PR 8).
+//!
+//! PR 7's tracing answers "what happened during *that* run" — you
+//! attach a session, finish it, and study the timeline offline.  The
+//! ROADMAP north-star is a long-lived service, and a service needs the
+//! complementary surface: **always-on** counters, gauges and latency
+//! histograms that a scraper can poll from a *running* process without
+//! attaching anything.  This module is that surface:
+//!
+//! * [`Counter`] / [`Gauge`] — per-worker **sharded** relaxed atomics
+//!   ([`SHARDS`] cache-padded cells, one per thread-affine slot), so
+//!   hot-path increments never bounce a shared cache line between
+//!   workers; shards are merged on scrape.
+//! * [`Histogram`] — fixed-bucket log2 latency histogram; recording is
+//!   zero-alloc (three relaxed `fetch_add`s), rendering produces
+//!   Prometheus cumulative buckets.
+//! * [`Registry`] — instruments registered under `&'static str` names
+//!   with label support; [`Registry::snapshot`] walks the registry
+//!   under its lock and reads every instrument into plain values, one
+//!   consistent point-in-time view for the renderers
+//!   ([`render::prometheus_text`], [`render::json`]).
+//! * [`http::IntrospectionServer`] — a minimal `std::net::TcpListener`
+//!   HTTP server (the repo's first wire protocol) serving `/metrics`,
+//!   `/healthz` and `/epochs` from a dedicated thread, so scrapes never
+//!   block the ingest thread.
+//!
+//! ## Cost discipline
+//!
+//! Mirrors the trace subsystem's branch-disabled pattern: every record
+//! path starts with one relaxed load of a process-global enabled bit
+//! ([`enabled`]).  Metrics default **on** (unlike tracing) because the
+//! per-op cost is a single relaxed `fetch_add` on a thread-affine
+//! padded cell; `bench_smoke`'s metrics cell measures the on/off delta
+//! and the acceptance bar is < 1 %.  [`set_enabled(false)`] turns every
+//! instrument into a single load-and-return, and results are bit-exact
+//! either way (`tests/obs.rs`) — instruments observe, never steer.
+
+pub mod http;
+pub mod render;
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Shard count for [`Counter`]/[`Gauge`] (power of two; threads are
+/// assigned round-robin, so up to this many writers proceed without
+/// sharing a cache line).
+pub const SHARDS: usize = 16;
+
+/// Bucket count for [`Histogram`]: bucket 0 holds zero, bucket `i`
+/// holds values in `[2^(i-1), 2^i)`, the last bucket absorbs the tail
+/// (2^42 ns ≈ 73 min — far beyond any epoch latency here).
+pub const HIST_BUCKETS: usize = 44;
+
+// ---------------------------------------------------------------------------
+// Global enable bit (trace-style: one relaxed load on every record).
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether instruments record (default **true**; see module docs).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Flip recording globally.  Reads ([`Counter::value`], scrapes) keep
+/// working either way — disabling freezes values, it does not clear.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Thread → shard assignment.
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Round-robin shard slot, fixed per thread at first use.
+    static SHARD: usize = NEXT_SHARD.fetch_add(1, Relaxed) & (SHARDS - 1);
+}
+
+#[inline(always)]
+fn shard_index() -> usize {
+    SHARD.with(|s| *s)
+}
+
+/// One atomic on its own cache line (shards must not false-share).
+#[repr(align(64))]
+#[derive(Default)]
+struct PadU64(AtomicU64);
+
+#[repr(align(64))]
+#[derive(Default)]
+struct PadI64(AtomicI64);
+
+// ---------------------------------------------------------------------------
+// Instruments.
+
+/// Monotonic counter: sharded relaxed adds, summed on scrape.
+#[derive(Default)]
+pub struct Counter {
+    shards: [PadU64; SHARDS],
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[shard_index()].0.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Merged value (sum of shards).  Concurrent writers may land
+    /// mid-sum; the result is always ≥ any previously observed value
+    /// for a fixed writer set (each shard is monotone).
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Relaxed)).sum()
+    }
+}
+
+/// Up/down gauge over signed shards (merged on scrape).
+///
+/// `add`/`sub` are safe from any thread; [`Gauge::set`] rewrites all
+/// shards and is reserved for single-writer gauges (memory accounting,
+/// the drift gauge — both owned by one thread in this codebase).
+#[derive(Default)]
+pub struct Gauge {
+    shards: [PadI64; SHARDS],
+}
+
+impl Gauge {
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[shard_index()].0.fetch_add(d, Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, d: i64) {
+        self.add(-d);
+    }
+
+    /// Overwrite the merged value (single-writer gauges only; a racing
+    /// `add` on another shard can be lost for shards rewritten before
+    /// the add lands — acceptable for the set-style gauges here).
+    pub fn set(&self, v: i64) {
+        if !enabled() {
+            return;
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            s.0.store(if i == 0 { v } else { 0 }, Relaxed);
+        }
+    }
+
+    pub fn value(&self) -> i64 {
+        self.shards.iter().map(|s| s.0.load(Relaxed)).sum()
+    }
+}
+
+/// Fixed-bucket log2 histogram; `record` is zero-alloc.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a value: 0 for 0, else `floor(log2(v)) + 1`
+/// clamped to the last bucket.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive Prometheus `le` upper bound of bucket `i` (`None` is the
+/// `+Inf` tail bucket).  Integer values make `< 2^i` ⇔ `≤ 2^i - 1`.
+pub fn bucket_le(i: usize) -> Option<u64> {
+    if i == 0 {
+        Some(0)
+    } else if i < HIST_BUCKETS - 1 {
+        Some((1u64 << i) - 1)
+    } else {
+        None
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.buckets[bucket_of(v)].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+    }
+
+    /// Point-in-time read.  `count` is recomputed from the bucket reads
+    /// so the snapshot is internally consistent (`count == Σ buckets`)
+    /// even under concurrent recording; `sum` may trail by in-flight
+    /// records.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: [u64; HIST_BUCKETS] = std::array::from_fn(|i| self.buckets[i].load(Relaxed));
+        let count = buckets.iter().sum();
+        HistogramSnapshot { buckets, sum: self.sum.load(Relaxed), count }
+    }
+}
+
+/// Plain-value copy of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-resolution percentile estimate (upper bound of the bucket
+    /// where the cumulative count crosses `p`); 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_le(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+
+/// Owned label set (`name="value"` pairs, rendered sorted as given).
+pub type Labels = Vec<(&'static str, String)>;
+
+#[derive(Clone)]
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Instrument {
+    fn kind(&self) -> &'static str {
+        match self {
+            Instrument::Counter(_) => "counter",
+            Instrument::Gauge(_) => "gauge",
+            Instrument::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: &'static str,
+    help: &'static str,
+    labels: Labels,
+    inst: Instrument,
+}
+
+/// Process-wide instrument registry (get-or-register semantics: the
+/// same `(name, labels)` always yields the same instrument).
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+fn owned_labels(labels: &[(&'static str, &str)]) -> Labels {
+    labels.iter().map(|&(k, v)| (k, v.to_string())).collect()
+}
+
+impl Registry {
+    fn get_or_register(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        let labels = owned_labels(labels);
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name && e.labels == labels) {
+            return e.inst.clone();
+        }
+        let inst = make();
+        // One name, one type: Prometheus families cannot mix kinds.
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            assert_eq!(
+                e.inst.kind(),
+                inst.kind(),
+                "metric {name} already registered as {}",
+                e.inst.kind()
+            );
+        }
+        entries.push(Entry { name, help, labels, inst: inst.clone() });
+        inst
+    }
+
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Counter> {
+        match self.get_or_register(name, help, labels, || {
+            Instrument::Counter(Arc::new(Counter::default()))
+        }) {
+            Instrument::Counter(c) => c,
+            other => panic!("metric {name} is a {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Gauge> {
+        match self
+            .get_or_register(name, help, labels, || Instrument::Gauge(Arc::new(Gauge::default())))
+        {
+            Instrument::Gauge(g) => g,
+            other => panic!("metric {name} is a {}", other.kind()),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Histogram> {
+        match self.get_or_register(name, help, labels, || {
+            Instrument::Histogram(Arc::new(Histogram::default()))
+        }) {
+            Instrument::Histogram(h) => h,
+            other => panic!("metric {name} is a {}", other.kind()),
+        }
+    }
+
+    /// One consistent point-in-time view: the registry is walked under
+    /// its lock and every instrument is read into plain values in a
+    /// single pass (no instrument is read twice, none is skipped).
+    pub fn snapshot(&self) -> Snapshot {
+        let entries = self.entries.lock().unwrap();
+        Snapshot {
+            metrics: entries
+                .iter()
+                .map(|e| Metric {
+                    name: e.name,
+                    help: e.help,
+                    labels: e.labels.clone(),
+                    value: match &e.inst {
+                        Instrument::Counter(c) => MetricValue::Counter(c.value()),
+                        Instrument::Gauge(g) => MetricValue::Gauge(g.value()),
+                        Instrument::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                    },
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Plain-value scrape result (input to the renderers).
+pub struct Snapshot {
+    pub metrics: Vec<Metric>,
+}
+
+pub struct Metric {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub labels: Labels,
+    pub value: MetricValue,
+}
+
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(HistogramSnapshot),
+}
+
+// ---------------------------------------------------------------------------
+// Wired sites: the instruments the rest of the crate records into.
+// One lazy accessor per site keeps hot paths at "one OnceLock load +
+// one relaxed add" with the registry lock paid exactly once.
+
+macro_rules! counter_site {
+    ($fn_name:ident, $name:literal, $help:literal) => {
+        pub fn $fn_name() -> &'static Counter {
+            static SITE: OnceLock<Arc<Counter>> = OnceLock::new();
+            &**SITE.get_or_init(|| registry().counter($name, $help, &[]))
+        }
+    };
+}
+
+macro_rules! gauge_site {
+    ($fn_name:ident, $name:literal, $help:literal) => {
+        pub fn $fn_name() -> &'static Gauge {
+            static SITE: OnceLock<Arc<Gauge>> = OnceLock::new();
+            &**SITE.get_or_init(|| registry().gauge($name, $help, &[]))
+        }
+    };
+}
+
+macro_rules! histogram_site {
+    ($fn_name:ident, $name:literal, $help:literal) => {
+        pub fn $fn_name() -> &'static Histogram {
+            static SITE: OnceLock<Arc<Histogram>> = OnceLock::new();
+            &**SITE.get_or_init(|| registry().histogram($name, $help, &[]))
+        }
+    };
+}
+
+/// Well-known instruments wired through the crate's layers.
+pub mod sites {
+    use super::*;
+
+    // Service / ingest (service::mod, service::ingest).
+    counter_site!(
+        service_ops_ingested,
+        "gve_service_ops_ingested_total",
+        "Stream ops accepted by CommunityService::submit"
+    );
+    counter_site!(
+        service_ops_rejected,
+        "gve_service_ops_rejected_total",
+        "Stream ops rejected (vertex id beyond max_vertices)"
+    );
+    counter_site!(
+        service_ops_coalesced,
+        "gve_service_ops_coalesced_total",
+        "Pending insertions cancelled by a later delete of the same pair"
+    );
+    counter_site!(
+        service_epochs_published,
+        "gve_service_epochs_published_total",
+        "Epoch snapshots published"
+    );
+    histogram_site!(
+        service_epoch_latency,
+        "gve_service_epoch_latency_ns",
+        "End-to-end epoch latency (apply + detect + publish), ns"
+    );
+    gauge_site!(
+        service_quality_drift_micro,
+        "gve_service_quality_drift_micro",
+        "Modularity drift since boot, microunits (drift * 1e6)"
+    );
+
+    // Worker team (parallel::team).
+    counter_site!(
+        team_jobs_dispatched,
+        "gve_team_jobs_dispatched_total",
+        "Parallel jobs dispatched to the persistent worker team"
+    );
+    counter_site!(
+        team_worker_busy_ns,
+        "gve_team_worker_busy_ns_total",
+        "Wall ns team members spent inside job bodies"
+    );
+
+    // Louvain core (louvain::gve, louvain::local_moving).
+    counter_site!(louvain_runs, "gve_louvain_runs_total", "Complete Louvain runs");
+    counter_site!(louvain_passes, "gve_louvain_passes_total", "Louvain passes executed");
+    counter_site!(
+        louvain_move_iterations,
+        "gve_louvain_move_iterations_total",
+        "Local-moving iterations executed"
+    );
+    counter_site!(
+        louvain_moves_applied,
+        "gve_louvain_moves_applied_total",
+        "Vertex community moves applied"
+    );
+    counter_site!(
+        louvain_small_path_scans,
+        "gve_louvain_small_path_scans_total",
+        "Vertex scans taking the small-degree fast path"
+    );
+    counter_site!(
+        louvain_large_path_scans,
+        "gve_louvain_large_path_scans_total",
+        "Vertex scans taking the hashtable path"
+    );
+    histogram_site!(
+        louvain_move_iter_moves,
+        "gve_louvain_move_iter_moves",
+        "Moves applied per local-moving iteration (pruning convergence)"
+    );
+
+    // Trace subsystem (trace::TraceSession::finish).
+    counter_site!(
+        trace_dropped_events,
+        "gve_trace_dropped_events_total",
+        "Trace events dropped by saturated per-thread sinks"
+    );
+
+    /// Memory-accounting byte gauge, labelled by component; `kind` is
+    /// `"reserved"` (buffer capacity) or `"used"` (logical length).
+    pub fn mem_bytes(kind: &'static str, component: &'static str) -> Arc<Gauge> {
+        let name = match kind {
+            "reserved" => "gve_mem_reserved_bytes",
+            "used" => "gve_mem_used_bytes",
+            other => panic!("mem gauge kind must be reserved|used, got {other}"),
+        };
+        registry().gauge(
+            name,
+            "Heap bytes by component (reserved = capacity, used = logical)",
+            &[("component", component)],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_shards_merge() {
+        let c = Counter::default();
+        c.add(5);
+        c.inc();
+        assert_eq!(c.value(), 6);
+    }
+
+    #[test]
+    fn gauge_set_overwrites_adds() {
+        let g = Gauge::default();
+        g.add(10);
+        g.sub(3);
+        assert_eq!(g.value(), 7);
+        g.set(100);
+        assert_eq!(g.value(), 100);
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // le bound of bucket i is 2^i - 1 (inclusive).
+        assert_eq!(bucket_le(0), Some(0));
+        assert_eq!(bucket_le(1), Some(1));
+        assert_eq!(bucket_le(2), Some(3));
+        assert_eq!(bucket_le(HIST_BUCKETS - 1), None);
+    }
+
+    #[test]
+    fn histogram_percentile_estimates() {
+        let h = Histogram::default();
+        for v in [1u64, 1, 1, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 1003);
+        assert_eq!(s.percentile(0.5), 1);
+        assert!(s.percentile(0.99) >= 1000);
+    }
+
+    #[test]
+    fn registry_get_or_register_dedups() {
+        let r = Registry::default();
+        let a = r.counter("t_total", "h", &[]);
+        let b = r.counter("t_total", "h", &[]);
+        a.inc();
+        assert_eq!(b.value(), 1, "same (name, labels) is the same instrument");
+        let l1 = r.counter("t_total", "h", &[("k", "x")]);
+        l1.add(9);
+        assert_eq!(a.value(), 1, "distinct labels are distinct instruments");
+        let snap = r.snapshot();
+        assert_eq!(snap.metrics.len(), 2);
+    }
+}

@@ -1,0 +1,206 @@
+//! Scrape renderers: Prometheus text exposition format and JSON.
+//!
+//! Both take a [`Snapshot`] (plain values, no atomics) so a render
+//! never touches live instruments.  The Prometheus renderer follows
+//! text format 0.0.4: `# HELP` / `# TYPE` once per family, samples
+//! grouped under their family, histograms as cumulative `_bucket`
+//! series plus `_sum` / `_count`.  The JSON renderer is hand-rolled
+//! like every other writer in this crate (the offline registry has no
+//! serde).
+
+use super::{bucket_le, HistogramSnapshot, Labels, Metric, MetricValue, Snapshot};
+
+/// Escape a label value per the exposition format (`\\`, `\"`, `\n`).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}`; `extra` appends a pre-formatted pair (the
+/// histogram `le`).  Empty labels render as nothing.
+fn label_block(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn write_histogram(out: &mut String, name: &str, labels: &Labels, h: &HistogramSnapshot) {
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        cum += c;
+        // Skip interior zero-count buckets to keep scrapes compact;
+        // cumulative counts stay correct because `cum` carries over.
+        if c == 0 && i != h.buckets.len() - 1 {
+            continue;
+        }
+        let le = match bucket_le(i) {
+            Some(b) => b.to_string(),
+            None => "+Inf".to_string(),
+        };
+        out.push_str(&format!(
+            "{name}_bucket{} {cum}\n",
+            label_block(labels, Some(("le", le.as_str())))
+        ));
+    }
+    out.push_str(&format!("{name}_sum{} {}\n", label_block(labels, None), h.sum));
+    out.push_str(&format!("{name}_count{} {}\n", label_block(labels, None), h.count));
+}
+
+/// Prometheus text format 0.0.4.
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    // Group samples by family (first-seen order) so HELP/TYPE lead
+    // each family exactly once, as the format requires.
+    let mut families: Vec<(&str, Vec<&Metric>)> = Vec::new();
+    for m in &snap.metrics {
+        match families.iter_mut().find(|(n, _)| *n == m.name) {
+            Some((_, v)) => v.push(m),
+            None => families.push((m.name, vec![m])),
+        }
+    }
+    let mut out = String::new();
+    for (name, metrics) in families {
+        let first = metrics[0];
+        let kind = match first.value {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        };
+        out.push_str(&format!("# HELP {name} {}\n", first.help));
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        for m in metrics {
+            match &m.value {
+                MetricValue::Counter(v) => {
+                    out.push_str(&format!("{name}{} {v}\n", label_block(&m.labels, None)));
+                }
+                MetricValue::Gauge(v) => {
+                    out.push_str(&format!("{name}{} {v}\n", label_block(&m.labels, None)));
+                }
+                MetricValue::Histogram(h) => write_histogram(&mut out, name, &m.labels, h),
+            }
+        }
+    }
+    out
+}
+
+fn json_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_labels(labels: &Labels) -> String {
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("\"{k}\":\"{}\"", json_escape(v))).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+/// JSON rendering of the same snapshot (`/metrics.json`).
+pub fn json(snap: &Snapshot) -> String {
+    let mut items: Vec<String> = Vec::with_capacity(snap.metrics.len());
+    for m in &snap.metrics {
+        let head = format!(
+            "{{\"name\":\"{}\",\"help\":\"{}\",\"labels\":{}",
+            m.name,
+            json_escape(m.help),
+            json_labels(&m.labels)
+        );
+        let body = match &m.value {
+            MetricValue::Counter(v) => format!("{head},\"type\":\"counter\",\"value\":{v}}}"),
+            MetricValue::Gauge(v) => format!("{head},\"type\":\"gauge\",\"value\":{v}}}"),
+            MetricValue::Histogram(h) => {
+                let mut buckets = Vec::new();
+                let mut cum = 0u64;
+                for (i, &c) in h.buckets.iter().enumerate() {
+                    cum += c;
+                    if c == 0 && i != h.buckets.len() - 1 {
+                        continue;
+                    }
+                    let le = match bucket_le(i) {
+                        Some(b) => format!("\"{b}\""),
+                        None => "\"+Inf\"".to_string(),
+                    };
+                    buckets.push(format!("{{\"le\":{le},\"cumulative\":{cum}}}"));
+                }
+                format!(
+                    "{head},\"type\":\"histogram\",\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                    h.count,
+                    h.sum,
+                    buckets.join(",")
+                )
+            }
+        };
+        items.push(body);
+    }
+    format!("{{\"metrics\":[{}]}}", items.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    fn sample_snapshot() -> Snapshot {
+        let r = Registry::default();
+        r.counter("a_total", "counts a", &[]).add(3);
+        r.gauge("b_bytes", "gauges b", &[("component", "pool")]).set(-7);
+        let h = r.histogram("c_ns", "times c", &[]);
+        h.record(0);
+        h.record(5);
+        r.snapshot()
+    }
+
+    #[test]
+    fn prometheus_families_lead_with_help_and_type() {
+        let text = prometheus_text(&sample_snapshot());
+        assert!(text.contains("# HELP a_total counts a\n"));
+        assert!(text.contains("# TYPE a_total counter\n"));
+        assert!(text.contains("a_total 3\n"));
+        assert!(text.contains("b_bytes{component=\"pool\"} -7\n"));
+        assert!(text.contains("# TYPE c_ns histogram\n"));
+        assert!(text.contains("c_ns_bucket{le=\"0\"} 1\n"));
+        // 5 lands in bucket 3 (le = 7); cumulative includes the zero.
+        assert!(text.contains("c_ns_bucket{le=\"7\"} 2\n"));
+        assert!(text.contains("c_ns_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("c_ns_sum 5\n"));
+        assert!(text.contains("c_ns_count 2\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let labels: Labels = vec![("k", "a\"b\\c\nd".to_string())];
+        assert_eq!(label_block(&labels, None), "{k=\"a\\\"b\\\\c\\nd\"}");
+    }
+
+    #[test]
+    fn json_is_structurally_sound() {
+        let j = json(&sample_snapshot());
+        assert!(j.starts_with("{\"metrics\":["));
+        assert!(j.contains("\"type\":\"histogram\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+}

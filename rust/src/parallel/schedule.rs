@@ -177,6 +177,15 @@ pub struct ScanOrder {
 const PAR_BUILD_MIN: usize = 8192;
 
 impl ScanOrder {
+    /// Heap bytes reserved by the order buffers (capacity; PR 8 memory
+    /// accounting).
+    pub fn reserved_bytes(&self) -> usize {
+        self.ids.capacity() * std::mem::size_of::<u32>()
+            + self.chunk_counts.capacity() * std::mem::size_of::<[usize; 3]>()
+    }
+}
+
+impl ScanOrder {
     /// Partition `0..n` by `degree_of` into the reused buffer.
     pub fn build(&mut self, n: usize, small: usize, hub: usize, degree_of: impl Fn(usize) -> usize) {
         let hub = hub.max(small);

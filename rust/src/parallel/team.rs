@@ -313,6 +313,13 @@ impl Team {
         // that worker's busy end, derivable in Perfetto or report.rs).
         let traced = trace::enabled();
         let job_id = if traced { trace::next_job_id() } else { 0 };
+        // Live-registry dispatch accounting (PR 8): the gate is one
+        // relaxed load per *job*; when on, each member pays two clock
+        // reads per job (not per chunk) for the busy-ns counter.
+        let metered = crate::obs::enabled();
+        if metered {
+            crate::obs::sites::team_jobs_dispatched().inc();
+        }
         let job = |tid: usize| {
             let _busy = if traced {
                 trace::span(
@@ -323,8 +330,12 @@ impl Team {
             } else {
                 None
             };
+            let t_member = if metered { Some(std::time::Instant::now()) } else { None };
             let mut ctx = init(tid);
             let (busy, local) = run_chunks_for_tid(&dealer, tid, opts.record, &mut ctx, &body);
+            if let Some(t0) = t_member {
+                crate::obs::sites::team_worker_busy_ns().add(t0.elapsed().as_nanos() as u64);
+            }
             if opts.record {
                 // One uncontended lock per member per job (vs the
                 // scoped path's shared Mutex<WorkStats>).

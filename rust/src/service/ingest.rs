@@ -185,6 +185,9 @@ impl IngestBuffer {
         self.oldest_ns = None;
         self.insert_idx.clear();
         let mut batch = std::mem::take(&mut self.pending);
+        // Coalescing wins are invisible in the batch itself — count the
+        // cancelled insertions for the live registry (PR 8).
+        crate::obs::sites::service_ops_coalesced().add(self.dead_count as u64);
         if self.dead_count > 0 {
             let dead = std::mem::take(&mut self.dead);
             // retain visits in order, so the parallel tombstone list

@@ -191,6 +191,42 @@ impl ServiceMetrics {
     pub fn quality_drift(&self) -> f64 {
         self.last_modularity - self.initial_modularity
     }
+
+    /// Plain-value summary for cross-thread publication (PR 8): the
+    /// ingest loop copies this into the shared cell the introspection
+    /// server's `/epochs` endpoint renders, so the HTTP thread never
+    /// touches the live (single-writer) `ServiceMetrics`.
+    pub fn summary(&self) -> ServiceSummary {
+        ServiceSummary {
+            epochs_published: self.batches_applied,
+            ops_ingested: self.ops_ingested,
+            ops_rejected: self.ops_rejected,
+            ingest_ops_per_sec: self.ingest_ops_per_sec(),
+            median_epoch_ns: self.median_epoch_ns(),
+            max_epoch_ns: self.max_epoch_ns(),
+            percentiles: self.epoch_percentiles(),
+            initial_modularity: self.initial_modularity,
+            last_modularity: self.last_modularity,
+            quality_drift: self.quality_drift(),
+        }
+    }
+}
+
+/// `Copy` snapshot of the derived [`ServiceMetrics`] values (PR 8) —
+/// what `/epochs` reports beyond the current [`EpochSnapshot`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceSummary {
+    /// Update epochs published (`batches_applied`; boot excluded).
+    pub epochs_published: u64,
+    pub ops_ingested: u64,
+    pub ops_rejected: u64,
+    pub ingest_ops_per_sec: f64,
+    pub median_epoch_ns: u64,
+    pub max_epoch_ns: u64,
+    pub percentiles: EpochPercentiles,
+    pub initial_modularity: f64,
+    pub last_modularity: f64,
+    pub quality_drift: f64,
 }
 
 #[cfg(test)]

@@ -48,7 +48,7 @@ pub mod snapshot;
 pub mod store;
 
 pub use ingest::{BatchPolicy, IngestBuffer};
-pub use metrics::ServiceMetrics;
+pub use metrics::{ServiceMetrics, ServiceSummary};
 pub use snapshot::{EpochSnapshot, EpochStats, SnapshotCell, SnapshotHandle};
 pub use store::GraphStore;
 
@@ -211,9 +211,11 @@ impl CommunityService {
             // batch-cut position and everything admitted before.
             if id as usize >= self.max_vertices {
                 self.metrics.ops_rejected += 1;
+                crate::obs::sites::service_ops_rejected().inc();
                 return None;
             }
             self.metrics.ops_ingested += 1;
+            crate::obs::sites::service_ops_ingested().inc();
         }
         if self.buffer.push(op) {
             self.flush()
@@ -250,6 +252,7 @@ impl CommunityService {
     /// path), bypassing the coalescing buffer: one batch, one epoch.
     pub fn ingest_batch(&mut self, batch: &EdgeBatch) -> Arc<EpochSnapshot> {
         self.metrics.ops_ingested += batch.len() as u64;
+        crate::obs::sites::service_ops_ingested().add(batch.len() as u64);
         self.apply_and_publish(batch)
     }
 
@@ -345,6 +348,18 @@ impl CommunityService {
             sizes,
         );
         self.metrics.record_epoch(stats, snapshot.modularity);
+        // Live-telemetry mirrors (PR 8): one histogram record, one
+        // counter bump and two gauge writes per *epoch* — nothing here
+        // is per-op.
+        {
+            use crate::obs::sites;
+            sites::service_epochs_published().inc();
+            sites::service_epoch_latency().record(stats.wall_ns());
+            sites::service_quality_drift_micro()
+                .set((self.metrics.quality_drift() * 1e6) as i64);
+            sites::mem_bytes("reserved", "graph_store").set(self.store.reserved_bytes() as i64);
+            sites::mem_bytes("used", "graph_store").set(self.store.used_bytes() as i64);
+        }
         let arc = Arc::new(snapshot);
         self.cell.store(Arc::clone(&arc));
         arc

@@ -44,6 +44,20 @@ impl GraphStore {
         self.cur.num_edges()
     }
 
+    /// Heap bytes reserved across the whole store: both ping-pong
+    /// slots plus every merge buffer (PR 8 memory accounting — this is
+    /// the service's long-lived graph footprint).
+    pub fn reserved_bytes(&self) -> usize {
+        self.cur.reserved_bytes() + self.spare.reserved_bytes() + self.scratch.reserved_bytes()
+    }
+
+    /// Heap bytes the *current* graph logically needs.  The gap to
+    /// [`Self::reserved_bytes`] is the deliberate steady-state slack
+    /// (spare slot + scratch high-water marks).
+    pub fn used_bytes(&self) -> usize {
+        self.cur.used_bytes()
+    }
+
     /// Apply `batch` to the current graph on `exec` (growing the vertex
     /// set if the batch references new ids), reusing the scratch and
     /// the ping-pong pair.

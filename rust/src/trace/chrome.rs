@@ -19,6 +19,7 @@ pub fn arg_names(name: &str) -> [&'static str; 4] {
         "pass.counters" => ["pass", "small_path_scans", "large_path_scans", "table_ops"],
         "move" => ["pass", "iterations", "moves", ""],
         "move.iter" => ["iter", "processed", "moves", "pruned"],
+        "move.iter.counters" => ["iter", "small_path_scans", "large_path_scans", "table_ops"],
         "move.buckets" => ["iter", "lo_ns", "mid_ns", "hi_ns"],
         "agg" => ["pass", "communities", "", ""],
         "agg.community_order" => ["communities", "", "", ""],
@@ -120,8 +121,37 @@ pub fn to_chrome_json(trace: &Trace) -> String {
         write_args(&mut out, ev);
         out.push('}');
     }
-    out.push_str("\n]}\n");
+    // Top-level metadata (`otherData`, ignored by the event parser):
+    // surface ring saturation in the export itself (PR 8) so a trace
+    // with holes says so without the capturing CLI's stderr at hand.
+    out.push_str("\n],\"otherData\":{\"dropped_events\":");
+    let _ = write!(out, "{}", trace.dropped);
+    out.push_str(",\"dropped_by_thread\":{");
+    let mut first_drop = true;
+    for (tid, &d) in trace.dropped_by_thread.iter().enumerate() {
+        if d == 0 {
+            continue;
+        }
+        if !first_drop {
+            out.push(',');
+        }
+        first_drop = false;
+        let _ = write!(out, "\"{}\":{d}", thread_key(trace, tid));
+    }
+    out.push_str("}}}\n");
     out
+}
+
+/// Label for the dropped-by-thread map (falls back to the tid).
+fn thread_key(trace: &Trace, tid: usize) -> String {
+    match trace.threads.get(tid) {
+        Some(l) if !l.is_empty() => {
+            let mut out = String::new();
+            escape_into(&mut out, l);
+            out
+        }
+        _ => tid.to_string(),
+    }
 }
 
 /// Write the Chrome JSON to `path`.
@@ -155,11 +185,13 @@ mod tests {
             ],
             threads: vec!["main".into()],
             dropped: 0,
+            dropped_by_thread: vec![0],
             start_ns: 1000,
             end_ns: 10_000,
         };
         let json = to_chrome_json(&trace);
         assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"otherData\":{\"dropped_events\":0,\"dropped_by_thread\":{}}"));
         assert!(json.contains("\"ph\":\"M\""));
         assert!(json.contains("\"thread_name\""));
         // Span rebased to session start: ts 0.000, dur 5.000 µs.
@@ -178,10 +210,28 @@ mod tests {
             events: vec![],
             threads: vec!["we\"ird\\name".into()],
             dropped: 0,
+            dropped_by_thread: vec![0],
             start_ns: 0,
             end_ns: 0,
         };
         let json = to_chrome_json(&trace);
         assert!(json.contains("we\\\"ird\\\\name"));
+    }
+
+    #[test]
+    fn dropped_counts_appear_in_metadata_keyed_by_thread() {
+        let trace = Trace {
+            events: vec![],
+            threads: vec!["main".into(), "gve-team-1".into()],
+            dropped: 7,
+            dropped_by_thread: vec![0, 7],
+            start_ns: 0,
+            end_ns: 0,
+        };
+        let json = to_chrome_json(&trace);
+        assert!(json.contains("\"dropped_events\":7"));
+        assert!(json.contains("\"dropped_by_thread\":{\"gve-team-1\":7}"));
+        // Zero-drop sinks stay out of the map.
+        assert!(!json.contains("\"main\":0"));
     }
 }

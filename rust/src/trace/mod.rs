@@ -320,6 +320,11 @@ pub struct Trace {
     pub threads: Vec<String>,
     /// Events lost to full rings (0 in any sane run).
     pub dropped: u64,
+    /// Per-sink drop counts, indexed like `threads` (PR 8: saturated
+    /// rings name the thread that lost events instead of counting
+    /// silently; also exported as Chrome metadata and mirrored into
+    /// the live registry's `gve_trace_dropped_events_total`).
+    pub dropped_by_thread: Vec<u64>,
     /// Session bounds on the session clock, ns.
     pub start_ns: u64,
     pub end_ns: u64,
@@ -400,6 +405,7 @@ impl TraceSession {
         let mut events = Vec::new();
         let mut threads = Vec::new();
         let mut dropped = 0u64;
+        let mut dropped_by_thread = Vec::new();
         {
             let sinks = lock_ignore_poison(&reg.sinks);
             for s in sinks.iter() {
@@ -408,16 +414,22 @@ impl TraceSession {
             }
             // tids are dense registration indices; label table mirrors that.
             threads.resize(sinks.len(), String::new());
+            dropped_by_thread.resize(sinks.len(), 0u64);
             for s in sinks.iter() {
                 threads[s.tid() as usize] = s.label().to_string();
+                dropped_by_thread[s.tid() as usize] = s.dropped();
             }
         }
+        // Mirror the session's losses into the live registry (PR 8):
+        // a scraper sees saturation without parsing any trace file.
+        crate::obs::sites::trace_dropped_events().add(dropped);
         events.sort_by_key(|e| (e.start_ns, e.tid));
         reg.session_active.store(false, Ordering::SeqCst);
         Trace {
             events,
             threads,
             dropped,
+            dropped_by_thread,
             start_ns: self.start_ns,
             end_ns,
         }

@@ -74,6 +74,28 @@ pub fn mean_efficiency(utils: &[PassUtil]) -> f64 {
     utils.iter().map(|u| u.efficiency).sum::<f64>() / utils.len() as f64
 }
 
+/// One-line `label=count` summary of non-zero per-sink drop counts,
+/// for the CLIs' session summaries (PR 8). Empty string when no sink
+/// dropped anything.
+pub fn dropped_summary(trace: &Trace) -> String {
+    let mut out = String::new();
+    for (tid, &d) in trace.dropped_by_thread.iter().enumerate() {
+        if d == 0 {
+            continue;
+        }
+        if !out.is_empty() {
+            out.push_str(", ");
+        }
+        let label = trace.threads.get(tid).map(String::as_str).unwrap_or("");
+        if label.is_empty() {
+            out.push_str(&format!("tid{tid}={d}"));
+        } else {
+            out.push_str(&format!("{label}={d}"));
+        }
+    }
+    out
+}
+
 fn pct(num: u64, den: u64) -> String {
     if den == 0 {
         "-".to_string()
@@ -163,6 +185,7 @@ mod tests {
             ],
             threads: vec![],
             dropped: 0,
+            dropped_by_thread: vec![],
             start_ns: 0,
             end_ns: 1000,
         };
@@ -186,10 +209,24 @@ mod tests {
             ],
             threads: vec![],
             dropped: 0,
+            dropped_by_thread: vec![],
             start_ns: 0,
             end_ns: 100,
         };
         let utils = derive_pass_utilization(&trace, 1);
         assert_eq!(utils[0].efficiency, 1.0);
+    }
+
+    #[test]
+    fn dropped_summary_names_saturated_sinks_only() {
+        let trace = Trace {
+            events: vec![],
+            threads: vec!["main".into(), String::new(), "gve-team-2".into()],
+            dropped: 12,
+            dropped_by_thread: vec![0, 5, 7],
+            start_ns: 0,
+            end_ns: 0,
+        };
+        assert_eq!(dropped_summary(&trace), "tid1=5, gve-team-2=7");
     }
 }

@@ -1,0 +1,259 @@
+//! Integration tests for the live-telemetry subsystem (PR 8
+//! acceptance criteria):
+//!
+//! * a counter scraped *while* a writer hammers it is monotone across
+//!   scrapes and lands exactly on the total once the writer joins —
+//!   the sharded relaxed cells lose nothing;
+//! * histogram buckets sit exactly on the documented log2 boundaries
+//!   (`le = 2^i - 1`, inclusive), with zero in its own bucket and the
+//!   `+Inf` tail absorbing the rest;
+//! * the Prometheus rendering is well-formed: `# HELP`/`# TYPE` once
+//!   per family, every sample line `name{labels} value`, histogram
+//!   `_bucket` series cumulative with ascending `le` and a final
+//!   `+Inf` equal to `_count`;
+//! * the HTTP introspection server answers `/healthz`, `/metrics`,
+//!   `/metrics.json` and `/epochs` over loopback — including an
+//!   `/epochs` body backed by a real `CommunityService` snapshot
+//!   handle — and 404s elsewhere;
+//! * Louvain results are bit-exact with the registry enabled vs
+//!   disabled: instruments observe, never steer.
+//!
+//! The enabled flag is process-global and the registry is
+//! process-wide, so tests that toggle the flag serialize through
+//! [`flag_lock`] and every test uses throwaway metric names or a
+//! private `Registry` — never deltas on the shared wired sites, which
+//! other tests in this binary may bump concurrently.
+
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::gve::GveLouvain;
+use gve_louvain::louvain::params::LouvainParams;
+use gve_louvain::obs::http::{IntrospectionServer, ServeState};
+use gve_louvain::obs::{self, bucket_le, render, Histogram, Registry, HIST_BUCKETS};
+use gve_louvain::service::{CommunityService, ServiceConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Serializes tests that flip the process-global enabled flag.
+fn flag_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[test]
+fn counter_scraped_under_load_is_monotone_and_exact() {
+    const PER_THREAD: u64 = 200_000;
+    const WRITERS: usize = 4;
+    let reg = Arc::new(Registry::default());
+    let c = reg.counter("obs_test_hammer_total", "test", &[]);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|_| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for _ in 0..PER_THREAD {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+
+    // Scrape concurrently: each observed value must be >= the last
+    // (every shard is monotone) and <= the eventual total.
+    let scraper = {
+        let reg = Arc::clone(&reg);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut scrapes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                for m in reg.snapshot().metrics {
+                    if let obs::MetricValue::Counter(v) = m.value {
+                        assert!(v >= last, "scrape went backwards: {v} < {last}");
+                        assert!(v <= PER_THREAD * WRITERS as u64);
+                        last = v;
+                        scrapes += 1;
+                    }
+                }
+            }
+            scrapes
+        })
+    };
+
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "the scraper never ran");
+    assert_eq!(c.value(), PER_THREAD * WRITERS as u64);
+}
+
+#[test]
+fn histogram_buckets_sit_on_log2_boundaries() {
+    let h = Histogram::default();
+    // One value per interesting edge: 0, each power of two, and the
+    // value just below it.
+    h.record(0);
+    h.record(1);
+    h.record(2);
+    h.record(3);
+    h.record(4);
+    h.record(1 << 20);
+    h.record((1 << 20) - 1);
+    h.record(u64::MAX); // tail bucket
+    let s = h.snapshot();
+    assert_eq!(s.count, 8);
+
+    assert_eq!(s.buckets[0], 1, "zero lives alone in bucket 0");
+    assert_eq!(s.buckets[1], 1, "bucket 1 = [1, 2)");
+    assert_eq!(s.buckets[2], 2, "bucket 2 = [2, 4) holds 2 and 3");
+    assert_eq!(s.buckets[3], 1, "bucket 3 = [4, 8)");
+    assert_eq!(s.buckets[20], 1, "2^20 - 1 tops bucket 20");
+    assert_eq!(s.buckets[21], 1, "2^20 opens bucket 21");
+    assert_eq!(s.buckets[HIST_BUCKETS - 1], 1, "u64::MAX goes to +Inf");
+
+    // The le bound is inclusive: value 2^i - 1 is in the bucket whose
+    // bound is exactly 2^i - 1.
+    assert_eq!(bucket_le(20), Some((1 << 20) - 1));
+    assert_eq!(bucket_le(HIST_BUCKETS - 1), None);
+}
+
+#[test]
+fn prometheus_text_is_well_formed() {
+    let reg = Registry::default();
+    reg.counter("obs_test_render_total", "a counter", &[]).add(3);
+    reg.counter("obs_test_render_total", "a counter", &[("family", "web")]).add(4);
+    reg.gauge("obs_test_render_bytes", "a gauge", &[("component", "ws")]).set(-17);
+    let h = reg.histogram("obs_test_render_ns", "a histogram", &[]);
+    h.record(0);
+    h.record(5);
+    h.record(5);
+
+    let text = render::prometheus_text(&reg.snapshot());
+
+    // HELP/TYPE exactly once per family, even with two labelled series.
+    assert_eq!(text.matches("# HELP obs_test_render_total").count(), 1);
+    assert_eq!(text.matches("# TYPE obs_test_render_total counter").count(), 1);
+    assert_eq!(text.matches("# TYPE obs_test_render_bytes gauge").count(), 1);
+    assert_eq!(text.matches("# TYPE obs_test_render_ns histogram").count(), 1);
+
+    assert!(text.contains("obs_test_render_total 3"));
+    assert!(text.contains("obs_test_render_total{family=\"web\"} 4"));
+    assert!(text.contains("obs_test_render_bytes{component=\"ws\"} -17"));
+
+    // Histogram series: cumulative buckets with ascending le, then
+    // +Inf == _count, plus _sum.
+    assert!(text.contains("obs_test_render_ns_bucket{le=\"0\"} 1"));
+    assert!(text.contains("obs_test_render_ns_bucket{le=\"7\"} 3"), "5 lands in [4, 8)");
+    assert!(text.contains("obs_test_render_ns_bucket{le=\"+Inf\"} 3"));
+    assert!(text.contains("obs_test_render_ns_sum 10"));
+    assert!(text.contains("obs_test_render_ns_count 3"));
+
+    // Every non-comment line is `name[{labels}] value`.
+    let mut last_le: Option<f64> = None;
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(value.parse::<f64>().is_ok(), "unparsable value in {line:?}");
+        let name = series.split('{').next().unwrap();
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in {line:?}"
+        );
+        // Ascending le within the one histogram family.
+        if let Some(le) = series
+            .strip_prefix("obs_test_render_ns_bucket{le=\"")
+            .and_then(|r| r.strip_suffix("\"}"))
+        {
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+            if let Some(prev) = last_le {
+                assert!(le > prev, "le not ascending at {line:?}");
+            }
+            last_le = Some(le);
+        }
+    }
+    assert_eq!(last_le, Some(f64::INFINITY), "bucket series ends at +Inf");
+}
+
+/// One blocking HTTP GET against the introspection server.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect to introspection server");
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    stream.flush().unwrap();
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let (head, body) = response.split_once("\r\n\r\n").expect("header terminator");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn http_endpoints_answer_over_loopback() {
+    // Register something scrapable before snapshotting.
+    obs::registry().counter("obs_test_http_total", "test", &[]).add(11);
+
+    // A real (tiny) service backs /epochs.
+    let g = generate(GraphFamily::Web, 7, 42);
+    let svc = CommunityService::new(g, ServiceConfig::default());
+    let state = ServeState {
+        snapshots: Some(svc.handle()),
+        summary: Arc::new(Mutex::new(svc.metrics().summary())),
+    };
+    let server = IntrospectionServer::start(0, state).expect("bind ephemeral loopback port");
+    let addr = server.local_addr();
+
+    let (head, body) = http_get(addr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "healthz head: {head}");
+    assert_eq!(body, "ok\n");
+
+    let (head, body) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"));
+    assert!(head.contains("text/plain"));
+    assert!(body.contains("obs_test_http_total 11"));
+    assert!(body.contains("# TYPE obs_test_http_total counter"));
+
+    let (head, body) = http_get(addr, "/metrics.json");
+    assert!(head.starts_with("HTTP/1.1 200"));
+    assert!(head.contains("application/json"));
+    assert!(body.contains("\"obs_test_http_total\""));
+    assert_eq!(body.matches('{').count(), body.matches('}').count());
+
+    let (head, body) = http_get(addr, "/epochs");
+    assert!(head.starts_with("HTTP/1.1 200"));
+    assert!(body.contains("\"epoch\":0"), "boot snapshot is epoch 0: {body}");
+    assert!(body.contains("\"vertices\":"));
+    assert!(body.contains("\"epoch_percentiles\""));
+    assert_eq!(body.matches('{').count(), body.matches('}').count());
+
+    let (head, _) = http_get(addr, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "unknown path head: {head}");
+
+    drop(server); // stop + join; the port must come free without hanging
+}
+
+#[test]
+fn louvain_result_is_bit_exact_with_registry_disabled() {
+    let _guard = flag_lock();
+    let g = generate(GraphFamily::Web, 9, 42);
+    let params = LouvainParams::with_threads(2);
+
+    obs::set_enabled(true);
+    let on = GveLouvain::new(params.clone()).run(&g);
+    obs::set_enabled(false);
+    let off = GveLouvain::new(params).run(&g);
+    obs::set_enabled(true);
+
+    assert_eq!(on.membership, off.membership, "membership must not depend on metrics");
+    assert_eq!(
+        on.modularity.to_bits(),
+        off.modularity.to_bits(),
+        "modularity must be bit-identical"
+    );
+    assert_eq!(on.passes, off.passes);
+    assert_eq!(on.num_communities, off.num_communities);
+}
