@@ -1,6 +1,7 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
 //! cells, PR 2 dynamic cells, PR 3 service cells, PR 6 scan-engine
-//! cells, PR 7 trace cells, PR 8 metrics cells + regression gate).
+//! cells, PR 7 trace cells, PR 8 metrics cells + regression gate,
+//! PR 9 server cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
 //! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
@@ -17,21 +18,28 @@
 //! scenario — the live registry's zero-cost contract, measured: the
 //! same web run with the metrics registry enabled (the default) vs
 //! disabled, reported as an overhead % that should sit inside noise
-//! (< 1%).  Output is a `BENCH_PR8.json` — the fixed yardstick future
-//! PRs compare against.  Hand-rolled JSON writer; the reader for the
-//! gate below is `bench::json` (the offline registry has no serde).
+//! (< 1%).  Since PR 9 there is a `"server"` scenario — the network
+//! serving subsystem, measured end to end: the dynamic timeline
+//! streamed through a live loopback `LouvainServer` as binary Ops
+//! frames (wire path: framing, the bounded op queue, the single-writer
+//! ingest thread, acks) vs the same batches through
+//! `coordinator::service::replay_service` in process (direct path),
+//! reported as ops/sec per path plus the wire overhead %.  Output is a
+//! `BENCH_PR9.json` — the fixed yardstick future PRs compare against.
+//! Hand-rolled JSON writer; the reader for the gate below is
+//! `bench::json` (the offline registry has no serde).
 //!
 //! Usage (see also `scripts/bench_smoke.sh` and the `bench-smoke`
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR8.json
+//! bench_smoke [OUT.json]          # default BENCH_PR9.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! bench_smoke --trace slowest.json        # Chrome trace of the
 //!                                         # slowest static cell
-//! bench_smoke --baseline BENCH_PR8.json   # regression gate
-//! bench_smoke --baseline BENCH_PR8.json --noise-pct 15
+//! bench_smoke --baseline BENCH_PR9.json   # regression gate
+//! bench_smoke --baseline BENCH_PR9.json --noise-pct 15
 //! ```
 //!
 //! `--baseline FILE` (PR 8) turns the run into a gate: after writing
@@ -44,8 +52,8 @@
 //! on the baseline commit:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR8_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR8.json --baseline BENCH_PR8_baseline.json
+//! git stash && cargo bench-smoke BENCH_PR9_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR9.json --baseline BENCH_PR9_baseline.json
 //! ```
 
 use gve_louvain::bench::json::Json;
@@ -54,11 +62,13 @@ use gve_louvain::coordinator::cli::Opts;
 use gve_louvain::coordinator::dynamic::{churn_timeline, replay_timeline, summarize};
 use gve_louvain::coordinator::metrics::{edges_per_sec, median};
 use gve_louvain::coordinator::service::{replay_service, summarize_service};
+use gve_louvain::graph::delta::StreamOp;
 use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::louvain::{gve::GveLouvain, params::LouvainParams};
 use gve_louvain::parallel::Schedule;
-use gve_louvain::service::{BatchPolicy, ServiceConfig};
+use gve_louvain::server::{Client, LouvainServer, ServerConfig};
+use gve_louvain::service::{BatchPolicy, CommunityService, ServiceConfig};
 use gve_louvain::obs;
 use gve_louvain::trace::{chrome, report, TraceSession};
 use std::fmt::Write as _;
@@ -135,6 +145,21 @@ struct TraceCell {
     mean_efficiency: f64,
 }
 
+/// PR 9 server cell: the wire's cost, measured.  The same pre-cut
+/// churn timeline pushed through a live loopback `LouvainServer`
+/// (framing + bounded queue + single-writer ingest thread + acks) vs
+/// `replay_service`'s in-process `ingest_batch` loop; `overhead_pct`
+/// is the wall-time cost of the network path for identical work.
+struct ServerCell {
+    path: &'static str,
+    threads: usize,
+    epochs: u64,
+    total_ops: usize,
+    wall_ns: u64,
+    ops_per_sec: f64,
+    final_modularity: f64,
+}
+
 /// PR 8 metrics cell: the live registry's overhead contract, measured.
 /// Same shape as the trace cell — web family, top thread count —
 /// with the process-wide metrics registry enabled (the default) vs
@@ -160,7 +185,7 @@ fn main() {
         .positional
         .first()
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR8.json".into());
+        .unwrap_or_else(|| "BENCH_PR9.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -452,9 +477,92 @@ fn main() {
         );
     }
 
+    // --- Server scenario (PR 9): the wire's cost, measured.  The same
+    // pre-cut churn timeline twice — once through a live loopback
+    // `LouvainServer` (binary Ops frames, explicit Commit per batch so
+    // the daemon cuts exactly the timeline's epochs) and once through
+    // the in-process `ingest_batch` loop `replay_service` uses.  Both
+    // timers cover ingest through the final published epoch (the
+    // client's `finish()` drains the server's final ack), and both
+    // exclude the boot detection, which every config pays identically.
+    let mut server_cells: Vec<ServerCell> = Vec::new();
+    {
+        let g0 = generate(GraphFamily::Web, scale, seed);
+        let tl = churn_timeline(&g0, DYN_BATCHES, DYN_FRAC, seed);
+        let total_ops: usize = tl.batches.iter().map(|b| b.len()).sum();
+        let frames: Vec<Vec<StreamOp>> = tl
+            .batches
+            .iter()
+            .map(|b| b.to_ops().chain(std::iter::once(StreamOp::Commit)).collect())
+            .collect();
+        for threads in THREADS {
+            let cfg = ServiceConfig {
+                params: LouvainParams::with_threads(threads),
+                strategy: SeedStrategy::DeltaScreening,
+                // Only the explicit Commits cut epochs on the wire.
+                policy: BatchPolicy::by_ops(usize::MAX / 2),
+                ..Default::default()
+            };
+
+            // Direct path: boot outside the timer, then ingest_batch.
+            let mut svc = CommunityService::new(g0.clone(), cfg.clone());
+            let t0 = Instant::now();
+            let epochs: Vec<_> = tl.batches.iter().map(|b| svc.ingest_batch(b)).collect();
+            let direct_wall_ns = (t0.elapsed().as_nanos() as u64).max(1);
+            let direct = ServerCell {
+                path: "direct",
+                threads,
+                epochs: epochs.len() as u64,
+                total_ops,
+                wall_ns: direct_wall_ns,
+                ops_per_sec: total_ops as f64 * 1e9 / direct_wall_ns as f64,
+                final_modularity: epochs.last().map(|e| e.modularity).unwrap_or(0.0),
+            };
+
+            // Wire path: live loopback server, boot outside the timer.
+            let server = LouvainServer::start(
+                g0.clone(),
+                ServerConfig { service: cfg, ..Default::default() },
+            )
+            .expect("bind loopback server");
+            let mut client = Client::connect(server.local_addr()).expect("connect ingest client");
+            let t0 = Instant::now();
+            for ops in &frames {
+                client.send_ops(ops).expect("stream ops frame");
+            }
+            let rep = client.finish().expect("drain final ack");
+            let wire_wall_ns = (t0.elapsed().as_nanos() as u64).max(1);
+            let handle = server.handle();
+            let report = server.shutdown();
+            assert_eq!(rep.accepted as usize, total_ops, "wire replay lost ops");
+            let wire = ServerCell {
+                path: "wire",
+                threads,
+                epochs: report.epochs_published,
+                total_ops,
+                wall_ns: wire_wall_ns,
+                ops_per_sec: total_ops as f64 * 1e9 / wire_wall_ns as f64,
+                final_modularity: handle.load().modularity,
+            };
+            eprintln!(
+                "server t={} direct {:>12} ns  wire {:>12} ns  overhead {:+.1}%  \
+                 {:>9.0} vs {:>9.0} ops/s  Q={:.4}",
+                threads,
+                direct.wall_ns,
+                wire.wall_ns,
+                (wire.wall_ns as f64 / direct.wall_ns as f64 - 1.0) * 100.0,
+                wire.ops_per_sec,
+                direct.ops_per_sec,
+                wire.final_modularity,
+            );
+            server_cells.push(direct);
+            server_cells.push(wire);
+        }
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr8_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr9_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -565,12 +673,33 @@ fn main() {
     let _ = writeln!(
         json,
         "  \"metrics\": {{\"family\": \"web\", \"threads\": {}, \"median_off_ns\": {}, \
-         \"median_on_ns\": {}, \"overhead_pct\": {:.2}}}",
+         \"median_on_ns\": {}, \"overhead_pct\": {:.2}}},",
         metrics_cell.threads,
         metrics_cell.median_off_ns,
         metrics_cell.median_on_ns,
         metrics_cell.overhead_pct,
     );
+    let _ = writeln!(
+        json,
+        "  \"server\": {{\"family\": \"web\", \"batches\": {DYN_BATCHES}, \"frac\": {DYN_FRAC}, \"results\": ["
+    );
+    for (i, c) in server_cells.iter().enumerate() {
+        let comma = if i + 1 < server_cells.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"path\": \"{}\", \"threads\": {}, \"epochs\": {}, \"total_ops\": {}, \
+             \"wall_ns\": {}, \"ops_per_sec\": {:.1}, \"final_modularity\": {:.6}}}{}",
+            c.path,
+            c.threads,
+            c.epochs,
+            c.total_ops,
+            c.wall_ns,
+            c.ops_per_sec,
+            c.final_modularity,
+            comma
+        );
+    }
+    let _ = writeln!(json, "  ]}}");
     let _ = writeln!(json, "}}");
 
     std::fs::write(&out_path, &json).unwrap_or_else(|e| {
@@ -659,6 +788,14 @@ fn collect_rates(doc: &Json) -> Vec<(String, f64)> {
             {
                 out.push((format!("{section}/{s}/t{t}"), r));
             }
+        }
+    }
+    let server = doc.get("server").and_then(|s| s.get("results")).and_then(Json::as_arr);
+    for c in server.unwrap_or(&[]) {
+        if let (Some(p), Some(t), Some(r)) =
+            (c.str("path"), c.num("threads"), c.num("ops_per_sec"))
+        {
+            out.push((format!("server/{p}/t{t}"), r));
         }
     }
     let scan = doc.get("scan_engine").and_then(|s| s.get("results")).and_then(Json::as_arr);

@@ -22,17 +22,20 @@
 //! busy slices) into Chrome trace-event JSON — open it at
 //! <https://ui.perfetto.dev>.
 //!
-//! `--http-port N` (PR 8) starts the live introspection endpoint on
-//! `127.0.0.1:N` (0 = OS-assigned, printed at boot) for the whole
-//! replay: `/metrics` (Prometheus text), `/metrics.json`, `/healthz`,
-//! and `/epochs` (current epoch snapshot + latency percentiles +
-//! drift).  The server runs on its own thread and reads through the
-//! lock-free snapshot handle, so scraping never blocks ingest.  Replays
-//! finish fast; `--linger SECS` keeps the process (and the endpoint)
-//! alive after the final epoch so a scraper can catch the end state:
+//! `--http-bind ADDR` (PR 8, address knob PR 9) starts the live
+//! introspection endpoint for the whole replay: `/metrics` (Prometheus
+//! text), `/metrics.json`, `/healthz`, and `/epochs` (current epoch
+//! snapshot + latency percentiles + drift + the last-32-epoch ring).
+//! `ADDR` is either a bare port — binds loopback, 0 = OS-assigned,
+//! printed at boot — or a full `host:port`; `--http-port N` stays as
+//! an alias for `--http-bind N`.  The server runs on its own thread
+//! and reads through the lock-free snapshot handle, so scraping never
+//! blocks ingest.  Replays finish fast; `--linger SECS` keeps the
+//! process (and the endpoint) alive after the final epoch so a scraper
+//! can catch the end state:
 //!
 //! ```text
-//! louvain_serve --family web --scale 12 --http-port 9184 --linger 60 &
+//! louvain_serve --family web --scale 12 --http-bind 9184 --linger 60 &
 //! curl -s localhost:9184/epochs | python3 -m json.tool
 //! curl -s localhost:9184/metrics | grep gve_service_
 //! ```
@@ -41,7 +44,7 @@
 //! no clap.
 
 use anyhow::{Context, Result};
-use gve_louvain::coordinator::cli::{louvain_params_from, Opts};
+use gve_louvain::coordinator::cli::{louvain_params_from, parse_bind, Opts};
 use gve_louvain::coordinator::dynamic::churn_timeline;
 use gve_louvain::coordinator::metrics::{edges_per_sec, fmt_ns};
 use gve_louvain::coordinator::report::Table;
@@ -50,7 +53,9 @@ use gve_louvain::graph::generators::{generate, GraphFamily};
 use gve_louvain::graph::io::{load, write_update_stream, UpdateStreamReader};
 use gve_louvain::louvain::dynamic::SeedStrategy;
 use gve_louvain::obs::http::{IntrospectionServer, ServeState};
-use gve_louvain::service::{BatchPolicy, CommunityService, EpochSnapshot, ServiceConfig};
+use gve_louvain::service::{
+    BatchPolicy, CommunityService, EpochSnapshot, RecentEpoch, RecentEpochs, ServiceConfig,
+};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -130,17 +135,23 @@ fn run(opts: &Opts) -> Result<()> {
     // lock-free snapshot handle plus a `Copy` summary struct this loop
     // overwrites after each publish — scrapes never block ingest.
     let summary = Arc::new(Mutex::new(svc.metrics().summary()));
-    let server = match opts.flags.get("http-port") {
-        Some(p) => {
-            let port: u16 = p
-                .parse()
-                .with_context(|| format!("--http-port {p:?} is not a port number"))?;
+    let recent = Arc::new(Mutex::new(RecentEpochs::default()));
+    recent.lock().unwrap().push(RecentEpoch::of(&boot));
+    let http_bind = opts
+        .flags
+        .get("http-bind")
+        .or_else(|| opts.flags.get("http-port"))
+        .cloned();
+    let server = match http_bind {
+        Some(addr) => {
+            let bind = parse_bind(&addr).map_err(anyhow::Error::msg)?;
             let state = ServeState {
                 snapshots: Some(svc.handle()),
                 summary: Arc::clone(&summary),
+                recent: Arc::clone(&recent),
             };
-            let srv = IntrospectionServer::start(port, state)
-                .with_context(|| format!("binding introspection server on 127.0.0.1:{port}"))?;
+            let srv = IntrospectionServer::start_on(bind, state)
+                .with_context(|| format!("binding introspection server on {bind}"))?;
             eprintln!(
                 "introspection: http://{}  (/metrics /metrics.json /healthz /epochs)",
                 srv.local_addr()
@@ -162,11 +173,13 @@ fn run(opts: &Opts) -> Result<()> {
     let reader = UpdateStreamReader::open(&stream_path)?;
     for op in reader {
         if let Some(snap) = svc.submit(op?) {
-            epochs.push(snap);
             *summary.lock().unwrap() = svc.metrics().summary();
+            recent.lock().unwrap().push(RecentEpoch::of(&snap));
+            epochs.push(snap);
         }
     }
     if let Some(snap) = svc.flush() {
+        recent.lock().unwrap().push(RecentEpoch::of(&snap));
         epochs.push(snap);
     }
     *summary.lock().unwrap() = svc.metrics().summary();

@@ -1,0 +1,123 @@
+//! `louvain_server` — the long-running network daemon (PR 9 tentpole).
+//!
+//! Boots a [`CommunityService`] on a graph and serves the wire
+//! protocol: ingest connections stream `.ups` ops (add / delete /
+//! commit) in binary frames and get cumulative acks back; subscriber
+//! connections receive the epoch stream as compact membership deltas
+//! (full snapshots on subscribe and on renumber-invalidating epochs).
+//! A timer tick drives the service's max-latency flush bound, so
+//! batches cut on time even when every stream goes quiet.
+//!
+//! ```text
+//! louvain_server --family web --scale 12 --bind 9800 --http-bind 9184
+//! louvain_server --input graph.bin --strategy delta --max-ops 2048 \
+//!                --max-latency-ms 50 --threads 4
+//! louvain_server --family web --duration 60     # exit after a minute
+//! ```
+//!
+//! `--bind` / `--http-bind` take either a bare port (binds loopback —
+//! the safe default for ports exposing process internals) or a full
+//! `host:port` address.  `--http-bind` additionally starts the PR-8
+//! introspection endpoint (`/metrics`, `/metrics.json`, `/healthz`,
+//! `/epochs` with the last-32-epoch ring) backed by the same state the
+//! ingest thread keeps fresh.  Wire-protocol spec:
+//! `rust/src/server/README.md`.
+
+use anyhow::{Context, Result};
+use gve_louvain::coordinator::cli::{louvain_params_from, parse_bind, Opts};
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::io::load;
+use gve_louvain::louvain::dynamic::SeedStrategy;
+use gve_louvain::obs::http::IntrospectionServer;
+use gve_louvain::server::{LouvainServer, ServerConfig};
+use gve_louvain::service::{BatchPolicy, ServiceConfig};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&Opts::parse(&args)) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(opts: &Opts) -> Result<()> {
+    let seed = opts.get_i("seed", 42) as u64;
+    let strategy = SeedStrategy::parse(&opts.get("strategy", "delta"))
+        .context("--strategy must be full | naive | delta")?;
+
+    let (g0, g_name) = if let Some(path) = opts.flags.get("input") {
+        (load(&PathBuf::from(path))?, path.clone())
+    } else {
+        let fam = opts.get("family", "web");
+        let family = GraphFamily::parse(&fam).with_context(|| format!("unknown family {fam:?}"))?;
+        let scale = opts.get_i("scale", 12) as u32;
+        (generate(family, scale, seed), format!("{fam}-s{scale}"))
+    };
+
+    let max_ops = opts.get_i("max-ops", 4096).max(1) as usize;
+    let policy = match opts.get_i("max-latency-ms", 0) {
+        ms if ms > 0 => BatchPolicy { max_ops, max_latency: Duration::from_millis(ms as u64) },
+        _ => BatchPolicy::by_ops(max_ops),
+    };
+    let cfg = ServerConfig {
+        bind: parse_bind(&opts.get("bind", "0")).map_err(anyhow::Error::msg)?,
+        service: ServiceConfig {
+            params: louvain_params_from(opts),
+            strategy,
+            policy,
+            ..Default::default()
+        },
+        queue_depth: opts.get_i("queue-depth", 256).max(1) as usize,
+        outbox_depth: opts.get_i("outbox-depth", 64).max(2) as usize,
+        tick: Duration::from_millis(opts.get_i("tick-ms", 5).max(1) as u64),
+    };
+
+    let server = LouvainServer::start(g0, cfg).context("starting louvain server")?;
+    {
+        let boot = server.handle().load();
+        eprintln!(
+            "serving {g_name} on {}: |V|={} |E|={} Q={:.4} |Γ|={} ({})",
+            server.local_addr(),
+            boot.vertices,
+            boot.edges,
+            boot.modularity,
+            boot.num_communities(),
+            strategy.name(),
+        );
+    }
+
+    // Optional introspection endpoint, sharing the daemon's live state.
+    let http = match opts.flags.get("http-bind") {
+        Some(addr) => {
+            let bind = parse_bind(addr).map_err(anyhow::Error::msg)?;
+            let srv = IntrospectionServer::start_on(bind, server.serve_state())
+                .with_context(|| format!("binding introspection server on {bind}"))?;
+            eprintln!(
+                "introspection: http://{}  (/metrics /metrics.json /healthz /epochs)",
+                srv.local_addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
+
+    let duration = opts.get_i("duration", 0).max(0) as u64;
+    if duration > 0 {
+        std::thread::sleep(Duration::from_secs(duration));
+    } else {
+        eprintln!("running until killed (pass --duration SECS to exit on a timer)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+
+    drop(http);
+    let report = server.shutdown();
+    eprintln!(
+        "drained: {} ops accepted, {} rejected, {} epochs published (final epoch {})",
+        report.ops_accepted, report.ops_rejected, report.epochs_published, report.final_epoch,
+    );
+    Ok(())
+}

@@ -71,6 +71,18 @@ pub fn louvain_params_from(opts: &Opts) -> crate::louvain::LouvainParams {
     }
 }
 
+/// Parse a bind address for the serving / introspection listeners
+/// (PR 9): either a full `host:port` socket address or a bare port,
+/// which binds loopback — the safe default for ports that expose
+/// process internals.  `0` (the port) still means OS-assigned.
+pub fn parse_bind(s: &str) -> Result<std::net::SocketAddr, String> {
+    if let Ok(port) = s.parse::<u16>() {
+        return Ok(std::net::SocketAddr::from(([127, 0, 0, 1], port)));
+    }
+    s.parse::<std::net::SocketAddr>()
+        .map_err(|e| format!("bind address {s:?} is neither a port nor host:port ({e})"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +109,17 @@ mod tests {
         assert_eq!(o.get_f("other", 0.25), 0.25);
         assert_eq!(o.get("verbose", "false"), "true");
         assert_eq!(o.get_i("frac", 9), 9, "non-integer falls back to default");
+    }
+
+    #[test]
+    fn parse_bind_accepts_ports_and_socket_addrs() {
+        assert_eq!(parse_bind("9184").unwrap(), "127.0.0.1:9184".parse().unwrap());
+        assert_eq!(parse_bind("0").unwrap(), "127.0.0.1:0".parse().unwrap());
+        assert_eq!(parse_bind("0.0.0.0:7000").unwrap(), "0.0.0.0:7000".parse().unwrap());
+        assert_eq!(parse_bind("[::1]:80").unwrap(), "[::1]:80".parse().unwrap());
+        assert!(parse_bind("not-an-addr").is_err());
+        assert!(parse_bind("127.0.0.1").is_err(), "host without port");
+        assert!(parse_bind("99999").is_err(), "out-of-range port is not an addr either");
     }
 
     #[test]

@@ -285,6 +285,102 @@ pub fn read_update_stream(path: &Path) -> Result<Vec<StreamOp>> {
     UpdateStreamReader::open(path)?.collect()
 }
 
+// ---------------------------------------------------------------------------
+// Binary op codec (PR 9): the `.ups` vocabulary on the wire.
+//
+// The serving daemon's Ops frames carry the same three operations as
+// the text format, under the same tag bytes (`a`/`d`/`c`), in a fixed
+// little-endian layout:
+//
+//   insert:  b'a'  u:u32le  v:u32le  w:f32le     (13 bytes)
+//   delete:  b'd'  u:u32le  v:u32le              (9 bytes)
+//   commit:  b'c'                                (1 byte)
+//
+// Sharing tag bytes keeps the two encodings one vocabulary: a hex dump
+// of a wire frame reads like a `.ups` file, and the decoder's error
+// space is identical (unknown tag, truncated fields).
+
+/// Encoded size of one op in the binary codec.
+pub fn encoded_op_len(op: &StreamOp) -> usize {
+    match op {
+        StreamOp::Insert(..) => 13,
+        StreamOp::Delete(..) => 9,
+        StreamOp::Commit => 1,
+    }
+}
+
+/// Append one op's binary encoding to `buf`.
+pub fn encode_op(op: &StreamOp, buf: &mut Vec<u8>) {
+    match *op {
+        StreamOp::Insert(u, v, w) => {
+            buf.push(b'a');
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        StreamOp::Delete(u, v) => {
+            buf.push(b'd');
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        StreamOp::Commit => buf.push(b'c'),
+    }
+}
+
+/// Encode a run of ops back to back (an Ops-frame payload body).
+pub fn encode_ops<'a>(ops: impl IntoIterator<Item = &'a StreamOp>) -> Vec<u8> {
+    let mut buf = Vec::new();
+    for op in ops {
+        encode_op(op, &mut buf);
+    }
+    buf
+}
+
+/// Decode one op from the front of `buf`; returns the op and the bytes
+/// consumed.  Errors on an unknown tag or truncated fields — the same
+/// failure modes as the text reader, minus the line numbers (the wire
+/// layer supplies frame context instead).
+pub fn decode_op(buf: &[u8]) -> Result<(StreamOp, usize)> {
+    let tag = *buf.first().context("empty op buffer")?;
+    let u32_at = |off: usize| -> Result<u32> {
+        let raw: [u8; 4] = buf
+            .get(off..off + 4)
+            .with_context(|| format!("op {:?} truncated at byte {off}", tag as char))?
+            .try_into()
+            .unwrap();
+        Ok(u32::from_le_bytes(raw))
+    };
+    match tag {
+        b'a' => {
+            let u = u32_at(1)?;
+            let v = u32_at(5)?;
+            let w = f32::from_le_bytes(u32_at(9)?.to_le_bytes());
+            Ok((StreamOp::Insert(u, v, w), 13))
+        }
+        b'd' => Ok((StreamOp::Delete(u32_at(1)?, u32_at(5)?), 9)),
+        b'c' => Ok((StreamOp::Commit, 1)),
+        other => bail!("unknown op tag {other:#04x}"),
+    }
+}
+
+/// Decode exactly `count` ops from `buf`, requiring the buffer to be
+/// fully consumed (frame payloads carry their op count up front, so
+/// trailing garbage is a protocol error, not padding).
+pub fn decode_ops(buf: &[u8], count: usize) -> Result<Vec<StreamOp>> {
+    let mut ops = Vec::with_capacity(count.min(1 << 16));
+    let mut off = 0usize;
+    for i in 0..count {
+        let (op, used) =
+            decode_op(&buf[off..]).with_context(|| format!("op {i} of {count}"))?;
+        ops.push(op);
+        off += used;
+    }
+    if off != buf.len() {
+        bail!("{} trailing bytes after {count} ops", buf.len() - off);
+    }
+    Ok(ops)
+}
+
 /// Load any supported format by extension (`.mtx`, `.bin`, else edge list).
 pub fn load(path: &Path) -> Result<Csr> {
     match path.extension().and_then(|e| e.to_str()) {
@@ -406,6 +502,39 @@ mod tests {
         std::fs::write(&p3, "a 0 1\nc\na 12 x 1.0\n").unwrap();
         let err = read_update_stream(&p3).unwrap_err().to_string();
         assert!(err.contains("line 3") && err.contains('v'), "{err}");
+    }
+
+    #[test]
+    fn binary_op_codec_round_trips() {
+        let ops = vec![
+            StreamOp::Insert(0, u32::MAX, -2.5),
+            StreamOp::Delete(7, 0),
+            StreamOp::Commit,
+            StreamOp::Insert(1, 2, 1.0),
+        ];
+        let buf = encode_ops(&ops);
+        assert_eq!(buf.len(), ops.iter().map(encoded_op_len).sum::<usize>());
+        // Tag bytes match the `.ups` text vocabulary.
+        assert_eq!(buf[0], b'a');
+        assert_eq!(buf[13], b'd');
+        assert_eq!(buf[22], b'c');
+        assert_eq!(decode_ops(&buf, ops.len()).unwrap(), ops);
+    }
+
+    #[test]
+    fn binary_op_codec_rejects_malformed_input() {
+        // Unknown tag.
+        assert!(decode_op(b"x123").is_err());
+        // Truncated insert.
+        let mut buf = Vec::new();
+        encode_op(&StreamOp::Insert(1, 2, 3.0), &mut buf);
+        assert!(decode_op(&buf[..7]).is_err());
+        // Count / payload mismatches both directions.
+        assert!(decode_ops(&buf, 2).is_err(), "count larger than payload");
+        let mut extra = buf.clone();
+        extra.push(b'c');
+        assert!(decode_ops(&extra, 1).is_err(), "trailing bytes");
+        assert!(decode_ops(&[], 0).unwrap().is_empty());
     }
 
     #[test]

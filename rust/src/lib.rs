@@ -32,6 +32,12 @@
 //!   streaming ingest with batch coalescing, incremental re-detection
 //!   over the dynamic subsystem, and an epoch-snapshot query surface —
 //!   the north-star serving story.
+//! * [`server`] — the network serving subsystem (PR 9): a length-
+//!   prefixed binary wire protocol speaking the `.ups` op vocabulary,
+//!   a single-writer ingest daemon (`louvain_server`) wrapping
+//!   [`service`] behind a bounded op queue with timer-driven
+//!   max-latency flushes, epoch-delta subscription streams, and the
+//!   in-process client the loopback tests and bench drive.
 //! * [`obs`] — live telemetry (PR 8): a process-wide lock-free metrics
 //!   registry (sharded counters/gauges, log2 latency histograms) with
 //!   Prometheus text + JSON renderers, byte-level memory accounting for
@@ -75,6 +81,7 @@ pub mod obs;
 pub mod parallel;
 pub mod prop;
 pub mod runtime;
+pub mod server;
 pub mod service;
 pub mod trace;
 

@@ -23,7 +23,7 @@
 //! not a public API.  Bind port 0 to let the OS pick (tests do).
 
 use super::{registry, render};
-use crate::service::metrics::ServiceSummary;
+use crate::service::metrics::{RecentEpochs, ServiceSummary};
 use crate::service::SnapshotHandle;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -41,6 +41,10 @@ pub struct ServeState {
     /// Latest derived metrics, overwritten by the ingest loop after
     /// each publish (`ServiceMetrics::summary`).
     pub summary: Arc<Mutex<ServiceSummary>>,
+    /// Ring of the last 32 published epochs (PR 9): the ingest loop
+    /// pushes one entry per publish so scrapers catch bursts between
+    /// polls instead of only the latest epoch.
+    pub recent: Arc<Mutex<RecentEpochs>>,
 }
 
 /// Handle to the serving thread; dropping it stops the server.
@@ -54,7 +58,16 @@ impl IntrospectionServer {
     /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving on a
     /// dedicated `gve-obs-http` thread.
     pub fn start(port: u16, state: ServeState) -> std::io::Result<Self> {
-        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        Self::start_on(SocketAddr::from(([127, 0, 0, 1], port)), state)
+    }
+
+    /// [`Self::start`] with an explicit bind address (PR 9 `--http-bind`
+    /// knob).  Loopback remains the default everywhere; binding wider
+    /// is an explicit operator decision — the endpoints expose process
+    /// internals, so treat a non-loopback bind like any other debug
+    /// port.
+    pub fn start_on(bind: SocketAddr, state: ServeState) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
@@ -168,11 +181,35 @@ fn epochs_json(state: &ServeState) -> String {
         }
         None => "\"epoch\":null".to_string(),
     };
+    let recent = {
+        let ring = state.recent.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::from("[");
+        for (i, e) in ring.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            use std::fmt::Write as _;
+            let _ = write!(
+                out,
+                "{{\"epoch\":{},\"vertices\":{},\"edges\":{},\"modularity\":{:.6},\
+                 \"num_communities\":{},\"batch_ops\":{},\"wall_ns\":{}}}",
+                e.epoch,
+                e.vertices,
+                e.edges,
+                e.modularity,
+                e.num_communities,
+                e.stats.batch_ops,
+                e.stats.wall_ns(),
+            );
+        }
+        out.push(']');
+        out
+    };
     format!(
         "{{{snap_part},\"epochs_published\":{},\"ops_ingested\":{},\"ops_rejected\":{},\
          \"ingest_ops_per_sec\":{:.1},\"epoch_percentiles\":{{\"p50\":{},\"p95\":{},\"p99\":{}}},\
          \"median_epoch_ns\":{},\"max_epoch_ns\":{},\"initial_modularity\":{:.6},\
-         \"last_modularity\":{:.6},\"quality_drift\":{:.6}}}",
+         \"last_modularity\":{:.6},\"quality_drift\":{:.6},\"recent\":{recent}}}",
         summary.epochs_published,
         summary.ops_ingested,
         summary.ops_rejected,
@@ -196,7 +233,24 @@ mod tests {
     fn epochs_json_without_a_service_is_still_valid() {
         let body = epochs_json(&ServeState::default());
         assert!(body.starts_with("{\"epoch\":null,"));
+        assert!(body.ends_with("\"recent\":[]}"));
         assert_eq!(body.matches('{').count(), body.matches('}').count());
+    }
+
+    #[test]
+    fn epochs_json_renders_the_recent_ring() {
+        use crate::service::metrics::RecentEpoch;
+        let state = ServeState::default();
+        {
+            let mut ring = state.recent.lock().unwrap();
+            for i in 0..3u64 {
+                ring.push(RecentEpoch { epoch: i, vertices: 10, ..Default::default() });
+            }
+        }
+        let body = epochs_json(&state);
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert!(body.contains("\"recent\":[{\"epoch\":0,"), "{body}");
+        assert!(body.contains("\"epoch\":2,"), "{body}");
     }
 
     #[test]

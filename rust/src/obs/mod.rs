@@ -526,6 +526,53 @@ pub mod sites {
         "Trace events dropped by saturated per-thread sinks"
     );
 
+    // Serving daemon (server::daemon, PR 9).
+    counter_site!(
+        server_connections_opened,
+        "gve_server_connections_opened_total",
+        "Wire-protocol connections accepted by the serving daemon"
+    );
+    gauge_site!(
+        server_connections_active,
+        "gve_server_connections_active",
+        "Wire-protocol connections currently open"
+    );
+    counter_site!(
+        server_frames_rx,
+        "gve_server_frames_rx_total",
+        "Wire frames received across all connections"
+    );
+    counter_site!(
+        server_ops_rx,
+        "gve_server_ops_rx_total",
+        "Stream ops received in Ops frames (pre-admission)"
+    );
+    counter_site!(
+        server_ingest_stalls,
+        "gve_server_ingest_stalls_total",
+        "Reader threads that blocked on the full ingest queue"
+    );
+    counter_site!(
+        server_deltas_tx,
+        "gve_server_deltas_tx_total",
+        "Epoch delta frames fanned out to subscribers"
+    );
+    counter_site!(
+        server_snapshots_tx,
+        "gve_server_snapshots_tx_total",
+        "Full snapshot frames sent (subscribe priming + major deltas)"
+    );
+    counter_site!(
+        server_subscribers_dropped,
+        "gve_server_subscribers_dropped_total",
+        "Subscribers dropped for not draining their outbox"
+    );
+    counter_site!(
+        server_errors_tx,
+        "gve_server_errors_tx_total",
+        "Error frames sent before closing a misbehaving connection"
+    );
+
     /// Memory-accounting byte gauge, labelled by component; `kind` is
     /// `"reserved"` (buffer capacity) or `"used"` (logical length).
     pub fn mem_bytes(kind: &'static str, component: &'static str) -> Arc<Gauge> {

@@ -1,0 +1,283 @@
+//! Minimal wire-protocol client (PR 9): the ingest and subscribe halves
+//! the tests and the bench drive against a live [`LouvainServer`].
+//!
+//! [`Client`] is the write half: it streams Ops frames and respects the
+//! server's backpressure through an **ack window** — at most
+//! `ack_window` edge ops may be unacknowledged before `send_ops`
+//! blocks reading acks.  Combined with the server's bounded queue and
+//! the TCP window this bounds the bytes in flight end to end; no side
+//! ever buffers an unbounded backlog.
+//!
+//! [`Subscriber`] is the read half: it is primed with a full snapshot
+//! on connect and then folds every Delta frame into its mirror
+//! membership, so a consumer reconstructs each epoch *exactly* without
+//! ever re-reading a full membership (unless the server decides a full
+//! frame is cheaper — renumber-invalidating epochs).
+
+use super::frame::{
+    encode_frame, read_frame, Frame, Role, PROTOCOL_VERSION,
+};
+use crate::graph::delta::StreamOp;
+use crate::service::delta::EpochDelta;
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+
+/// Edge ops that may be in flight (sent, not yet acked) before
+/// [`Client::send_ops`] stalls to drain acks.
+pub const DEFAULT_ACK_WINDOW: u64 = 4096;
+
+/// Ingest-side connection: streams ops, tracks cumulative acks.
+pub struct Client {
+    stream: TcpStream,
+    server_epoch: u64,
+    /// Edge ops sent (commits excluded — they carry no ack weight).
+    sent: u64,
+    accepted: u64,
+    rejected: u64,
+    ack_window: u64,
+}
+
+/// What a cleanly finished ingest connection saw.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientReport {
+    /// Edge ops the server admitted from this connection.
+    pub accepted: u64,
+    /// Edge ops the growth guard rejected.
+    pub rejected: u64,
+    /// Latest epoch id carried by the final ack.
+    pub epoch: u64,
+}
+
+impl Client {
+    /// Connect, handshake (Hello → Welcome), default ack window.
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        Self::connect_with_window(addr, DEFAULT_ACK_WINDOW)
+    }
+
+    /// [`Self::connect`] with an explicit ack window (tests shrink it
+    /// to force the stall path).
+    pub fn connect_with_window(addr: SocketAddr, ack_window: u64) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr).context("connect to louvain server")?;
+        stream.set_nodelay(true)?;
+        stream.write_all(&encode_frame(&Frame::Hello { role: Role::Ingest }))?;
+        let server_epoch = expect_welcome(&mut stream)?;
+        Ok(Self {
+            stream,
+            server_epoch,
+            sent: 0,
+            accepted: 0,
+            rejected: 0,
+            ack_window: ack_window.max(1),
+        })
+    }
+
+    /// Epoch the server reported most recently (Welcome, then acks).
+    pub fn server_epoch(&self) -> u64 {
+        self.server_epoch
+    }
+
+    /// Cumulative `(accepted, rejected)` acknowledged so far.
+    pub fn acked(&self) -> (u64, u64) {
+        (self.accepted, self.rejected)
+    }
+
+    /// Edge ops sent but not yet acknowledged.
+    pub fn in_flight(&self) -> u64 {
+        self.sent - self.accepted - self.rejected
+    }
+
+    /// Send one Ops frame; stall on acks while the window is exceeded.
+    pub fn send_ops(&mut self, ops: &[StreamOp]) -> Result<()> {
+        self.stream.write_all(&encode_frame(&Frame::Ops { ops: ops.to_vec() }))?;
+        self.sent += ops.iter().filter(|o| !matches!(o, StreamOp::Commit)).count() as u64;
+        while self.in_flight() > self.ack_window {
+            self.read_ack()?;
+        }
+        Ok(())
+    }
+
+    /// Send an explicit epoch boundary ([`StreamOp::Commit`]).
+    pub fn commit(&mut self) -> Result<()> {
+        self.send_ops(&[StreamOp::Commit])
+    }
+
+    /// Block until every sent op has been acknowledged (admitted to the
+    /// server's pending batch or rejected) — without closing the
+    /// connection.  After this, dropping the connection cannot lose
+    /// anything: the drain-on-shutdown guarantee covers admitted ops.
+    pub fn sync(&mut self) -> Result<()> {
+        while self.in_flight() > 0 {
+            self.read_ack()?;
+        }
+        Ok(())
+    }
+
+    fn read_ack(&mut self) -> Result<()> {
+        match read_frame(&mut self.stream)? {
+            Some(Frame::Ack { accepted, rejected, epoch }) => {
+                self.accepted = accepted;
+                self.rejected = rejected;
+                self.server_epoch = epoch;
+                Ok(())
+            }
+            Some(Frame::Error { code, message }) => {
+                bail!("server error {code}: {message}")
+            }
+            Some(other) => bail!("expected ack, got {other:?}"),
+            None => bail!("server closed the connection mid-stream"),
+        }
+    }
+
+    /// Clean shutdown: send Bye, drain acks until every sent op is
+    /// accounted for (the server's final ack), report.
+    pub fn finish(mut self) -> Result<ClientReport> {
+        self.stream.write_all(&encode_frame(&Frame::Bye))?;
+        loop {
+            if self.accepted + self.rejected == self.sent {
+                break;
+            }
+            match read_frame(&mut self.stream)? {
+                Some(Frame::Ack { accepted, rejected, epoch }) => {
+                    self.accepted = accepted;
+                    self.rejected = rejected;
+                    self.server_epoch = epoch;
+                }
+                Some(Frame::Error { code, message }) => {
+                    bail!("server error {code}: {message}")
+                }
+                Some(other) => bail!("expected ack, got {other:?}"),
+                None => bail!(
+                    "server closed before acking everything ({} of {} edge ops)",
+                    self.accepted + self.rejected,
+                    self.sent
+                ),
+            }
+        }
+        Ok(ClientReport {
+            accepted: self.accepted,
+            rejected: self.rejected,
+            epoch: self.server_epoch,
+        })
+    }
+}
+
+/// One event off the subscription stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochUpdate {
+    pub epoch: u64,
+    /// Whether this arrived as a full Snapshot frame (subscribe
+    /// priming and renumber-invalidating epochs) or a compact Delta.
+    pub full: bool,
+    /// Vertices whose community changed (full frames count every
+    /// vertex — the mirror is rebuilt).
+    pub changed: usize,
+    pub modularity: f64,
+    pub num_communities: u32,
+}
+
+/// Subscribe-side connection: mirrors the membership epoch by epoch.
+pub struct Subscriber {
+    stream: TcpStream,
+    epoch: u64,
+    modularity: f64,
+    num_communities: u32,
+    membership: Vec<u32>,
+}
+
+impl Subscriber {
+    /// Connect, handshake, and prime on the initial full snapshot.
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr).context("connect to louvain server")?;
+        stream.set_nodelay(true)?;
+        stream.write_all(&encode_frame(&Frame::Hello { role: Role::Subscribe }))?;
+        expect_welcome(&mut stream)?;
+        match read_frame(&mut stream)? {
+            Some(Frame::Snapshot { epoch, num_communities, modularity, membership }) => {
+                Ok(Self { stream, epoch, modularity, num_communities, membership })
+            }
+            Some(Frame::Error { code, message }) => bail!("server error {code}: {message}"),
+            other => bail!("expected priming snapshot, got {other:?}"),
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn modularity(&self) -> f64 {
+        self.modularity
+    }
+
+    pub fn num_communities(&self) -> u32 {
+        self.num_communities
+    }
+
+    /// The mirror membership as of the last event.
+    pub fn membership(&self) -> &[u32] {
+        &self.membership
+    }
+
+    /// Block for the next epoch event; `None` on clean server close.
+    pub fn next_event(&mut self) -> Result<Option<EpochUpdate>> {
+        match read_frame(&mut self.stream)? {
+            None => Ok(None),
+            Some(Frame::Snapshot { epoch, num_communities, modularity, membership }) => {
+                let changed = membership.len();
+                self.epoch = epoch;
+                self.modularity = modularity;
+                self.num_communities = num_communities;
+                self.membership = membership;
+                Ok(Some(EpochUpdate { epoch, full: true, changed, modularity, num_communities }))
+            }
+            Some(Frame::Delta {
+                epoch,
+                base_epoch,
+                vertices,
+                num_communities,
+                modularity,
+                changes,
+            }) => {
+                if base_epoch != self.epoch {
+                    bail!(
+                        "delta base epoch {base_epoch} does not match mirror epoch {}",
+                        self.epoch
+                    );
+                }
+                if let Some(&(v, _)) = changes.iter().find(|&&(v, _)| v >= vertices) {
+                    bail!("delta change vertex {v} out of range (|V|={vertices})");
+                }
+                let changed = changes.len();
+                let delta = EpochDelta {
+                    epoch,
+                    base_epoch,
+                    vertices: vertices as usize,
+                    num_communities: num_communities as usize,
+                    modularity,
+                    changes,
+                };
+                delta.apply_to(&mut self.membership);
+                self.epoch = epoch;
+                self.modularity = modularity;
+                self.num_communities = num_communities;
+                Ok(Some(EpochUpdate { epoch, full: false, changed, modularity, num_communities }))
+            }
+            Some(Frame::Error { code, message }) => bail!("server error {code}: {message}"),
+            Some(other) => bail!("unexpected frame on subscription stream: {other:?}"),
+        }
+    }
+}
+
+/// Read the handshake answer; returns the server's current epoch.
+fn expect_welcome(stream: &mut TcpStream) -> Result<u64> {
+    match read_frame(stream)? {
+        Some(Frame::Welcome { version, epoch }) => {
+            if version != PROTOCOL_VERSION {
+                bail!("protocol version mismatch: server {version}, client {PROTOCOL_VERSION}");
+            }
+            Ok(epoch)
+        }
+        Some(Frame::Error { code, message }) => bail!("server error {code}: {message}"),
+        other => bail!("expected welcome, got {other:?}"),
+    }
+}

@@ -1,0 +1,589 @@
+//! The serving daemon: a [`CommunityService`] behind a TCP front end
+//! (PR 9 tentpole).
+//!
+//! ## Threading model
+//!
+//! The service keeps its PR-3 single-writer contract — exactly one
+//! thread ever holds `&mut CommunityService`:
+//!
+//! ```text
+//!  reader (per conn) ──┐
+//!  reader (per conn) ──┼── bounded sync_channel<Msg> ──▶ ingest thread
+//!  tick (timer)      ──┘                                  (owns the service)
+//!                                                             │ publishes
+//!  writer (per conn) ◀── bounded outbox<Arc<[u8]>> ───────────┘
+//! ```
+//!
+//! * **Readers** (one per connection) parse frames off the socket and
+//!   forward ops into the queue.  When the queue is full they block —
+//!   which stops reading that socket, fills the peer's TCP window and
+//!   surfaces to the client as an ack-window stall.  That is the whole
+//!   backpressure story: bounded queue, bounded outboxes, no unbounded
+//!   buffer anywhere.
+//! * **The ingest thread** constructs the service (boot detection runs
+//!   here), drains the queue, drives [`CommunityService::submit`], and
+//!   — on every published epoch — computes the membership delta vs the
+//!   previous snapshot and fans it out.  A timer thread injects
+//!   [`Msg::Tick`]s so [`CommunityService::poll`] runs even when every
+//!   stream goes quiet: the max-latency flush bound finally works
+//!   without an external driver loop (ROADMAP item).
+//! * **Writers** (one per connection) drain an outbox of pre-encoded
+//!   frames.  The ingest thread only ever `try_send`s into outboxes: a
+//!   subscriber that stops draining is dropped, never waited on.
+//!
+//! ## Shutdown drain
+//!
+//! [`LouvainServer::shutdown`] stops the accept loop, shuts down every
+//! socket, and joins the ingest thread.  `std::sync::mpsc` guarantees
+//! `recv` returns every message buffered before the last sender
+//! dropped, so ops already queued (and therefore acked or about to be
+//! acked) are applied, a final [`CommunityService::flush`] cuts any
+//! pending partial batch into a last epoch, and only then does the
+//! report come back: nothing acknowledged is ever lost.
+
+use super::frame::{encoded, Frame, FrameError, Role, ERR_UNEXPECTED_TYPE, PROTOCOL_VERSION};
+use crate::graph::delta::StreamOp;
+use crate::graph::Csr;
+use crate::obs::http::ServeState;
+use crate::obs::sites;
+use crate::service::delta::epoch_delta;
+use crate::service::metrics::RecentEpoch;
+use crate::service::{CommunityService, EpochSnapshot, ServiceConfig, SnapshotHandle};
+use crate::trace::{self, Category};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Everything configurable about a [`LouvainServer`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address; loopback + ephemeral port by default (tests and
+    /// local tooling resolve it via [`LouvainServer::local_addr`]).
+    pub bind: SocketAddr,
+    pub service: ServiceConfig,
+    /// Depth of the reader → ingest op queue (messages, not ops).
+    pub queue_depth: usize,
+    /// Depth of each connection's outbox (frames).
+    pub outbox_depth: usize,
+    /// Cadence of the timer tick driving [`CommunityService::poll`].
+    pub tick: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            bind: SocketAddr::from(([127, 0, 0, 1], 0)),
+            service: ServiceConfig::default(),
+            queue_depth: 256,
+            outbox_depth: 64,
+            tick: Duration::from_millis(5),
+        }
+    }
+}
+
+/// What the ingest thread reports when the daemon drains and stops.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerReport {
+    /// Edge ops admitted across all connections.
+    pub ops_accepted: u64,
+    /// Edge ops dropped by the growth guard.
+    pub ops_rejected: u64,
+    /// Update epochs published (boot excluded).
+    pub epochs_published: u64,
+    /// Last epoch id at shutdown.
+    pub final_epoch: u64,
+}
+
+/// Messages into the single-writer ingest thread.
+enum Msg {
+    Connect { conn: u64, role: Role, outbox: SyncSender<Arc<[u8]>> },
+    Ops { conn: u64, ops: Vec<StreamOp> },
+    Bye { conn: u64 },
+    Disconnect { conn: u64 },
+    Tick,
+}
+
+/// Per-ingest-connection admission state.
+struct ConnState {
+    outbox: SyncSender<Arc<[u8]>>,
+    accepted: u64,
+    rejected: u64,
+    /// An ack failed to enqueue; retry on the next tick.  Acks are
+    /// cumulative, so coalescing dropped ones is lossless.
+    ack_dirty: bool,
+}
+
+/// A running daemon; dropping it (or calling [`Self::shutdown`]) drains
+/// and stops every thread.
+pub struct LouvainServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    sockets: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    accept_join: Option<JoinHandle<()>>,
+    tick_join: Option<JoinHandle<()>>,
+    ingest_join: Option<JoinHandle<ServerReport>>,
+    handle: SnapshotHandle,
+    state: ServeState,
+}
+
+impl LouvainServer {
+    /// Bind, boot the service on `g0` (the initial detection runs on
+    /// the ingest thread; this call waits for epoch 0), and start
+    /// accepting connections.
+    pub fn start(g0: Csr, cfg: ServerConfig) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(cfg.bind)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let sockets: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::default();
+        let state = ServeState::default();
+
+        let (msg_tx, msg_rx) = sync_channel::<Msg>(cfg.queue_depth.max(1));
+        let (boot_tx, boot_rx) = std::sync::mpsc::channel::<SnapshotHandle>();
+
+        let ingest_join = {
+            let service_cfg = cfg.service.clone();
+            let summary = Arc::clone(&state.summary);
+            let recent = Arc::clone(&state.recent);
+            std::thread::Builder::new().name("gve-srv-ingest".into()).spawn(move || {
+                ingest_loop(g0, service_cfg, msg_rx, boot_tx, summary, recent)
+            })?
+        };
+        let handle = boot_rx.recv().map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::Other, "ingest thread died during boot")
+        })?;
+        let state = ServeState { snapshots: Some(Arc::clone(&handle)), ..state };
+
+        let tick_join = {
+            let stop = Arc::clone(&stop);
+            let tx = msg_tx.clone();
+            let tick = cfg.tick.max(Duration::from_millis(1));
+            std::thread::Builder::new().name("gve-srv-tick".into()).spawn(move || {
+                while !stop.load(Relaxed) {
+                    std::thread::sleep(tick);
+                    if tx.send(Msg::Tick).is_err() {
+                        break;
+                    }
+                }
+            })?
+        };
+
+        let accept_join = {
+            let stop = Arc::clone(&stop);
+            let sockets = Arc::clone(&sockets);
+            let outbox_depth = cfg.outbox_depth.max(2);
+            std::thread::Builder::new().name("gve-srv-accept".into()).spawn(move || {
+                accept_loop(listener, stop, sockets, msg_tx, outbox_depth)
+            })?
+        };
+
+        Ok(Self {
+            addr,
+            stop,
+            sockets,
+            accept_join: Some(accept_join),
+            tick_join: Some(tick_join),
+            ingest_join: Some(ingest_join),
+            handle,
+            state,
+        })
+    }
+
+    /// The bound address (resolves an ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Lock-free reader handle to the current epoch — the same query
+    /// surface in-process readers always had.
+    pub fn handle(&self) -> SnapshotHandle {
+        Arc::clone(&self.handle)
+    }
+
+    /// State for an [`IntrospectionServer`](crate::obs::http::IntrospectionServer):
+    /// the ingest thread keeps the summary and the recent-epoch ring
+    /// fresh, so `/epochs` works unchanged next to the wire protocol.
+    pub fn serve_state(&self) -> ServeState {
+        self.state.clone()
+    }
+
+    /// Drain and stop: refuse new connections, shut every socket down,
+    /// apply everything already queued, cut a final epoch from any
+    /// pending partial batch, then join all threads.
+    pub fn shutdown(mut self) -> ServerReport {
+        self.shutdown_inner().unwrap_or_default()
+    }
+
+    fn shutdown_inner(&mut self) -> Option<ServerReport> {
+        let ingest = self.ingest_join.take()?;
+        self.stop.store(true, Relaxed);
+        // Wake the blocking accept() so it can observe the stop flag;
+        // its exit drops the master msg sender.
+        let _ = TcpStream::connect(self.addr);
+        // Shut down every live socket: readers unblock, forward their
+        // Disconnects and drop their senders.
+        for (_, s) in self.sockets.lock().unwrap_or_else(|e| e.into_inner()).drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.tick_join.take() {
+            let _ = j.join();
+        }
+        // All senders gone → the ingest thread drains the queue, cuts
+        // the final epoch and returns its report.
+        ingest.join().ok()
+    }
+}
+
+impl Drop for LouvainServer {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    sockets: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    msg_tx: SyncSender<Msg>,
+    outbox_depth: usize,
+) {
+    let mut next_id = 0u64;
+    for conn in listener.incoming() {
+        if stop.load(Relaxed) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let conn_id = next_id;
+        next_id += 1;
+        if let Ok(clone) = stream.try_clone() {
+            sockets.lock().unwrap_or_else(|e| e.into_inner()).insert(conn_id, clone);
+        }
+        let tx = msg_tx.clone();
+        let sockets = Arc::clone(&sockets);
+        let spawned = std::thread::Builder::new()
+            .name(format!("gve-srv-conn-{conn_id}"))
+            .spawn(move || {
+                sites::server_connections_opened().inc();
+                sites::server_connections_active().add(1);
+                reader_loop(conn_id, stream, &tx, outbox_depth);
+                // Reader done (EOF, error, or protocol violation):
+                // tell ingest, then forget the socket.
+                let _ = tx.send(Msg::Disconnect { conn: conn_id });
+                sockets.lock().unwrap_or_else(|e| e.into_inner()).remove(&conn_id);
+                sites::server_connections_active().sub(1);
+            });
+        if spawned.is_err() {
+            sockets.lock().unwrap_or_else(|e| e.into_inner()).remove(&conn_id);
+        }
+    }
+}
+
+/// Parse frames off one connection until EOF or a violation.
+fn reader_loop(conn: u64, mut stream: TcpStream, tx: &SyncSender<Msg>, outbox_depth: usize) {
+    let _ = stream.set_nodelay(true);
+
+    // Handshake: the first frame must be a Hello.  Violations here are
+    // answered directly on the socket — no writer thread exists yet.
+    let role = match super::frame::read_frame(&mut stream) {
+        Ok(Some(Frame::Hello { role })) => role,
+        Ok(Some(_)) | Ok(None) => {
+            send_error_direct(&mut stream, ERR_UNEXPECTED_TYPE, "expected hello");
+            return;
+        }
+        Err(FrameError::Protocol { code, message }) => {
+            send_error_direct(&mut stream, code, &message);
+            return;
+        }
+        Err(FrameError::Io(_)) => return,
+    };
+
+    // Writer thread: drains pre-encoded frames onto the socket.  On
+    // write failure it exits and drops its receiver, so later
+    // try_sends see Disconnected and the ingest thread forgets us.
+    let (outbox_tx, outbox_rx) = sync_channel::<Arc<[u8]>>(outbox_depth);
+    let Ok(wstream) = stream.try_clone() else { return };
+    let writer = std::thread::Builder::new()
+        .name(format!("gve-srv-write-{conn}"))
+        .spawn(move || writer_loop(outbox_rx, wstream));
+    if writer.is_err() {
+        return;
+    }
+    if tx.send(Msg::Connect { conn, role, outbox: outbox_tx.clone() }).is_err() {
+        return;
+    }
+    // Subscribers never send again (except Bye); their reader holds no
+    // outbox so a dropped subscriber's writer can exit immediately.
+    let mut outbox_tx = (role == Role::Ingest).then_some(outbox_tx);
+
+    loop {
+        match super::frame::read_frame(&mut stream) {
+            Ok(None) => return, // clean EOF
+            Ok(Some(Frame::Ops { ops })) if role == Role::Ingest => {
+                sites::server_frames_rx().inc();
+                sites::server_ops_rx().add(ops.len() as u64);
+                let msg = Msg::Ops { conn, ops };
+                // Backpressure: a full queue blocks this reader, which
+                // stops draining the socket and stalls the client.
+                match tx.try_send(msg) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(msg)) => {
+                        sites::server_ingest_stalls().inc();
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Ok(Some(Frame::Bye)) => {
+                sites::server_frames_rx().inc();
+                if tx.send(Msg::Bye { conn }).is_err() {
+                    return;
+                }
+                // Drop our outbox clone: once ingest releases its
+                // sender after the final ack, the writer drains and
+                // half-closes, handing the client its EOF.
+                outbox_tx = None;
+            }
+            Ok(Some(_)) => {
+                sites::server_frames_rx().inc();
+                send_error_outbox(&outbox_tx, ERR_UNEXPECTED_TYPE, "unexpected frame type");
+                return;
+            }
+            Err(FrameError::Protocol { code, message }) => {
+                send_error_outbox(&outbox_tx, code, &message);
+                return;
+            }
+            Err(FrameError::Io(_)) => return, // abrupt disconnect
+        }
+    }
+}
+
+fn send_error_direct(stream: &mut TcpStream, code: u16, message: &str) {
+    use std::io::Write as _;
+    sites::server_errors_tx().inc();
+    let bytes = super::frame::encode_frame(&Frame::Error { code, message: message.into() });
+    let _ = stream.write_all(&bytes);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn send_error_outbox(outbox: &Option<SyncSender<Arc<[u8]>>>, code: u16, message: &str) {
+    if let Some(tx) = outbox {
+        sites::server_errors_tx().inc();
+        let _ = tx.try_send(encoded(&Frame::Error { code, message: message.into() }));
+    }
+}
+
+fn writer_loop(rx: Receiver<Arc<[u8]>>, mut stream: TcpStream) {
+    use std::io::Write as _;
+    while let Ok(frame) = rx.recv() {
+        if stream.write_all(&frame).is_err() {
+            return;
+        }
+    }
+    // All senders released: everything queued is flushed; half-close
+    // so a draining client sees EOF after the final frame.
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// The single-writer loop: owns the service for the daemon's lifetime.
+fn ingest_loop(
+    g0: Csr,
+    cfg: ServiceConfig,
+    rx: Receiver<Msg>,
+    boot_tx: std::sync::mpsc::Sender<SnapshotHandle>,
+    summary: Arc<Mutex<crate::service::ServiceSummary>>,
+    recent: Arc<Mutex<crate::service::RecentEpochs>>,
+) -> ServerReport {
+    let mut svc = CommunityService::new(g0, cfg);
+    let mut prev = svc.snapshot();
+    *summary.lock().unwrap_or_else(|e| e.into_inner()) = svc.metrics().summary();
+    recent.lock().unwrap_or_else(|e| e.into_inner()).push(RecentEpoch::of(&prev));
+    // If start() already gave up, connections can't exist; keep going
+    // anyway so shutdown still joins a live thread.
+    let _ = boot_tx.send(svc.handle());
+
+    let mut conns: HashMap<u64, ConnState> = HashMap::new();
+    let mut subs: HashMap<u64, SyncSender<Arc<[u8]>>> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Connect { conn, role, outbox } => {
+                let welcome = encoded(&Frame::Welcome {
+                    version: PROTOCOL_VERSION,
+                    epoch: prev.epoch,
+                });
+                match role {
+                    Role::Ingest => {
+                        if outbox.try_send(welcome).is_ok() {
+                            conns.insert(
+                                conn,
+                                ConnState { outbox, accepted: 0, rejected: 0, ack_dirty: false },
+                            );
+                        }
+                    }
+                    Role::Subscribe => {
+                        // Prime with Welcome + the current full epoch;
+                        // deltas stream from here on.
+                        let snap_frame = encoded(&full_snapshot_frame(&prev));
+                        if outbox.try_send(welcome).is_ok()
+                            && outbox.try_send(snap_frame).is_ok()
+                        {
+                            sites::server_snapshots_tx().inc();
+                            subs.insert(conn, outbox);
+                        }
+                    }
+                }
+            }
+            Msg::Ops { conn, ops } => {
+                let rejected_before = svc.metrics().ops_rejected;
+                let mut sp =
+                    trace::span("server.ingest", Category::Server, [conn, ops.len() as u64, 0, 0]);
+                let edge_ops = ops
+                    .iter()
+                    .filter(|o| !matches!(o, StreamOp::Commit))
+                    .count() as u64;
+                for op in ops {
+                    if let Some(snap) = svc.submit(op) {
+                        publish(&svc, &snap, &mut prev, &mut subs, &summary, &recent);
+                    }
+                }
+                let rejected = svc.metrics().ops_rejected - rejected_before;
+                if let Some(g) = sp.as_mut() {
+                    g.args[2] = rejected;
+                }
+                drop(sp);
+                if let Some(c) = conns.get_mut(&conn) {
+                    c.rejected += rejected;
+                    c.accepted += edge_ops - rejected;
+                    c.ack_dirty = !send_ack(c, prev.epoch);
+                }
+            }
+            Msg::Bye { conn } => {
+                if let Some(snap) = svc.flush() {
+                    publish(&svc, &snap, &mut prev, &mut subs, &summary, &recent);
+                }
+                if let Some(mut c) = conns.remove(&conn) {
+                    // Final ack: bounded retries — the writer is
+                    // draining unless the client stopped reading, and
+                    // a client that stopped reading forfeits it.
+                    for _ in 0..200 {
+                        if send_ack(&mut c, prev.epoch) {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                // Dropping ConnState releases the outbox; the writer
+                // flushes and half-closes.
+                subs.remove(&conn);
+            }
+            Msg::Disconnect { conn } => {
+                conns.remove(&conn);
+                subs.remove(&conn);
+            }
+            Msg::Tick => {
+                if let Some(snap) = svc.poll() {
+                    publish(&svc, &snap, &mut prev, &mut subs, &summary, &recent);
+                }
+                for c in conns.values_mut() {
+                    if c.ack_dirty {
+                        c.ack_dirty = !send_ack(c, prev.epoch);
+                    }
+                }
+            }
+        }
+    }
+
+    // Every sender is gone (accept loop, tick, all readers): the recv
+    // above has already drained everything that was queued.  Cut any
+    // pending partial batch into a final epoch so no admitted op is
+    // lost, then report.
+    if let Some(snap) = svc.flush() {
+        publish(&svc, &snap, &mut prev, &mut subs, &summary, &recent);
+    }
+    *summary.lock().unwrap_or_else(|e| e.into_inner()) = svc.metrics().summary();
+    let m = svc.metrics();
+    ServerReport {
+        ops_accepted: m.ops_ingested,
+        ops_rejected: m.ops_rejected,
+        epochs_published: m.batches_applied,
+        final_epoch: prev.epoch,
+    }
+}
+
+/// Cumulative ack for one connection; `false` if the outbox was full.
+fn send_ack(c: &mut ConnState, epoch: u64) -> bool {
+    let frame = encoded(&Frame::Ack { accepted: c.accepted, rejected: c.rejected, epoch });
+    !matches!(c.outbox.try_send(frame), Err(TrySendError::Full(_)))
+}
+
+fn full_snapshot_frame(snap: &EpochSnapshot) -> Frame {
+    Frame::Snapshot {
+        epoch: snap.epoch,
+        num_communities: snap.num_communities() as u32,
+        modularity: snap.modularity,
+        membership: snap.membership().to_vec(),
+    }
+}
+
+/// Fan a published epoch out to subscribers and refresh the
+/// introspection state.  Compact delta normally; full snapshot when
+/// the delta would not be compact (renumber-invalidating epochs).
+fn publish(
+    svc: &CommunityService,
+    snap: &Arc<EpochSnapshot>,
+    prev: &mut Arc<EpochSnapshot>,
+    subs: &mut HashMap<u64, SyncSender<Arc<[u8]>>>,
+    summary: &Arc<Mutex<crate::service::ServiceSummary>>,
+    recent: &Arc<Mutex<crate::service::RecentEpochs>>,
+) {
+    let delta = epoch_delta(prev, snap);
+    let full = delta.is_major();
+    let _sp = trace::span(
+        "server.publish",
+        Category::Server,
+        [snap.epoch, delta.changes.len() as u64, subs.len() as u64, full as u64],
+    );
+    if !subs.is_empty() {
+        let frame = if full {
+            full_snapshot_frame(snap)
+        } else {
+            Frame::Delta {
+                epoch: delta.epoch,
+                base_epoch: delta.base_epoch,
+                vertices: delta.vertices as u32,
+                num_communities: delta.num_communities as u32,
+                modularity: delta.modularity,
+                changes: delta.changes,
+            }
+        };
+        let bytes = encoded(&frame);
+        subs.retain(|_, tx| match tx.try_send(Arc::clone(&bytes)) {
+            Ok(()) => {
+                if full {
+                    sites::server_snapshots_tx().inc();
+                } else {
+                    sites::server_deltas_tx().inc();
+                }
+                true
+            }
+            Err(TrySendError::Full(_)) => {
+                // A subscriber that stopped draining must not be able
+                // to slow the epoch stream for everyone else.
+                sites::server_subscribers_dropped().inc();
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        });
+    }
+    *prev = Arc::clone(snap);
+    *summary.lock().unwrap_or_else(|e| e.into_inner()) = svc.metrics().summary();
+    recent.lock().unwrap_or_else(|e| e.into_inner()).push(RecentEpoch::of(snap));
+}

@@ -1,0 +1,502 @@
+//! Length-prefixed binary frames for the serving daemon (PR 9).
+//!
+//! Every frame is `len:u32le` followed by `len` bytes: a one-byte
+//! frame type and a fixed little-endian payload.  Ops frames carry the
+//! `.ups` vocabulary under the same tag bytes as the text format via
+//! the shared [`graph::io`](crate::graph::io) binary op codec, so the
+//! wire and the replay files stay one op language.  See
+//! `rust/src/server/README.md` for the full layout table and the
+//! protocol rules (handshake, acks, backpressure, delta stream).
+//!
+//! Decoding is defensive at both ends of the connection: the length
+//! prefix is validated *before* any allocation and payloads are read
+//! in bounded chunks, so a malicious or corrupt peer can cost at most
+//! [`MAX_FRAME_LEN`] bytes, never a `len`-sized allocation up front.
+
+use crate::graph::delta::StreamOp;
+use crate::graph::io::{decode_ops, encode_op};
+use std::io::Read;
+
+/// Protocol version carried in Welcome frames; bump on layout changes.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Hello magic: the first bytes a server reads from a well-formed peer.
+pub const MAGIC: [u8; 4] = *b"GVL1";
+
+/// Hard ceiling on one frame's body (type byte + payload).  Large
+/// enough for a full-snapshot frame on a 64M-vertex graph, small
+/// enough that a corrupt length prefix cannot ask for the address
+/// space.
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Error-frame codes (the `code` field of [`Frame::Error`]).
+pub const ERR_BAD_HELLO: u16 = 1;
+pub const ERR_MALFORMED: u16 = 2;
+pub const ERR_UNEXPECTED_TYPE: u16 = 3;
+pub const ERR_OVERSIZED: u16 = 4;
+
+const T_HELLO: u8 = 0x01;
+const T_WELCOME: u8 = 0x02;
+const T_OPS: u8 = 0x10;
+const T_ACK: u8 = 0x20;
+const T_ERROR: u8 = 0x21;
+const T_SNAPSHOT: u8 = 0x31;
+const T_DELTA: u8 = 0x32;
+const T_BYE: u8 = 0x40;
+
+/// What a connection is for, declared in its Hello frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Sends Ops frames, receives Acks.
+    Ingest,
+    /// Receives the epoch stream (Snapshot / Delta frames).
+    Subscribe,
+}
+
+impl Role {
+    fn to_byte(self) -> u8 {
+        match self {
+            Role::Ingest => 0,
+            Role::Subscribe => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> Option<Role> {
+        match b {
+            0 => Some(Role::Ingest),
+            1 => Some(Role::Subscribe),
+            _ => None,
+        }
+    }
+}
+
+/// One wire frame, decoded.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server, first frame on every connection.
+    Hello { role: Role },
+    /// Server → client, answers Hello: protocol version + the epoch
+    /// the server is currently publishing.
+    Welcome { version: u16, epoch: u64 },
+    /// Client → server (ingest role): a run of `.ups` ops.
+    Ops { ops: Vec<StreamOp> },
+    /// Server → client (ingest role): cumulative admission state for
+    /// this connection.  `accepted + rejected` equals the edge ops the
+    /// server has fully processed from it (commits carry no ack).
+    Ack { accepted: u64, rejected: u64, epoch: u64 },
+    /// Server → client: protocol violation; the connection closes
+    /// after this frame.
+    Error { code: u16, message: String },
+    /// Server → subscriber: a full membership (on subscribe, and on
+    /// epochs where the delta would not be compact — renumbering).
+    Snapshot { epoch: u64, num_communities: u32, modularity: f64, membership: Vec<u32> },
+    /// Server → subscriber: membership changes vs `base_epoch`.
+    Delta {
+        epoch: u64,
+        base_epoch: u64,
+        vertices: u32,
+        num_communities: u32,
+        modularity: f64,
+        changes: Vec<(u32, u32)>,
+    },
+    /// Client → server: clean end of stream; the server answers with a
+    /// final Ack and releases the connection.
+    Bye,
+}
+
+/// Decode failures: transport errors stay `Io`; everything the peer
+/// got wrong is `Protocol` with an error-frame code, so the server can
+/// echo it back verbatim in a [`Frame::Error`].
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    Protocol { code: u16, message: String },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+            FrameError::Protocol { code, message } => {
+                write!(f, "protocol error {code}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+fn malformed(message: impl Into<String>) -> FrameError {
+    FrameError::Protocol { code: ERR_MALFORMED, message: message.into() }
+}
+
+/// Serialize one frame, length prefix included.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = vec![0u8; 4];
+    match frame {
+        Frame::Hello { role } => {
+            out.push(T_HELLO);
+            out.extend_from_slice(&MAGIC);
+            out.push(role.to_byte());
+        }
+        Frame::Welcome { version, epoch } => {
+            out.push(T_WELCOME);
+            out.extend_from_slice(&version.to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Frame::Ops { ops } => {
+            out.push(T_OPS);
+            out.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+            for op in ops {
+                let mut buf = Vec::new();
+                encode_op(op, &mut buf);
+                out.extend_from_slice(&buf);
+            }
+        }
+        Frame::Ack { accepted, rejected, epoch } => {
+            out.push(T_ACK);
+            out.extend_from_slice(&accepted.to_le_bytes());
+            out.extend_from_slice(&rejected.to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Frame::Error { code, message } => {
+            out.push(T_ERROR);
+            out.extend_from_slice(&code.to_le_bytes());
+            out.extend_from_slice(message.as_bytes());
+        }
+        Frame::Snapshot { epoch, num_communities, modularity, membership } => {
+            out.push(T_SNAPSHOT);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(membership.len() as u32).to_le_bytes());
+            out.extend_from_slice(&num_communities.to_le_bytes());
+            out.extend_from_slice(&modularity.to_le_bytes());
+            for &c in membership {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        Frame::Delta { epoch, base_epoch, vertices, num_communities, modularity, changes } => {
+            out.push(T_DELTA);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&base_epoch.to_le_bytes());
+            out.extend_from_slice(&vertices.to_le_bytes());
+            out.extend_from_slice(&num_communities.to_le_bytes());
+            out.extend_from_slice(&modularity.to_le_bytes());
+            out.extend_from_slice(&(changes.len() as u32).to_le_bytes());
+            for &(v, c) in changes {
+                out.extend_from_slice(&v.to_le_bytes());
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        Frame::Bye => out.push(T_BYE),
+    }
+    let len = (out.len() - 4) as u32;
+    out[..4].copy_from_slice(&len.to_le_bytes());
+    out
+}
+
+/// [`encode_frame`] into the shared-buffer form the daemon fans out
+/// (one encode, N subscriber outboxes).
+pub fn encoded(frame: &Frame) -> std::sync::Arc<[u8]> {
+    encode_frame(frame).into()
+}
+
+/// Read one frame off `r`.  `Ok(None)` is a clean EOF *at a frame
+/// boundary*; EOF mid-frame is an `Io` error (abrupt disconnect).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, FrameError> {
+    let mut lenbuf = [0u8; 4];
+    if !read_exact_or_clean_eof(r, &mut lenbuf)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(lenbuf) as usize;
+    if len == 0 {
+        return Err(malformed("zero-length frame"));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Protocol {
+            code: ERR_OVERSIZED,
+            message: format!("frame length {len} exceeds limit {MAX_FRAME_LEN}"),
+        });
+    }
+    // Chunked body read: the claimed length never becomes an upfront
+    // allocation, so a corrupt prefix costs only what actually arrives.
+    let mut body = Vec::with_capacity(len.min(1 << 16));
+    let mut chunk = [0u8; 8192];
+    while body.len() < len {
+        let want = (len - body.len()).min(chunk.len());
+        match r.read(&mut chunk[..want]) {
+            Ok(0) => {
+                return Err(FrameError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid-frame",
+                )))
+            }
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    decode_frame(body[0], &body[1..]).map(Some)
+}
+
+/// `read_exact`, except zero bytes before the first one is a clean EOF
+/// (`Ok(false)`) rather than an error.
+fn read_exact_or_clean_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool, FrameError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(FrameError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid-frame",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Decode a frame body (`typ` byte already split off).
+pub fn decode_frame(typ: u8, payload: &[u8]) -> Result<Frame, FrameError> {
+    let mut cur = Cursor { buf: payload, off: 0 };
+    let frame = match typ {
+        T_HELLO => {
+            let magic = cur.take(4)?;
+            if magic != MAGIC {
+                return Err(FrameError::Protocol {
+                    code: ERR_BAD_HELLO,
+                    message: format!("bad hello magic {magic:02x?}"),
+                });
+            }
+            let role = Role::from_byte(cur.u8()?).ok_or_else(|| FrameError::Protocol {
+                code: ERR_BAD_HELLO,
+                message: "unknown hello role".into(),
+            })?;
+            Frame::Hello { role }
+        }
+        T_WELCOME => Frame::Welcome { version: cur.u16()?, epoch: cur.u64()? },
+        T_OPS => {
+            let count = cur.u32()? as usize;
+            let ops = decode_ops(cur.rest(), count)
+                .map_err(|e| malformed(format!("ops payload: {e:#}")))?;
+            Frame::Ops { ops }
+        }
+        T_ACK => Frame::Ack { accepted: cur.u64()?, rejected: cur.u64()?, epoch: cur.u64()? },
+        T_ERROR => {
+            let code = cur.u16()?;
+            let message = String::from_utf8_lossy(cur.rest()).into_owned();
+            Frame::Error { code, message }
+        }
+        T_SNAPSHOT => {
+            let epoch = cur.u64()?;
+            let vertices = cur.u32()? as usize;
+            let num_communities = cur.u32()?;
+            let modularity = cur.f64()?;
+            let mut membership = Vec::with_capacity(vertices.min(1 << 20));
+            for _ in 0..vertices {
+                membership.push(cur.u32()?);
+            }
+            cur.finish()?;
+            Frame::Snapshot { epoch, num_communities, modularity, membership }
+        }
+        T_DELTA => {
+            let epoch = cur.u64()?;
+            let base_epoch = cur.u64()?;
+            let vertices = cur.u32()?;
+            let num_communities = cur.u32()?;
+            let modularity = cur.f64()?;
+            let count = cur.u32()? as usize;
+            let mut changes = Vec::with_capacity(count.min(1 << 20));
+            for _ in 0..count {
+                changes.push((cur.u32()?, cur.u32()?));
+            }
+            cur.finish()?;
+            Frame::Delta { epoch, base_epoch, vertices, num_communities, modularity, changes }
+        }
+        T_BYE => Frame::Bye,
+        other => {
+            return Err(FrameError::Protocol {
+                code: ERR_UNEXPECTED_TYPE,
+                message: format!("unknown frame type {other:#04x}"),
+            })
+        }
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            malformed(format!("frame truncated at byte {} (wanted {n} more)", self.off))
+        })?;
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.off..];
+        self.off = self.buf.len();
+        s
+    }
+
+    /// Fixed-layout frames must consume their whole body.
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.off != self.buf.len() {
+            return Err(malformed(format!(
+                "{} trailing bytes after frame body",
+                self.buf.len() - self.off
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: Frame) {
+        let bytes = encode_frame(&f);
+        let mut r = std::io::Cursor::new(bytes);
+        let got = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(got, f);
+        // Clean EOF right after a whole frame.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        round_trip(Frame::Hello { role: Role::Ingest });
+        round_trip(Frame::Hello { role: Role::Subscribe });
+        round_trip(Frame::Welcome { version: PROTOCOL_VERSION, epoch: 42 });
+        round_trip(Frame::Ops {
+            ops: vec![
+                StreamOp::Insert(1, 2, 0.5),
+                StreamOp::Delete(3, 4),
+                StreamOp::Commit,
+            ],
+        });
+        round_trip(Frame::Ops { ops: vec![] });
+        round_trip(Frame::Ack { accepted: 10, rejected: 2, epoch: 3 });
+        round_trip(Frame::Error { code: ERR_MALFORMED, message: "bad ops".into() });
+        round_trip(Frame::Snapshot {
+            epoch: 9,
+            num_communities: 3,
+            modularity: 0.73,
+            membership: vec![0, 1, 2, 1, 0],
+        });
+        round_trip(Frame::Snapshot {
+            epoch: 0,
+            num_communities: 0,
+            modularity: 0.0,
+            membership: vec![],
+        });
+        round_trip(Frame::Delta {
+            epoch: 10,
+            base_epoch: 9,
+            vertices: 5,
+            num_communities: 3,
+            modularity: 0.7,
+            changes: vec![(0, 2), (4, 1)],
+        });
+        round_trip(Frame::Bye);
+    }
+
+    #[test]
+    fn frames_stream_back_to_back() {
+        let mut bytes = encode_frame(&Frame::Bye);
+        bytes.extend(encode_frame(&Frame::Ack { accepted: 1, rejected: 0, epoch: 0 }));
+        let mut r = std::io::Cursor::new(bytes);
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Frame::Bye));
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Ack { accepted: 1, .. })));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        // Zero bytes: clean boundary.
+        assert!(read_frame(&mut std::io::Cursor::new(vec![])).unwrap().is_none());
+        // Partial length prefix: abrupt disconnect.
+        let err = read_frame(&mut std::io::Cursor::new(vec![3u8, 0])).unwrap_err();
+        assert!(matches!(err, FrameError::Io(_)), "{err}");
+        // Full prefix, missing body: abrupt disconnect too.
+        let mut bytes = encode_frame(&Frame::Ack { accepted: 1, rejected: 0, epoch: 0 });
+        bytes.truncate(bytes.len() - 5);
+        let err = read_frame(&mut std::io::Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(err, FrameError::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn malformed_frames_get_protocol_errors() {
+        // Zero-length frame.
+        let err = read_frame(&mut std::io::Cursor::new(vec![0u8; 4])).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_MALFORMED, .. }), "{err}");
+        // Oversized length prefix rejected before any body read.
+        let huge = (u32::MAX).to_le_bytes().to_vec();
+        let err = read_frame(&mut std::io::Cursor::new(huge)).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_OVERSIZED, .. }), "{err}");
+        // Unknown frame type.
+        let err = decode_frame(0x7f, &[]).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_UNEXPECTED_TYPE, .. }), "{err}");
+        // Bad hello magic / role.
+        let err = decode_frame(T_HELLO, b"NOPE\x00").unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_BAD_HELLO, .. }), "{err}");
+        let err = decode_frame(T_HELLO, b"GVL1\x09").unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_BAD_HELLO, .. }), "{err}");
+        // Garbage ops payload (unknown tag).
+        let mut body = 1u32.to_le_bytes().to_vec();
+        body.push(b'x');
+        let err = decode_frame(T_OPS, &body).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_MALFORMED, .. }), "{err}");
+        // Trailing bytes after a fixed-layout body.
+        let err = decode_frame(T_BYE, &[1, 2]).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_MALFORMED, .. }), "{err}");
+        // Truncated snapshot membership.
+        let snap = Frame::Snapshot {
+            epoch: 1,
+            num_communities: 1,
+            modularity: 0.1,
+            membership: vec![0, 0, 0],
+        };
+        let bytes = encode_frame(&snap);
+        let err = decode_frame(bytes[4], &bytes[5..bytes.len() - 2]).unwrap_err();
+        assert!(matches!(err, FrameError::Protocol { code: ERR_MALFORMED, .. }), "{err}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Network serving subsystem (PR 9 tentpole): the long-running daemon
+//! that turns [`CommunityService`](crate::service::CommunityService)
+//! into a system other processes can talk to.
+//!
+//! PR 3 built the single-writer service core and PR 8 shipped the read
+//! half over HTTP (`obs::http` serving the lock-free snapshot handle).
+//! This module is the missing write half plus a push-based read half:
+//!
+//! * [`frame`] — the length-prefixed binary wire protocol.  Ops frames
+//!   speak the `.ups` vocabulary (add / delete / commit) through the
+//!   shared [`graph::io`](crate::graph::io) op codec, so wire streams
+//!   and replay files are one op language.  Full spec (frame layouts,
+//!   backpressure and delta rules) in `rust/src/server/README.md`.
+//! * [`daemon`] — [`LouvainServer`]: one reader thread per connection
+//!   feeding a bounded MPSC queue, a **single-writer ingest thread**
+//!   owning the service, a timer tick driving
+//!   [`poll`](crate::service::CommunityService::poll) (the max-latency
+//!   flush bound finally works unattended — ROADMAP item), and an
+//!   epoch-delta fan-out to subscriber connections with graceful
+//!   drain-on-shutdown.
+//! * [`client`] — [`Client`] (ingest, ack-window backpressure) and
+//!   [`Subscriber`] (delta-stream mirror): the in-process client the
+//!   loopback tests and the bench's `"server"` scenario drive.
+//!
+//! The `louvain_server` binary wraps [`LouvainServer`] with graph
+//! boot, knob parsing and the `/epochs` introspection endpoint
+//! ([`LouvainServer::serve_state`] plugs straight into
+//! [`IntrospectionServer`](crate::obs::http::IntrospectionServer)).
+
+pub mod client;
+pub mod daemon;
+pub mod frame;
+
+pub use client::{Client, ClientReport, EpochUpdate, Subscriber, DEFAULT_ACK_WINDOW};
+pub use daemon::{LouvainServer, ServerConfig, ServerReport};
+pub use frame::{Frame, FrameError, Role, MAX_FRAME_LEN, PROTOCOL_VERSION};

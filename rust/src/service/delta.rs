@@ -1,0 +1,176 @@
+//! Membership deltas between consecutive [`EpochSnapshot`]s (PR 9).
+//!
+//! Subscribers to the serving daemon do not want the full `Vec<u32>`
+//! membership on every epoch — a small churn batch typically reassigns
+//! a handful of vertices, and the delta-screening strategy's affected
+//! seed set is *exactly* the set of vertices whose community changed
+//! (ROADMAP "snapshot deltas" item).  [`epoch_delta`] computes that
+//! set between two snapshots; [`EpochDelta::apply_to`] replays it onto
+//! a mirror membership so a consumer can reconstruct every epoch from
+//! one full snapshot plus the delta stream.
+//!
+//! Renumbering caveat: community ids are *dense per epoch* — an
+//! aggregation pass or a detection run can relabel communities even
+//! where the partition barely moved.  A delta is therefore only
+//! meaningful against the exact `base_epoch` it was computed from;
+//! the server sends a full snapshot instead whenever the delta would
+//! be no cheaper than the membership itself ([`EpochDelta::is_major`]).
+
+use super::snapshot::EpochSnapshot;
+
+/// The membership changes from one published epoch to the next.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EpochDelta {
+    /// Epoch this delta produces when applied onto `base_epoch`.
+    pub epoch: u64,
+    /// Epoch the changes were computed against.
+    pub base_epoch: u64,
+    /// Vertex count of the *new* epoch (growth shows up as trailing
+    /// "changes" for every vertex past the base's vertex count).
+    pub vertices: usize,
+    /// `|Γ|` of the new epoch.
+    pub num_communities: usize,
+    /// Modularity of the new epoch.
+    pub modularity: f64,
+    /// `(vertex, new_community)` pairs, ascending by vertex id.
+    pub changes: Vec<(u32, u32)>,
+}
+
+impl EpochDelta {
+    /// A delta that touches at least half the membership carries no
+    /// savings over a full snapshot frame (each change costs two words
+    /// to one); the server sends a full frame instead.  Renumbering
+    /// cascades — where a relabel flips most ids without moving the
+    /// partition — land here too, which is what makes the subscription
+    /// stream safe across renumber-invalidating epochs.
+    pub fn is_major(&self) -> bool {
+        self.changes.len() * 2 >= self.vertices
+    }
+
+    /// Replay this delta onto a mirror of the base epoch's membership.
+    /// Grows (or shrinks) the mirror to the new vertex count first;
+    /// grown slots are always present in `changes`, so the fill value
+    /// is never observable.
+    pub fn apply_to(&self, membership: &mut Vec<u32>) {
+        membership.resize(self.vertices, 0);
+        for &(v, c) in &self.changes {
+            membership[v as usize] = c;
+        }
+    }
+}
+
+/// Compute the membership changes from `prev` to `next`.
+///
+/// Over the common vertex prefix a change is a differing community id;
+/// every vertex past `prev.vertices` (batch-driven growth) is a change
+/// by definition.  The result lists vertices in ascending order, which
+/// the wire codec and [`EpochDelta::apply_to`] both rely on being
+/// deterministic.
+pub fn epoch_delta(prev: &EpochSnapshot, next: &EpochSnapshot) -> EpochDelta {
+    let pm = prev.membership();
+    let nm = next.membership();
+    let common = pm.len().min(nm.len());
+    let mut changes = Vec::new();
+    for v in 0..common {
+        if pm[v] != nm[v] {
+            changes.push((v as u32, nm[v]));
+        }
+    }
+    for (v, &c) in nm.iter().enumerate().skip(common) {
+        changes.push((v as u32, c));
+    }
+    EpochDelta {
+        epoch: next.epoch,
+        base_epoch: prev.epoch,
+        vertices: next.vertices,
+        num_communities: next.num_communities(),
+        modularity: next.modularity,
+        changes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::snapshot::EpochStats;
+
+    fn snap(epoch: u64, membership: Vec<u32>) -> EpochSnapshot {
+        let n = membership.len();
+        let nc = membership.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut sizes = vec![0usize; nc];
+        for &c in &membership {
+            sizes[c as usize] += 1;
+        }
+        EpochSnapshot::new(epoch, n, 2 * n, 0.5, EpochStats::default(), membership, sizes)
+    }
+
+    #[test]
+    fn delta_lists_changed_and_grown_vertices() {
+        let a = snap(4, vec![0, 1, 0, 1]);
+        let b = snap(5, vec![0, 0, 0, 1, 2, 2]);
+        let d = epoch_delta(&a, &b);
+        assert_eq!(d.epoch, 5);
+        assert_eq!(d.base_epoch, 4);
+        assert_eq!(d.vertices, 6);
+        assert_eq!(d.num_communities, 3);
+        assert_eq!(d.changes, vec![(1, 0), (4, 2), (5, 2)]);
+    }
+
+    #[test]
+    fn apply_reconstructs_the_next_membership() {
+        let a = snap(0, vec![0, 1, 0, 1]);
+        let b = snap(1, vec![0, 0, 0, 1, 2, 2]);
+        let d = epoch_delta(&a, &b);
+        let mut mirror = a.membership().to_vec();
+        d.apply_to(&mut mirror);
+        assert_eq!(mirror, b.membership());
+        // Shrink (renumber drops trailing vertices) round-trips too.
+        let d_back = epoch_delta(&b, &a);
+        d_back.apply_to(&mut mirror);
+        assert_eq!(mirror, a.membership());
+    }
+
+    #[test]
+    fn identical_epochs_yield_an_empty_delta() {
+        let a = snap(7, vec![2, 0, 1]);
+        let b = snap(8, vec![2, 0, 1]);
+        let d = epoch_delta(&a, &b);
+        assert!(d.changes.is_empty());
+        assert!(!d.is_major());
+        let mut mirror = a.membership().to_vec();
+        d.apply_to(&mut mirror);
+        assert_eq!(mirror, b.membership());
+    }
+
+    #[test]
+    fn majority_changes_flag_a_major_delta() {
+        let a = snap(0, vec![0, 0, 0, 0]);
+        // Renumber-style relabel: half the vertices flip.
+        let b = snap(1, vec![1, 0, 1, 0]);
+        let d = epoch_delta(&a, &b);
+        assert_eq!(d.changes.len(), 2);
+        assert!(d.is_major(), "2 changes * 2 >= 4 vertices");
+        let c = snap(1, vec![1, 0, 0, 0]);
+        assert!(!epoch_delta(&a, &c).is_major());
+    }
+
+    #[test]
+    fn deltas_chain_across_many_epochs() {
+        // Reconstruct a whole sequence purely from deltas — the
+        // subscriber contract the loopback e2e test asserts over TCP.
+        let seq = [
+            vec![0, 0, 1, 1],
+            vec![0, 1, 1, 1],
+            vec![0, 1, 1, 1, 2],
+            vec![2, 1, 0, 1, 2],
+            vec![0, 0],
+        ];
+        let snaps: Vec<EpochSnapshot> =
+            seq.iter().enumerate().map(|(i, m)| snap(i as u64, m.clone())).collect();
+        let mut mirror = snaps[0].membership().to_vec();
+        for w in snaps.windows(2) {
+            epoch_delta(&w[0], &w[1]).apply_to(&mut mirror);
+            assert_eq!(mirror, w[1].membership());
+        }
+    }
+}

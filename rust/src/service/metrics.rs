@@ -212,6 +212,72 @@ impl ServiceMetrics {
     }
 }
 
+/// Entries retained by the `/epochs` introspection ring (PR 9): enough
+/// to catch bursts between scrapes without the endpoint body growing
+/// past a few KiB.
+pub const RECENT_EPOCHS_CAP: usize = 32;
+
+/// One `/epochs` ring entry: the shape-level facts of a published
+/// epoch (no membership — that is the subscription stream's job).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecentEpoch {
+    pub epoch: u64,
+    pub vertices: usize,
+    pub edges: usize,
+    pub modularity: f64,
+    pub num_communities: usize,
+    pub stats: EpochStats,
+}
+
+/// Bounded ring of the last [`RECENT_EPOCHS_CAP`] published epochs,
+/// oldest first.  Unlike [`EpochHistory`] (the metrics-side 1024-entry
+/// latency record) this is sized for an HTTP response body: scrapers
+/// polling `/epochs` every few seconds still see every epoch of a
+/// burst (ROADMAP PR-8 follow-on).
+#[derive(Clone, Debug, Default)]
+pub struct RecentEpochs {
+    buf: Vec<RecentEpoch>,
+    start: usize,
+}
+
+impl RecentEpoch {
+    /// Ring entry summarising one published snapshot.
+    pub fn of(snap: &super::snapshot::EpochSnapshot) -> Self {
+        Self {
+            epoch: snap.epoch,
+            vertices: snap.vertices,
+            edges: snap.edges,
+            modularity: snap.modularity,
+            num_communities: snap.num_communities(),
+            stats: snap.stats,
+        }
+    }
+}
+
+impl RecentEpochs {
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, e: RecentEpoch) {
+        if self.buf.len() < RECENT_EPOCHS_CAP {
+            self.buf.push(e);
+        } else {
+            self.buf[self.start] = e;
+            self.start = (self.start + 1) % self.buf.len();
+        }
+    }
+
+    /// Oldest-to-newest iteration over the retained entries.
+    pub fn iter(&self) -> impl Iterator<Item = &RecentEpoch> {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+}
+
 /// `Copy` snapshot of the derived [`ServiceMetrics`] values (PR 8) —
 /// what `/epochs` reports beyond the current [`EpochSnapshot`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -287,6 +353,20 @@ mod tests {
         m.record_initial(stats(0, 999), 0.9);
         m.record_epoch(stats(3, 4), 0.9);
         assert_eq!(m.epoch_percentiles(), EpochPercentiles { p50: 7, p95: 7, p99: 7 });
+    }
+
+    #[test]
+    fn recent_epochs_ring_keeps_the_newest_32() {
+        let mut r = RecentEpochs::default();
+        assert!(r.is_empty());
+        for i in 0..(RECENT_EPOCHS_CAP as u64 + 5) {
+            r.push(RecentEpoch { epoch: i, ..Default::default() });
+        }
+        assert_eq!(r.len(), RECENT_EPOCHS_CAP);
+        let epochs: Vec<u64> = r.iter().map(|e| e.epoch).collect();
+        assert_eq!(epochs[0], 5, "oldest retained is the 6th pushed");
+        assert_eq!(*epochs.last().unwrap(), RECENT_EPOCHS_CAP as u64 + 4);
+        assert!(epochs.windows(2).all(|w| w[1] == w[0] + 1));
     }
 
     #[test]

@@ -42,13 +42,15 @@
 //! [`SnapshotHandle`] and query concurrently, epoch-consistently,
 //! without ever taking the writer's locks.
 
+pub mod delta;
 pub mod ingest;
 pub mod metrics;
 pub mod snapshot;
 pub mod store;
 
+pub use delta::{epoch_delta, EpochDelta};
 pub use ingest::{BatchPolicy, IngestBuffer};
-pub use metrics::{ServiceMetrics, ServiceSummary};
+pub use metrics::{RecentEpoch, RecentEpochs, ServiceMetrics, ServiceSummary};
 pub use snapshot::{EpochSnapshot, EpochStats, SnapshotCell, SnapshotHandle};
 pub use store::GraphStore;
 

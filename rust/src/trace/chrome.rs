@@ -32,6 +32,8 @@ pub fn arg_names(name: &str) -> [&'static str; 4] {
         "epoch.apply" => ["epoch", "batch_ops", "", ""],
         "epoch.detect" => ["epoch", "affected_seeded", "passes", ""],
         "epoch.publish" => ["epoch", "vertices", "", ""],
+        "server.ingest" => ["conn", "ops", "rejected", ""],
+        "server.publish" => ["epoch", "changed", "subscribers", "full"],
         _ => ["a0", "a1", "a2", "a3"],
     }
 }

@@ -82,6 +82,8 @@ pub enum Category {
     Order,
     /// Counter snapshots (instant events carrying `Counters` deltas).
     Counter,
+    /// Serving daemon: wire ingest and epoch fan-out (PR 9).
+    Server,
 }
 
 impl Category {
@@ -95,6 +97,7 @@ impl Category {
             Category::Service => "service",
             Category::Order => "order",
             Category::Counter => "counter",
+            Category::Server => "server",
         }
     }
 }

@@ -203,6 +203,7 @@ fn http_endpoints_answer_over_loopback() {
     let state = ServeState {
         snapshots: Some(svc.handle()),
         summary: Arc::new(Mutex::new(svc.metrics().summary())),
+        ..Default::default()
     };
     let server = IntrospectionServer::start(0, state).expect("bind ephemeral loopback port");
     let addr = server.local_addr();

@@ -1,0 +1,328 @@
+//! Tier-2 integration tests for the PR-9 network serving subsystem:
+//! the wire protocol, the single-writer daemon, and the epoch-delta
+//! subscription stream — all over real loopback TCP.
+//!
+//! The acceptance bar (ISSUE 9): a `.ups` op timeline replayed over
+//! TCP publishes snapshots bit-identical to the same timeline replayed
+//! in process; a subscriber reconstructing membership purely from
+//! delta frames matches every full snapshot; malformed frames, abrupt
+//! disconnects and backpressure stalls leave the daemon serving; and a
+//! shutdown drains cleanly with no admitted op lost.
+
+use gve_louvain::coordinator::dynamic::churn_timeline;
+use gve_louvain::coordinator::service::replay_service;
+use gve_louvain::graph::delta::StreamOp;
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::louvain::dynamic::SeedStrategy;
+use gve_louvain::server::frame::{
+    encode_frame, read_frame, Frame, Role, ERR_OVERSIZED, ERR_UNEXPECTED_TYPE,
+};
+use gve_louvain::server::{Client, LouvainServer, ServerConfig, Subscriber};
+use gve_louvain::service::{BatchPolicy, ServiceConfig};
+use std::io::Write as _;
+use std::net::TcpStream;
+
+const BATCHES: usize = 6;
+const FRAC: f64 = 0.01;
+
+/// Commit-only epoch cuts + single-threaded detection: the replay is
+/// deterministic, so wire and in-process paths must agree bit for bit.
+fn det_cfg() -> ServiceConfig {
+    ServiceConfig {
+        strategy: SeedStrategy::DeltaScreening,
+        policy: BatchPolicy::by_ops(1 << 20),
+        ..Default::default()
+    }
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig { service: det_cfg(), ..Default::default() }
+}
+
+/// Ops frames for each timeline batch, ending in an explicit Commit so
+/// the daemon cuts exactly the timeline's epochs.
+fn batch_frames(tl: &gve_louvain::coordinator::dynamic::ChurnTimeline) -> Vec<Vec<StreamOp>> {
+    tl.batches
+        .iter()
+        .map(|b| b.to_ops().chain(std::iter::once(StreamOp::Commit)).collect())
+        .collect()
+}
+
+/// The tentpole oracle: the TCP-replayed timeline publishes the same
+/// epochs as `replay_service`, bit for bit, and a subscriber's
+/// delta-reconstructed mirror tracks every one of them.
+#[test]
+fn wire_replay_is_bit_identical_to_in_process_replay() {
+    let g0 = generate(GraphFamily::Web, 9, 42);
+    let tl = churn_timeline(&g0, BATCHES, FRAC, 42);
+    let (_, reference) = replay_service(&g0, &tl, det_cfg());
+
+    let server = LouvainServer::start(g0.clone(), server_cfg()).unwrap();
+    let addr = server.local_addr();
+    // Subscribe before ingesting: once connect() returns the priming
+    // snapshot (epoch 0), every later epoch must stream to us.
+    let mut sub = Subscriber::connect(addr).unwrap();
+    assert_eq!(sub.epoch(), 0);
+    assert_eq!(sub.membership().len(), g0.num_vertices());
+
+    let mut client = Client::connect(addr).unwrap();
+    for ops in batch_frames(&tl) {
+        client.send_ops(&ops).unwrap();
+    }
+    let rep = client.finish().unwrap();
+    let total_ops: usize = tl.batches.iter().map(|b| b.len()).sum();
+    assert_eq!(rep.accepted as usize, total_ops);
+    assert_eq!(rep.rejected, 0);
+    assert_eq!(rep.epoch, BATCHES as u64);
+
+    // One event per batch, each bit-identical to the in-process epoch:
+    // same membership (delta-reconstructed or full), same modularity
+    // bits, same community count.
+    for want in &reference {
+        let ev = sub.next_event().unwrap().expect("epoch event before close");
+        assert_eq!(ev.epoch, want.epoch);
+        assert_eq!(sub.epoch(), want.epoch);
+        assert_eq!(sub.membership(), want.membership(), "epoch {}", want.epoch);
+        assert_eq!(
+            sub.modularity().to_bits(),
+            want.modularity.to_bits(),
+            "epoch {} modularity diverged over the wire",
+            want.epoch
+        );
+        assert_eq!(sub.num_communities() as usize, want.num_communities());
+    }
+
+    // The server's own query surface agrees with the last epoch.
+    let last = server.handle().load();
+    assert_eq!(last.epoch, BATCHES as u64);
+    assert_eq!(last.membership(), reference.last().unwrap().membership());
+
+    let report = server.shutdown();
+    assert_eq!(report.ops_accepted as usize, total_ops);
+    assert_eq!(report.ops_rejected, 0);
+    assert_eq!(report.epochs_published, BATCHES as u64);
+    assert_eq!(report.final_epoch, BATCHES as u64);
+}
+
+/// A mirror built purely from the subscription stream equals the full
+/// snapshot a fresh subscriber is primed with at the same epoch.
+#[test]
+fn delta_reconstruction_matches_a_fresh_full_snapshot() {
+    let g0 = generate(GraphFamily::Web, 9, 7);
+    let tl = churn_timeline(&g0, BATCHES, FRAC, 7);
+
+    let server = LouvainServer::start(g0, server_cfg()).unwrap();
+    let addr = server.local_addr();
+    let mut sub = Subscriber::connect(addr).unwrap();
+
+    let mut client = Client::connect(addr).unwrap();
+    for ops in batch_frames(&tl) {
+        client.send_ops(&ops).unwrap();
+    }
+    client.finish().unwrap();
+
+    // Fold the event stream into the mirror up to the final epoch.
+    while sub.epoch() < BATCHES as u64 {
+        sub.next_event().unwrap().expect("epoch event before close");
+    }
+
+    // A subscriber connecting now is primed with a full snapshot of
+    // the same epoch — the deltas must have reconstructed it exactly.
+    let fresh = Subscriber::connect(addr).unwrap();
+    assert_eq!(fresh.epoch(), sub.epoch());
+    assert_eq!(fresh.membership(), sub.membership());
+    assert_eq!(fresh.modularity().to_bits(), sub.modularity().to_bits());
+    assert_eq!(fresh.num_communities(), sub.num_communities());
+
+    server.shutdown();
+}
+
+/// Admitted-but-uncommitted ops survive shutdown: the drain cuts the
+/// pending partial batch into a final epoch before reporting.
+#[test]
+fn shutdown_drains_admitted_ops_without_a_final_commit() {
+    let g0 = generate(GraphFamily::Web, 8, 11);
+    let n = g0.num_vertices() as u32;
+    let server = LouvainServer::start(g0, server_cfg()).unwrap();
+
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let ops: Vec<StreamOp> =
+        (0..40u32).map(|k| StreamOp::Insert(k % n, (k * 7 + 1) % n, 1.0)).collect();
+    client.send_ops(&ops).unwrap();
+    // No Commit and no Bye: sync() proves the server admitted every op
+    // into its pending batch, then the connection just goes away.
+    client.sync().unwrap();
+    assert_eq!(client.acked(), (ops.len() as u64, 0));
+    drop(client);
+
+    let report = server.shutdown();
+    assert_eq!(report.ops_accepted, ops.len() as u64, "admitted ops lost in the drain");
+    assert_eq!(report.epochs_published, 1, "the drain must cut the pending batch");
+    assert_eq!(report.final_epoch, 1);
+}
+
+/// A malformed frame gets an Error answer and a closed connection —
+/// and the daemon keeps serving everyone else.
+#[test]
+fn malformed_frames_are_answered_and_do_not_poison_the_daemon() {
+    let g0 = generate(GraphFamily::Web, 8, 5);
+    let n = g0.num_vertices() as u32;
+    let server = LouvainServer::start(g0, server_cfg()).unwrap();
+    let addr = server.local_addr();
+
+    // Unknown frame type after a valid handshake.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&encode_frame(&Frame::Hello { role: Role::Ingest })).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Some(Frame::Welcome { .. }) => {}
+            other => panic!("expected welcome, got {other:?}"),
+        }
+        s.write_all(&[1, 0, 0, 0, 0x7f]).unwrap(); // len=1, unknown type
+        match read_frame(&mut s).unwrap() {
+            Some(Frame::Error { code, .. }) => assert_eq!(code, ERR_UNEXPECTED_TYPE),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+        assert!(read_frame(&mut s).unwrap().is_none(), "server must close after the error");
+    }
+
+    // Oversized length prefix instead of a Hello.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        match read_frame(&mut s).unwrap() {
+            Some(Frame::Error { code, .. }) => assert_eq!(code, ERR_OVERSIZED),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    // The daemon still serves a well-behaved client afterwards.
+    let mut client = Client::connect(addr).unwrap();
+    client.send_ops(&[StreamOp::Insert(0, n - 1, 1.0), StreamOp::Commit]).unwrap();
+    let rep = client.finish().unwrap();
+    assert_eq!(rep.accepted, 1);
+    assert_eq!(rep.epoch, 1);
+    server.shutdown();
+}
+
+/// An abrupt mid-stream disconnect (no Bye) leaves the daemon healthy:
+/// later clients connect, ingest and finish normally.
+#[test]
+fn abrupt_disconnect_leaves_the_daemon_serving() {
+    let g0 = generate(GraphFamily::Web, 8, 13);
+    let n = g0.num_vertices() as u32;
+    let server = LouvainServer::start(g0, server_cfg()).unwrap();
+    let addr = server.local_addr();
+
+    let mut rude = Client::connect(addr).unwrap();
+    rude.send_ops(&[StreamOp::Insert(0, 1, 1.0)]).unwrap();
+    drop(rude); // FIN mid-stream, no Bye
+
+    let mut client = Client::connect(addr).unwrap();
+    client.send_ops(&[StreamOp::Insert(1, n - 1, 1.0), StreamOp::Commit]).unwrap();
+    let rep = client.finish().unwrap();
+    assert_eq!(rep.accepted, 1);
+    assert!(rep.epoch >= 1);
+    let report = server.shutdown();
+    assert!(report.ops_accepted >= 1);
+}
+
+/// Backpressure end to end: a depth-1 op queue and a tiny ack window
+/// force the stall path on both sides, and nothing is lost.
+#[test]
+fn backpressure_stalls_deliver_every_op() {
+    let g0 = generate(GraphFamily::Web, 7, 29);
+    let n = g0.num_vertices() as u32;
+    let cfg = ServerConfig {
+        queue_depth: 1,
+        outbox_depth: 2,
+        service: ServiceConfig {
+            strategy: SeedStrategy::DeltaScreening,
+            // Frequent epoch cuts keep the single-writer thread busy so
+            // the op queue genuinely fills.
+            policy: BatchPolicy::by_ops(16),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = LouvainServer::start(g0, cfg).unwrap();
+
+    let mut client = Client::connect_with_window(server.local_addr(), 4).unwrap();
+    let total = 400u32;
+    for k in 0..total {
+        client.send_ops(&[StreamOp::Insert(k % n, (k * 13 + 1) % n, 1.0)]).unwrap();
+        assert!(client.in_flight() <= 4, "ack window must bound in-flight ops");
+    }
+    let rep = client.finish().unwrap();
+    assert_eq!(rep.accepted + rep.rejected, total as u64);
+    assert_eq!(rep.rejected, 0);
+
+    let report = server.shutdown();
+    assert_eq!(report.ops_accepted, total as u64);
+    assert!(report.epochs_published >= (total as u64) / 16, "by_ops(16) must keep cutting epochs");
+}
+
+/// The growth guard works over the wire: out-of-range endpoints are
+/// rejected, counted, and reported in the acks — never applied.
+#[test]
+fn growth_guard_rejections_are_accounted_in_acks() {
+    let g0 = generate(GraphFamily::Web, 8, 3);
+    let n = g0.num_vertices();
+    let cfg = ServerConfig {
+        service: ServiceConfig { max_vertices: n, ..det_cfg() },
+        ..Default::default()
+    };
+    let server = LouvainServer::start(g0, cfg).unwrap();
+
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let ops = vec![
+        StreamOp::Insert(0, 1, 1.0),
+        StreamOp::Insert(2, n as u32, 1.0),      // endpoint out of range
+        StreamOp::Insert(3, 4, 1.0),
+        StreamOp::Delete(n as u32 + 7, 0),       // endpoint out of range
+        StreamOp::Commit,
+    ];
+    client.send_ops(&ops).unwrap();
+    let rep = client.finish().unwrap();
+    assert_eq!(rep.accepted, 2);
+    assert_eq!(rep.rejected, 2);
+
+    // The guard held: the published graph never grew past the ceiling.
+    assert_eq!(server.handle().load().vertices, n);
+
+    let report = server.shutdown();
+    assert_eq!(report.ops_accepted, 2);
+    assert_eq!(report.ops_rejected, 2);
+}
+
+/// `serve_state()` plugs the daemon into the PR-8 introspection server:
+/// `/epochs` reports the recent-epoch ring the ingest thread maintains.
+#[test]
+fn introspection_over_the_daemon_reports_the_epoch_ring() {
+    use gve_louvain::obs::http::IntrospectionServer;
+    use std::io::Read as _;
+
+    let g0 = generate(GraphFamily::Web, 8, 17);
+    let n = g0.num_vertices() as u32;
+    let server = LouvainServer::start(g0, server_cfg()).unwrap();
+    let http = IntrospectionServer::start_on(
+        std::net::SocketAddr::from(([127, 0, 0, 1], 0)),
+        server.serve_state(),
+    )
+    .unwrap();
+
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    client.send_ops(&[StreamOp::Insert(0, n - 1, 1.0), StreamOp::Commit]).unwrap();
+    client.finish().unwrap();
+
+    let mut s = TcpStream::connect(http.local_addr()).unwrap();
+    s.write_all(b"GET /epochs HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).unwrap();
+    assert!(body.contains("\"recent\":["), "{body}");
+    assert!(body.contains("\"epoch\":0,"), "boot epoch in the ring: {body}");
+    assert!(body.contains("\"epoch\":1,"), "published epoch in the ring: {body}");
+
+    drop(http);
+    server.shutdown();
+}
