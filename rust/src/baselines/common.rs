@@ -4,6 +4,8 @@
 
 use crate::graph::Csr;
 use crate::louvain::modularity::delta_modularity;
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::team::Exec;
 use std::collections::BTreeMap;
 
 /// One synchronous local-moving sweep: every vertex picks its best
@@ -26,7 +28,8 @@ pub fn sync_sweep(
 
 /// [`sync_sweep`] with an optional monotone constraint (moves only to
 /// lower community ids), the standard BSP oscillation breaker that
-/// distributed Louvain codes apply on alternating sweeps.
+/// distributed Louvain codes apply on alternating sweeps.  Runs the
+/// compute phase serially on the calling thread.
 #[allow(clippy::too_many_arguments)]
 pub fn sync_sweep_opts(
     g: &Csr,
@@ -37,51 +40,98 @@ pub fn sync_sweep_opts(
     colors: Option<(&[u32], u32)>,
     monotone: bool,
 ) -> (Vec<u32>, f64, u64) {
+    sync_sweep_exec(
+        g,
+        membership,
+        k,
+        sigma,
+        m,
+        colors,
+        monotone,
+        ParallelOpts { threads: 1, ..ParallelOpts::default() },
+        Exec::scoped(),
+    )
+}
+
+/// [`sync_sweep_opts`] on an executor (PR 10: the baselines run their
+/// sweeps on the shared [`Team`](crate::parallel::team::Team), same
+/// runtime as the GVE path).  The compute phase fans each vertex's
+/// decision out over `exec` into a per-vertex slot — a pure function of
+/// the class-start snapshot, so any width and any dealing fill the
+/// slots identically — and the apply phase stays serial in ascending
+/// vertex order, the exact order the original serial sweep applied in.
+/// Results are therefore bit-identical to the serial path at every
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn sync_sweep_exec(
+    g: &Csr,
+    membership: &[u32],
+    k: &[f64],
+    sigma: &[f64],
+    m: f64,
+    colors: Option<(&[u32], u32)>,
+    monotone: bool,
+    opts: ParallelOpts,
+    exec: Exec,
+) -> (Vec<u32>, f64, u64) {
+    /// Sentinel community id: "this vertex stays" (or is outside the
+    /// current color class).
+    const NO_MOVE: u32 = u32::MAX;
     let n = g.num_vertices();
     let mut next = membership.to_vec();
     let mut sigma = sigma.to_vec();
     let mut dq_total = 0.0;
     let mut moves = 0u64;
     let n_classes = colors.map(|(_, nc)| nc).unwrap_or(1);
+    let mut decided: Vec<(u32, f64)> = vec![(NO_MOVE, 0.0); n];
 
     for class in 0..n_classes {
         // Compute phase: decisions against the state at class start.
         let snapshot = next.clone();
-        let mut decided: Vec<(usize, u32, f64)> = Vec::new();
-        for i in 0..n {
-            if let Some((cols, _)) = colors {
-                if cols[i] != class {
-                    continue;
+        let snap = &snapshot;
+        let sig = &sigma;
+        exec.run_disjoint_mut(&mut decided, opts, |r, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let i = r.start + off;
+                *slot = (NO_MOVE, 0.0);
+                if let Some((cols, _)) = colors {
+                    if cols[i] != class {
+                        continue;
+                    }
+                }
+                let d = snap[i];
+                let mut table: BTreeMap<u32, f64> = BTreeMap::new();
+                for (j, w) in g.neighbours(i) {
+                    if j as usize == i {
+                        continue;
+                    }
+                    *table.entry(snap[j as usize]).or_insert(0.0) += w as f64;
+                }
+                let k_to_d = table.get(&d).copied().unwrap_or(0.0);
+                let mut best = (d, 0.0f64);
+                for (&c, &k_to_c) in &table {
+                    if c == d {
+                        continue;
+                    }
+                    if monotone && c >= d {
+                        continue;
+                    }
+                    let dq =
+                        delta_modularity(k_to_c, k_to_d, k[i], sig[c as usize], sig[d as usize], m);
+                    if dq > best.1 {
+                        best = (c, dq);
+                    }
+                }
+                if best.0 != d && best.1 > 0.0 {
+                    *slot = (best.0, best.1);
                 }
             }
-            let d = snapshot[i];
-            let mut table: BTreeMap<u32, f64> = BTreeMap::new();
-            for (j, w) in g.neighbours(i) {
-                if j as usize == i {
-                    continue;
-                }
-                *table.entry(snapshot[j as usize]).or_insert(0.0) += w as f64;
+        });
+        // Apply phase: serial, ascending vertex id.
+        for (i, &(c, dq)) in decided.iter().enumerate() {
+            if c == NO_MOVE {
+                continue;
             }
-            let k_to_d = table.get(&d).copied().unwrap_or(0.0);
-            let mut best = (d, 0.0f64);
-            for (&c, &k_to_c) in &table {
-                if c == d {
-                    continue;
-                }
-                if monotone && c >= d {
-                    continue;
-                }
-                let dq = delta_modularity(k_to_c, k_to_d, k[i], sigma[c as usize], sigma[d as usize], m);
-                if dq > best.1 {
-                    best = (c, dq);
-                }
-            }
-            if best.0 != d && best.1 > 0.0 {
-                decided.push((i, best.0, best.1));
-            }
-        }
-        // Apply phase.
-        for (i, c, dq) in decided {
             let d = next[i];
             sigma[d as usize] -= k[i];
             sigma[c as usize] += k[i];
@@ -188,6 +238,43 @@ mod tests {
     fn model_projection_monotone() {
         assert!(cpu_modeled_ns(1_000_000, 1, 32) < 1_000_000);
         assert!(cpu_modeled_ns(1_000_000, 1, 32) > 1_000_000 / 32);
+    }
+
+    #[test]
+    fn exec_sweep_matches_serial_bit_exactly() {
+        // The team-ported compute phase fills per-vertex slots from a
+        // snapshot; the serial apply order is fixed — so width-4 team
+        // sweeps must be bit-identical to the serial path, colored or
+        // not, monotone or not.
+        use crate::parallel::team::Team;
+        let g = generate(GraphFamily::Web, 9, 17);
+        let n = g.num_vertices();
+        let memb: Vec<u32> = (0..n as u32).collect();
+        let k = g.vertex_weights();
+        let sigma = k.clone();
+        let m = g.total_weight();
+        let (colors, nc) = greedy_coloring(&g);
+        let team = Team::new(4);
+        for colored in [false, true] {
+            let cols = colored.then_some((&colors[..], nc));
+            for monotone in [false, true] {
+                let serial = sync_sweep_opts(&g, &memb, &k, &sigma, m, cols, monotone);
+                let teamed = sync_sweep_exec(
+                    &g,
+                    &memb,
+                    &k,
+                    &sigma,
+                    m,
+                    cols,
+                    monotone,
+                    ParallelOpts { threads: 4, ..ParallelOpts::default() },
+                    Exec::team(&team),
+                );
+                assert_eq!(serial.0, teamed.0, "colored={colored} monotone={monotone}");
+                assert_eq!(serial.1.to_bits(), teamed.1.to_bits());
+                assert_eq!(serial.2, teamed.2);
+            }
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! their anti-swap mechanism); map-style tables; **threshold scaling**
 //! (they introduced it); no pruning; full aggregation each pass.
 
-use super::common::{cpu_modeled_ns, greedy_coloring, sync_sweep};
+use super::common::{cpu_modeled_ns, greedy_coloring, sync_sweep_exec};
 use super::{BaselineOutcome, System};
 use crate::graph::Csr;
 use crate::louvain::aggregation::{aggregate_csr_with, AggScratch};
@@ -15,7 +15,8 @@ use crate::louvain::hashtable::TablePool;
 use crate::louvain::modularity::modularity;
 use crate::louvain::params::{LouvainParams, TableKind};
 use crate::louvain::renumber::renumber_communities;
-use crate::parallel::team::Exec;
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::team::{shared_team, Exec};
 use std::time::Instant;
 
 const MAX_PASSES: usize = 10;
@@ -33,10 +34,20 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
     // reused (the pass-workspace contract).
     let mut agg_pool: Option<TablePool> = None;
     let mut agg_scratch = AggScratch::new();
+    // PR 10: colored sweeps run on the process-wide shared team with
+    // the same `pass` span coverage as the GVE path.
+    let team = shared_team(threads.max(1));
+    let exec = Exec::team(&team);
+    let opts = ParallelOpts { threads: threads.max(1), ..ParallelOpts::default() };
 
-    for _pass in 0..MAX_PASSES {
+    for pass in 0..MAX_PASSES {
         let gp: &Csr = owned.as_ref().unwrap_or(g);
         let np = gp.num_vertices();
+        let _pass_span = crate::trace::span(
+            "pass",
+            crate::trace::Category::Pass,
+            [pass as u64, np as u64, gp.num_edges() as u64, threads.max(1) as u64],
+        );
         let (colors, n_colors) = greedy_coloring(gp);
         let k = gp.vertex_weights();
         let mut membership: Vec<u32> = (0..np as u32).collect();
@@ -44,7 +55,9 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
 
         let mut sweeps = 0usize;
         for _ in 0..MAX_SWEEPS {
-            let (next, dq, moves) = sync_sweep(gp, &membership, &k, &sigma, m, Some((&colors, n_colors)));
+            let (next, dq, moves) = sync_sweep_exec(
+                gp, &membership, &k, &sigma, m, Some((&colors, n_colors)), false, opts, exec,
+            );
             membership = next;
             sigma.iter_mut().for_each(|s| *s = 0.0);
             for v in 0..np {

@@ -16,7 +16,8 @@ use crate::louvain::hashtable::TablePool;
 use crate::louvain::modularity::modularity;
 use crate::louvain::params::{LouvainParams, TableKind};
 use crate::louvain::renumber::renumber_communities;
-use crate::parallel::team::Exec;
+use crate::parallel::pool::ParallelOpts;
+use crate::parallel::team::{shared_team, Exec};
 use std::time::Instant;
 
 const MAX_PASSES: usize = 10;
@@ -48,10 +49,21 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
     // alive across passes too).
     let mut agg_pool: Option<TablePool> = None;
     let mut agg_scratch = AggScratch::new();
+    // PR 10: sweeps run on the process-wide shared team — the same
+    // runtime as the GVE path, so Fig-11 comparisons are apples to
+    // apples — with the same `pass` span coverage.
+    let team = shared_team(threads.max(1));
+    let exec = Exec::team(&team);
+    let opts = ParallelOpts { threads: threads.max(1), ..ParallelOpts::default() };
 
-    for _pass in 0..MAX_PASSES {
+    for pass in 0..MAX_PASSES {
         let gp: &Csr = owned.as_ref().unwrap_or(g);
         let np = gp.num_vertices();
+        let _pass_span = crate::trace::span(
+            "pass",
+            crate::trace::Category::Pass,
+            [pass as u64, np as u64, gp.num_edges() as u64, threads.max(1) as u64],
+        );
         let k = gp.vertex_weights();
         let mut membership: Vec<u32> = (0..np as u32).collect();
         let mut sigma = k.clone();
@@ -63,8 +75,9 @@ pub fn run(g: &Csr, threads: usize, _seed: u64) -> BaselineOutcome {
             // Alternate monotone sweeps: the standard BSP oscillation
             // breaker (symmetric pairs would otherwise swap forever).
             let monotone = sweep % 2 == 1;
-            let (next, dq, moves) =
-                super::common::sync_sweep_opts(gp, &membership, &k, &sigma, m, None, monotone);
+            let (next, dq, moves) = super::common::sync_sweep_exec(
+                gp, &membership, &k, &sigma, m, None, monotone, opts, exec,
+            );
             membership = next;
             // Σ is rebuilt from scratch each sweep (the BSP exchange).
             sigma.iter_mut().for_each(|s| *s = 0.0);

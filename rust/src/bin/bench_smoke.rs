@@ -1,7 +1,7 @@
 //! `bench_smoke` — the perf-trajectory smoke runner (PR 1 static
 //! cells, PR 2 dynamic cells, PR 3 service cells, PR 6 scan-engine
 //! cells, PR 7 trace cells, PR 8 metrics cells + regression gate,
-//! PR 9 server cells).
+//! PR 9 server cells, PR 10 late-pass cells).
 //!
 //! Runs GVE-Louvain over every planted [`GraphFamily`] at 1 and 4
 //! threads (warmup + repeats, median), replays a 10-batch / 1%-churn
@@ -24,8 +24,14 @@
 //! frames (wire path: framing, the bounded op queue, the single-writer
 //! ingest thread, acks) vs the same batches through
 //! `coordinator::service::replay_service` in process (direct path),
-//! reported as ops/sec per path plus the wire overhead %.  Output is a
-//! `BENCH_PR9.json` — the fixed yardstick future PRs compare against.
+//! reported as ops/sec per path plus the wire overhead %.  Since PR 10
+//! there is a `"late_pass"` scenario — the adaptive late-pass engine:
+//! the web family with `adaptive_width` off vs on crossed with the
+//! thread counts, reporting the per-pass effective widths the cost
+//! model chose plus the number of team dispatches issued inside pass
+//! windows (from a traced run), so the serial fast path's engagement
+//! on sub-threshold passes is visible in the JSON.  Output is a
+//! `BENCH_PR10.json` — the fixed yardstick future PRs compare against.
 //! Hand-rolled JSON writer; the reader for the gate below is
 //! `bench::json` (the offline registry has no serde).
 //!
@@ -33,13 +39,13 @@
 //! cargo alias):
 //!
 //! ```text
-//! bench_smoke [OUT.json]          # default BENCH_PR9.json
+//! bench_smoke [OUT.json]          # default BENCH_PR10.json
 //! GVE_BENCH_SCALE=-3 bench_smoke  # shift graph scales (quick CI)
 //! GVE_BENCH_REPEATS=5 bench_smoke
 //! bench_smoke --trace slowest.json        # Chrome trace of the
 //!                                         # slowest static cell
-//! bench_smoke --baseline BENCH_PR9.json   # regression gate
-//! bench_smoke --baseline BENCH_PR9.json --noise-pct 15
+//! bench_smoke --baseline BENCH_PR10.json  # regression gate
+//! bench_smoke --baseline BENCH_PR10.json --noise-pct 15
 //! ```
 //!
 //! `--baseline FILE` (PR 8) turns the run into a gate: after writing
@@ -52,8 +58,8 @@
 //! on the baseline commit:
 //!
 //! ```text
-//! git stash && cargo bench-smoke BENCH_PR9_baseline.json && git stash pop
-//! cargo bench-smoke BENCH_PR9.json --baseline BENCH_PR9_baseline.json
+//! git stash && cargo bench-smoke BENCH_PR10_baseline.json && git stash pop
+//! cargo bench-smoke BENCH_PR10.json --baseline BENCH_PR10_baseline.json
 //! ```
 
 use gve_louvain::bench::json::Json;
@@ -160,6 +166,23 @@ struct ServerCell {
     final_modularity: f64,
 }
 
+/// PR 10 late-pass cell: the adaptive engine's width decisions and
+/// dispatch savings, measured.  `pass_widths` is the effective width
+/// the cost model chose for each pass (all equal to `threads` when
+/// `adaptive` is off); `team_jobs_in_passes` counts `team.job` spans
+/// starting inside `pass` windows in a traced run — the dispatch
+/// overhead the serial fast path removes on sub-threshold passes.
+struct LatePassCell {
+    adaptive: bool,
+    threads: usize,
+    median_ns: u64,
+    edges_per_sec: f64,
+    modularity: f64,
+    passes: usize,
+    pass_widths: Vec<usize>,
+    team_jobs_in_passes: usize,
+}
+
 /// PR 8 metrics cell: the live registry's overhead contract, measured.
 /// Same shape as the trace cell — web family, top thread count —
 /// with the process-wide metrics registry enabled (the default) vs
@@ -185,7 +208,7 @@ fn main() {
         .positional
         .first()
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR9.json".into());
+        .unwrap_or_else(|| "BENCH_PR10.json".into());
     let scale = (BASE_SCALE + bench_scale_offset()).max(6) as u32;
     let seed = bench_seed();
     let repeats: usize = std::env::var("GVE_BENCH_REPEATS")
@@ -560,9 +583,73 @@ fn main() {
         }
     }
 
+    // --- Late-pass scenario (PR 10): the adaptive engine, measured.
+    // The web family with `adaptive_width` off vs on crossed with the
+    // thread counts.  Besides the usual median/throughput pair, each
+    // cell records the per-pass effective widths the cost model chose
+    // and — from one traced repeat — how many team jobs were dispatched
+    // inside pass windows, so the serial fast path's zero-dispatch
+    // contract on sub-threshold passes shows up as a hard number (the
+    // off-cell minus the on-cell is the dispatch-overhead delta).
+    let mut late_cells: Vec<LatePassCell> = Vec::new();
+    {
+        let g = generate(GraphFamily::Web, scale, seed);
+        for threads in THREADS {
+            for adaptive in [false, true] {
+                let params = LouvainParams {
+                    threads,
+                    adaptive_width: adaptive,
+                    ..LouvainParams::default()
+                };
+                let algo = GveLouvain::new(params);
+                let _ = algo.run(&g); // warmup
+                let mut samples = Vec::with_capacity(repeats);
+                for _ in 0..repeats {
+                    let t0 = Instant::now();
+                    let _ = algo.run(&g);
+                    samples.push(t0.elapsed().as_nanos() as u64);
+                }
+                // One traced repeat for the width trace + dispatch count.
+                let session = TraceSession::start();
+                let out = algo.run(&g);
+                let trace = session.finish();
+                let windows: Vec<(u64, u64)> = trace
+                    .spans("pass")
+                    .map(|p| (p.start_ns, p.start_ns + p.dur_ns))
+                    .collect();
+                let team_jobs_in_passes = trace
+                    .spans("team.job")
+                    .filter(|j| windows.iter().any(|&(lo, hi)| j.start_ns >= lo && j.start_ns < hi))
+                    .count();
+                let med = median_ns(&samples);
+                let cell = LatePassCell {
+                    adaptive,
+                    threads,
+                    median_ns: med,
+                    edges_per_sec: edges_per_sec(g.num_edges(), med),
+                    modularity: out.modularity,
+                    passes: out.passes,
+                    pass_widths: out.pass_stats.iter().map(|ps| ps.effective_threads).collect(),
+                    team_jobs_in_passes,
+                };
+                eprintln!(
+                    "late adaptive={:<5} t={} {:>12} ns  {:>10.0} e/s  Q={:.4}  w={:?}  jobs-in-pass={}",
+                    cell.adaptive,
+                    cell.threads,
+                    cell.median_ns,
+                    cell.edges_per_sec,
+                    cell.modularity,
+                    cell.pass_widths,
+                    cell.team_jobs_in_passes,
+                );
+                late_cells.push(cell);
+            }
+        }
+    }
+
     let mut json = String::new();
     let _ = writeln!(json, "{{");
-    let _ = writeln!(json, "  \"bench\": \"bench_pr9_smoke\",");
+    let _ = writeln!(json, "  \"bench\": \"bench_pr10_smoke\",");
     let _ = writeln!(json, "  \"unit\": \"directed edge slots per second, median of {repeats}\",");
     let _ = writeln!(json, "  \"scale\": {scale},");
     let _ = writeln!(json, "  \"seed\": {seed},");
@@ -699,6 +786,32 @@ fn main() {
             comma
         );
     }
+    let _ = writeln!(json, "  ]}},");
+    let _ = writeln!(json, "  \"late_pass\": {{\"family\": \"web\", \"results\": [");
+    for (i, c) in late_cells.iter().enumerate() {
+        let comma = if i + 1 < late_cells.len() { "," } else { "" };
+        let widths = c
+            .pass_widths
+            .iter()
+            .map(|w| w.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let _ = writeln!(
+            json,
+            "    {{\"adaptive\": {}, \"threads\": {}, \"median_ns\": {}, \
+             \"edges_per_sec\": {:.1}, \"modularity\": {:.6}, \"passes\": {}, \
+             \"pass_widths\": [{}], \"team_jobs_in_passes\": {}}}{}",
+            c.adaptive,
+            c.threads,
+            c.median_ns,
+            c.edges_per_sec,
+            c.modularity,
+            c.passes,
+            widths,
+            c.team_jobs_in_passes,
+            comma
+        );
+    }
     let _ = writeln!(json, "  ]}}");
     let _ = writeln!(json, "}}");
 
@@ -807,6 +920,16 @@ fn collect_rates(doc: &Json) -> Vec<(String, f64)> {
             c.num("edges_per_sec"),
         ) {
             out.push((format!("scan/hybrid={h}/{sch}/t{t}"), r));
+        }
+    }
+    let late = doc.get("late_pass").and_then(|s| s.get("results")).and_then(Json::as_arr);
+    for c in late.unwrap_or(&[]) {
+        if let (Some(a), Some(t), Some(r)) = (
+            c.get("adaptive").and_then(Json::as_bool),
+            c.num("threads"),
+            c.num("edges_per_sec"),
+        ) {
+            out.push((format!("late_pass/adaptive={a}/t{t}"), r));
         }
     }
     out

@@ -49,7 +49,8 @@ impl Opts {
 
 /// Shared Louvain knob parsing for the binaries: `--threads --seed
 /// --schedule --chunk --table --small-degree --hub-degree
-/// --prefetch-distance`, each defaulting to
+/// --prefetch-distance --adaptive-width --serial-pass-threshold
+/// --width-gain`, each defaulting to
 /// [`LouvainParams::default`].  Unrecognised schedule/table names fall
 /// back to the defaults rather than erroring (consistent with the
 /// tolerant `get_*` accessors above).
@@ -67,6 +68,12 @@ pub fn louvain_params_from(opts: &Opts) -> crate::louvain::LouvainParams {
         hub_degree: opts.get_i("hub-degree", d.hub_degree as i64).max(0) as usize,
         prefetch_distance: opts.get_i("prefetch-distance", d.prefetch_distance as i64).max(0)
             as usize,
+        // Bare `--adaptive-width` works: valueless flags parse as "true".
+        adaptive_width: opts.get("adaptive-width", "false") == "true",
+        serial_pass_threshold: opts
+            .get_i("serial-pass-threshold", d.serial_pass_threshold as i64)
+            .max(0) as usize,
+        width_gain: opts.get_f("width-gain", d.width_gain),
         ..d
     }
 }
@@ -127,6 +134,7 @@ mod tests {
         let o = parse(&[
             "--threads", "4", "--schedule", "degree-bucketed", "--table", "close-kv",
             "--small-degree", "8", "--hub-degree", "512", "--prefetch-distance", "0",
+            "--adaptive-width", "--serial-pass-threshold", "1024", "--width-gain", "2.5",
         ]);
         let p = louvain_params_from(&o);
         assert_eq!(p.threads, 4);
@@ -135,6 +143,9 @@ mod tests {
         assert_eq!(p.small_degree, 8);
         assert_eq!(p.hub_degree, 512);
         assert_eq!(p.prefetch_distance, 0);
+        assert!(p.adaptive_width, "bare --adaptive-width flag turns the engine on");
+        assert_eq!(p.serial_pass_threshold, 1024);
+        assert_eq!(p.width_gain, 2.5);
 
         // Absent / bogus flags fall back to the adopted defaults.
         let d = crate::louvain::LouvainParams::default();
@@ -142,5 +153,8 @@ mod tests {
         assert_eq!(p.schedule, d.schedule);
         assert_eq!(p.small_degree, d.small_degree);
         assert_eq!(p.chunk, d.chunk);
+        assert!(!p.adaptive_width);
+        assert_eq!(p.serial_pass_threshold, d.serial_pass_threshold);
+        assert_eq!(p.width_gain, d.width_gain);
     }
 }

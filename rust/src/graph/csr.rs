@@ -295,6 +295,23 @@ impl HoleyCsr {
     /// reallocating once sized by the largest pass (the last per-pass
     /// allocation on the aggregation path, removed in PR 2).
     pub fn compact_into(&self, out: &mut Csr, opts: ParallelOpts, exec: Exec) -> WorkStats {
+        self.compact_into_spec(out, opts, None, exec)
+    }
+
+    /// [`Self::compact_into`] with an optional re-dealt row copy
+    /// (PR 10): `deal` carries a bucketed
+    /// [`DealSpec`](crate::parallel::schedule::DealSpec) plus the
+    /// position→vertex id map it indexes, so the heavy rows are copied
+    /// first in small dynamic chunks.  Only the row copy is re-dealt —
+    /// the degree gather and prefix sum are O(|V'|) and stay flat.
+    /// Rows are disjoint, so any dealing produces the same graph.
+    pub fn compact_into_spec(
+        &self,
+        out: &mut Csr,
+        opts: ParallelOpts,
+        deal: Option<(crate::parallel::schedule::DealSpec, &[VertexId])>,
+        exec: Exec,
+    ) -> WorkStats {
         let n = self.num_vertices();
         // Used degree per vertex, then exclusive scan (the trailing 0
         // slot becomes the grand total).  No clear() before the resize:
@@ -323,18 +340,28 @@ impl HoleyCsr {
         let tp = RawSend(out.targets.as_mut_ptr());
         let wp = RawSend(out.weights.as_mut_ptr());
         let offs = &out.offsets;
-        exec.run(n, opts, move |range| {
+        let copy_row = move |v: usize| {
             let (tp, wp) = (tp, wp);
-            for v in range {
-                let (ts, ws) = self.edges(v);
-                let lo = offs[v];
-                // SAFETY: [lo, lo+len) regions are disjoint per vertex.
-                unsafe {
-                    std::ptr::copy_nonoverlapping(ts.as_ptr(), tp.0.add(lo), ts.len());
-                    std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
-                }
+            let (ts, ws) = self.edges(v);
+            let lo = offs[v];
+            // SAFETY: [lo, lo+len) regions are disjoint per vertex.
+            unsafe {
+                std::ptr::copy_nonoverlapping(ts.as_ptr(), tp.0.add(lo), ts.len());
+                std::ptr::copy_nonoverlapping(ws.as_ptr(), wp.0.add(lo), ws.len());
             }
-        })
+        };
+        match deal {
+            Some((spec, ids)) => exec.run_ctx_spec(n, opts, spec, |_tid| (), move |_, range| {
+                for pos in range {
+                    copy_row(ids[pos] as usize);
+                }
+            }),
+            None => exec.run(n, opts, move |range| {
+                for v in range {
+                    copy_row(v);
+                }
+            }),
+        }
     }
 }
 

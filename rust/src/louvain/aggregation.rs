@@ -118,7 +118,8 @@ pub fn aggregate_csr_with(
     scratch: &mut AggScratch,
 ) -> AggOutcome {
     let mut graph = Csr::default();
-    let info = aggregate_csr_into(g, membership, n_comm, pool, params, exec, scratch, &mut graph);
+    let info =
+        aggregate_csr_into(g, membership, n_comm, pool, params, None, exec, scratch, &mut graph);
     AggOutcome { graph, counters: info.counters, loops: info.loops }
 }
 
@@ -128,6 +129,17 @@ pub fn aggregate_csr_with(
 /// super-vertex `Csr` is compacted in place and steady-state passes
 /// allocate nothing (PR 2 satellite; previously every pass built a
 /// fresh graph here).
+///
+/// `vertex_order` (PR 10) is the pass's degree-bucketed *vertex*
+/// `ScanOrder` (the one local-moving already uses); when given under
+/// `Schedule::DegreeBucketed`, the degree-proportional vertex loops
+/// (the community-count and total-degree scatters behind
+/// `agg.offsets`) are dealt through it so the heavy tail drains first.
+/// Those loops accumulate with order-independent atomic adds, and the
+/// compact loops copy disjoint rows, so bucketed dealing is
+/// bit-identical to flat dealing (asserted in `tests/late_pass.rs`).
+/// The member-scatter loop building the community-vertices CSR stays
+/// flat: member order there feeds f64 accumulation order in the fill.
 #[allow(clippy::too_many_arguments)]
 pub fn aggregate_csr_into(
     g: &Csr,
@@ -135,6 +147,7 @@ pub fn aggregate_csr_into(
     n_comm: usize,
     pool: &TablePool,
     params: &LouvainParams,
+    vertex_order: Option<&ScanOrder>,
     exec: Exec,
     scratch: &mut AggScratch,
     out: &mut Csr,
@@ -149,6 +162,15 @@ pub fn aggregate_csr_into(
     let mut counters = Counters::default();
     let mut loops = Vec::new();
 
+    // Degree-bucketed dealing for the vertex-space scatters (PR 10):
+    // positions are remapped through the pass's vertex order, so the
+    // heavy tail is dealt first in small dynamic chunks.  Both scatters
+    // accumulate with relaxed atomic adds — visit order cannot change
+    // the sums — so this is purely a scheduling change.
+    let vspec = vertex_order
+        .filter(|o| params.schedule == Schedule::DegreeBucketed && o.ids.len() == n)
+        .map(|o| (o.spec(), &o.ids[..]));
+
     // --- Community-vertices CSR G'_{C'} (lines 3-6).
     let sub_span = |name| crate::trace::span(name, crate::trace::Category::Agg, [n_comm as u64; 4]);
     let community_order_span = sub_span("agg.community_order");
@@ -158,11 +180,19 @@ pub fn aggregate_csr_into(
         let counts_at: &[AtomicUsize] = unsafe {
             &*(scratch.counts.as_mut_slice() as *mut [usize] as *const [AtomicUsize])
         };
-        let s = exec.run(n, opts, |range| {
-            for i in range {
-                counts_at[membership[i] as usize].fetch_add(1, Ordering::Relaxed);
-            }
-        });
+        let s = match vspec {
+            Some((spec, ids)) => exec.run_ctx_spec(n, opts, spec, |_| (), |_, range| {
+                for pos in range {
+                    let i = ids[pos] as usize;
+                    counts_at[membership[i] as usize].fetch_add(1, Ordering::Relaxed);
+                }
+            }),
+            None => exec.run(n, opts, |range| {
+                for i in range {
+                    counts_at[membership[i] as usize].fetch_add(1, Ordering::Relaxed);
+                }
+            }),
+        };
         if params.record_chunks {
             loops.push((params.schedule, s.chunks));
         }
@@ -170,6 +200,10 @@ pub fn aggregate_csr_into(
     exclusive_scan_exec(&mut scratch.counts, params.threads, exec);
     scratch.comm_vertices.reset_with_offsets(&mut scratch.counts);
     {
+        // Deliberately flat even under DegreeBucketed: the member order
+        // this scatter claims per community is the order the fill loop
+        // accumulates f64 weights in — re-dealing it would change
+        // accumulation order and break bucketed-vs-flat bit-exactness.
         let cv = &scratch.comm_vertices;
         let s = exec.run(n, opts, |range| {
             for i in range {
@@ -190,11 +224,19 @@ pub fn aggregate_csr_into(
         let td: &[AtomicUsize] = unsafe {
             &*(scratch.tot_deg.as_mut_slice() as *mut [usize] as *const [AtomicUsize])
         };
-        let s = exec.run(n, opts, |range| {
-            for i in range {
-                td[membership[i] as usize].fetch_add(g.degree(i), Ordering::Relaxed);
-            }
-        });
+        let s = match vspec {
+            Some((spec, ids)) => exec.run_ctx_spec(n, opts, spec, |_| (), |_, range| {
+                for pos in range {
+                    let i = ids[pos] as usize;
+                    td[membership[i] as usize].fetch_add(g.degree(i), Ordering::Relaxed);
+                }
+            }),
+            None => exec.run(n, opts, |range| {
+                for i in range {
+                    td[membership[i] as usize].fetch_add(g.degree(i), Ordering::Relaxed);
+                }
+            }),
+        };
         if params.record_chunks {
             loops.push((params.schedule, s.chunks));
         }
@@ -296,9 +338,17 @@ pub fn aggregate_csr_into(
 
     // --- Compact + normalize row order (prefix-sum over used degrees,
     // then chunked copy; both on `exec`, into the caller's graph).
+    // Under DegreeBucketed the row copy and the per-row sort are dealt
+    // through the fill's community order (PR 10): rows are disjoint, so
+    // draining the heavy-community tail first changes nothing but the
+    // schedule.
     let mut compact_span = sub_span("agg.compact");
-    let s_compact = scratch.holey.compact_into(out, opts, exec);
-    let s = sort_rows_parallel(out, opts, exec);
+    let cdeal = (params.schedule == Schedule::DegreeBucketed)
+        .then_some(&scratch.order)
+        .filter(|o| o.ids.len() == n_comm)
+        .map(|o| (o.spec(), &o.ids[..]));
+    let s_compact = scratch.holey.compact_into_spec(out, opts, cdeal, exec);
+    let s = sort_rows_parallel(out, opts, cdeal, exec);
     if let Some(g) = compact_span.as_mut() {
         g.args = [n_comm as u64, out.num_edges() as u64, 0, 0];
     }
@@ -317,19 +367,36 @@ pub fn aggregate_csr_into(
 /// satellite); longer rows go through the per-thread pair buffer, so
 /// steady-state sorting allocates only when a row outgrows every
 /// previous row on that worker.
-fn sort_rows_parallel(g: &mut Csr, opts: ParallelOpts, exec: Exec) -> crate::parallel::pool::WorkStats {
+/// `deal` (PR 10) optionally re-deals the rows through a bucketed
+/// order (spec + position→row ids): rows are disjoint, so any dealing
+/// yields the same graph.
+fn sort_rows_parallel(
+    g: &mut Csr,
+    opts: ParallelOpts,
+    deal: Option<(DealSpec, &[u32])>,
+    exec: Exec,
+) -> crate::parallel::pool::WorkStats {
     const SMALL_ROW: usize = 8;
     let n = g.num_vertices();
     let offsets = &g.offsets;
     let tp = RawSend(g.targets.as_mut_ptr());
     let wp = RawSend(g.weights.as_mut_ptr());
-    exec.run_ctx(
+    let (spec, ids) = match deal {
+        Some((spec, ids)) => (spec, Some(ids)),
+        None => (DealSpec::Flat, None),
+    };
+    exec.run_ctx_spec(
         n,
         ParallelOpts { chunk: opts.chunk.min(512), ..opts },
+        spec,
         |_tid| Vec::<(u32, f32)>::new(),
         move |buf, range| {
             let (tp, wp) = (tp, wp);
-            for v in range {
+            for pos in range {
+                let v = match ids {
+                    Some(ids) => ids[pos] as usize,
+                    None => pos,
+                };
                 let (lo, hi) = (offsets[v], offsets[v + 1]);
                 // SAFETY: rows are disjoint; each v visited by one chunk.
                 let ts = unsafe { std::slice::from_raw_parts_mut(tp.0.add(lo), hi - lo) };
@@ -633,7 +700,9 @@ mod tests {
             let mut pool_slot = None;
             let pool = TablePool::ensure(&mut pool_slot, TableKind::FarKv, ncomm, 2);
             let fresh = aggregate_csr(&g, &memb, ncomm, pool, &p);
-            aggregate_csr_into(&g, &memb, ncomm, pool, &p, Exec::team(&team), &mut scratch, &mut out);
+            aggregate_csr_into(
+                &g, &memb, ncomm, pool, &p, None, Exec::team(&team), &mut scratch, &mut out,
+            );
             assert_eq!(fresh.graph, out, "ncomm={ncomm}");
             match ptrs {
                 None => ptrs = Some((out.offsets.as_ptr(), out.targets.as_ptr())),

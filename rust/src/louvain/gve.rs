@@ -39,6 +39,10 @@ pub struct PassStats {
     pub move_ns: u64,
     pub agg_ns: u64,
     pub other_ns: u64,
+    /// Width this pass actually ran at (PR 10): `params.threads` for
+    /// fixed-width runs; the cost model's pick — down to 1 for the
+    /// dispatch-free serial fast path — when `adaptive_width` is on.
+    pub effective_threads: usize,
     /// Total accepted ΔQ.
     pub dq: f64,
     /// Work-counter delta of *this pass* (move + aggregation; PR 7 —
@@ -216,7 +220,8 @@ impl GveLouvain {
             renumber_scratch,
             scan_order,
         } = ws;
-        let exec = Exec::team(team.as_deref().expect("prepare built the team"));
+        let team = team.as_deref().expect("prepare built the team");
+        let exec = Exec::team(team);
         let pool = pool.as_ref().expect("prepare built the pool");
 
         let opts = ParallelOpts {
@@ -230,6 +235,12 @@ impl GveLouvain {
         let aux_opts = ParallelOpts { record: false, ..opts };
         let mut tau = p.tolerance;
 
+        // Adaptive late-pass engine (PR 10): snapshot the team's
+        // cumulative per-worker busy slots around each pass; the deltas
+        // feed the next pass's width choice.
+        let mut busy_before = if p.adaptive_width { team.worker_busy_ns() } else { Vec::new() };
+        let mut prev_busy: Option<Vec<u64>> = None;
+
         for pass in 0..p.max_passes {
             // Super-vertex graph ping-pong: read one slot, aggregate
             // into the other — no per-pass graph allocation.
@@ -241,11 +252,24 @@ impl GveLouvain {
                 (&*super_b, &mut *super_a)
             };
             let np = gp.num_vertices();
+
+            // Pick this pass's effective width (PR 10).  `w == threads`
+            // with identical params/opts/exec when adaptive is off; the
+            // serial fast path swaps in the inline scoped executor — no
+            // dispatch, no barrier, no `team.job` span, and (at one
+            // thread) bit-identical chunk dealing to the team path.
+            let w = choose_width(p, pass, np, gp.num_edges(), prev_busy.as_deref());
+            let serial = p.adaptive_width && w == 1;
+            let pass_params = LouvainParams { threads: w, ..p.clone() };
+            let pass_opts = ParallelOpts { threads: w, ..opts };
+            let pass_aux = ParallelOpts { record: false, ..pass_opts };
+            let pass_exec = if serial { Exec::scoped() } else { exec };
+
             let t_pass = Instant::now();
             let _pass_span = trace::span(
                 "pass",
                 trace::Category::Pass,
-                [pass as u64, np as u64, gp.num_edges() as u64, 0],
+                [pass as u64, np as u64, gp.num_edges() as u64, w as u64],
             );
 
             // Init: K', Σ', C' (Algorithm 1 lines 4-5) into the reused
@@ -254,9 +278,9 @@ impl GveLouvain {
             // scaling replay like the PR-1 layout expects.
             match (&seed, pass) {
                 (Some(s), 0) => begin_pass_seeded(membership, affected, s.membership, s.affected),
-                _ => begin_pass_par(membership, affected, np, aux_opts, exec),
+                _ => begin_pass_par(membership, affected, np, pass_aux, pass_exec),
             }
-            let stats = gp.vertex_weights_into(k, opts, exec);
+            let stats = gp.vertex_weights_into(k, pass_opts, pass_exec);
             if p.record_chunks {
                 result.loops.push((p.schedule, stats.chunks));
             }
@@ -264,7 +288,7 @@ impl GveLouvain {
                 // Warm start: Σ'[c] = Σ K'[v] over members of c.
                 sigma.clear();
                 sigma.resize(np, 0.0);
-                scatter_add_f64(&membership[..], &k[..], &mut sigma[..], aux_opts, exec);
+                scatter_add_f64(&membership[..], &k[..], &mut sigma[..], pass_aux, pass_exec);
             } else {
                 // Singleton start: Σ' is a copy of K'.
                 sigma.clear();
@@ -275,7 +299,7 @@ impl GveLouvain {
             // vertex ids once into low/mid/high-degree buckets; the
             // local-moving iterations reuse the order unchanged.
             let order = if p.schedule == Schedule::DegreeBucketed {
-                scan_order.build_exec(np, p.small_degree, p.hub_degree, |v| gp.degree(v), aux_opts, exec);
+                scan_order.build_exec(np, p.small_degree, p.hub_degree, |v| gp.degree(v), pass_aux, pass_exec);
                 Some(&*scan_order)
             } else {
                 None
@@ -291,11 +315,11 @@ impl GveLouvain {
                 &mut sigma[..],
                 &mut affected[..],
                 pool,
-                p,
+                &pass_params,
                 m,
                 tau,
                 order,
-                exec,
+                pass_exec,
             );
             if let Some(g) = move_span.as_mut() {
                 g.args = [pass as u64, mv.iterations as u64, mv.counters.moves_applied, 0];
@@ -307,7 +331,7 @@ impl GveLouvain {
 
             // Community count + convergence checks (lines 7-9).
             let n_comm =
-                renumber_communities_exec(&mut membership[..], renumber_scratch, aux_opts, exec);
+                renumber_communities_exec(&mut membership[..], renumber_scratch, pass_aux, pass_exec);
             let converged = mv.iterations <= 1;
             let low_shrink = (n_comm as f64) / (np as f64) > p.aggregation_tolerance;
 
@@ -315,7 +339,7 @@ impl GveLouvain {
             // a parallel loop in the paper, recorded for the replay).
             {
                 let pass_memb: &[u32] = &membership[..];
-                let stats = exec.run_disjoint_mut(&mut result.membership, opts, |_r, chunk| {
+                let stats = pass_exec.run_disjoint_mut(&mut result.membership, pass_opts, |_r, chunk| {
                     for c in chunk.iter_mut() {
                         *c = pass_memb[*c as usize];
                     }
@@ -333,6 +357,7 @@ impl GveLouvain {
                 move_ns,
                 agg_ns: 0,
                 other_ns: 0,
+                effective_threads: w,
                 dq: mv.dq_total,
                 counters: mv.counters,
             };
@@ -353,11 +378,19 @@ impl GveLouvain {
             let _agg_span =
                 trace::span("agg", trace::Category::Agg, [pass as u64, n_comm as u64, 0, 0]);
             let agg_info = match p.aggregation {
-                AggregationKind::Csr => {
-                    aggregate_csr_into(gp, &membership[..], n_comm, pool, p, exec, agg, next)
-                }
+                AggregationKind::Csr => aggregate_csr_into(
+                    gp,
+                    &membership[..],
+                    n_comm,
+                    pool,
+                    &pass_params,
+                    order,
+                    pass_exec,
+                    agg,
+                    next,
+                ),
                 AggregationKind::TwoDim => {
-                    let o = aggregate_2d_with(gp, &membership[..], n_comm, pool, p, exec);
+                    let o = aggregate_2d_with(gp, &membership[..], n_comm, pool, &pass_params, pass_exec);
                     *next = o.graph;
                     AggInfo { counters: o.counters, loops: o.loops }
                 }
@@ -382,6 +415,17 @@ impl GveLouvain {
             snapshot_pass_counters(pass, &stats);
             result.pass_stats.push(stats);
             result.passes = pass + 1;
+
+            // This pass's per-worker busy split, for the next width
+            // choice.  A serial pass advances no team slot — the deltas
+            // are all zero and the refinement guard skips them.
+            if p.adaptive_width {
+                let now = team.worker_busy_ns();
+                prev_busy = Some(
+                    now.iter().zip(&busy_before).map(|(a, b)| a.saturating_sub(*b)).collect(),
+                );
+                busy_before = now;
+            }
         }
 
         result.num_communities =
@@ -415,18 +459,75 @@ impl GveLouvain {
     }
 }
 
+/// Workload-aware width policy (PR 10, the adaptive late-pass engine).
+///
+/// Inputs are the pass's super-graph size (|V'| and directed edge
+/// slots) plus the previous pass's measured per-worker busy-ns split
+/// from the [`Team`](crate::parallel::team::Team) stats slots.  Policy:
+///
+/// * adaptive off (the default) or `threads == 1`: always full width —
+///   behaviour is byte-identical to earlier PRs.
+/// * `edges <= serial_pass_threshold`: width 1, and the pass loop takes
+///   the **serial fast path** (`Exec::scoped` at one thread — no
+///   dispatch, no barrier, no `team.job`, worker-0 scratch).  Checked
+///   on pass 0 too, so the threshold boundary is deterministic.
+/// * pass 0 above the threshold: full width (the input graph is the
+///   one workload the caller sized `threads` for).
+/// * later passes: a linear model grants one worker per
+///   `serial_pass_threshold × width_gain` units of demand
+///   (`max(edges, |V'|)` — init/renumber loops are vertex-bound), then
+///   a shrink-only refinement caps the width at the number of workers
+///   the *previous* pass kept meaningfully busy (busy-ns within 8× of
+///   the busiest), so a pass whose predecessor starved most of the
+///   team does not wake it again.
+///
+/// Width only changes scheduling, never results: every pass loop is
+/// order-deterministic per row at any width (asserted across families
+/// and thread counts in `tests/late_pass.rs`).
+fn choose_width(
+    p: &LouvainParams,
+    pass: usize,
+    vertices: usize,
+    edges: usize,
+    prev_busy: Option<&[u64]>,
+) -> usize {
+    let full = p.threads.max(1);
+    if !p.adaptive_width || full == 1 {
+        return full;
+    }
+    if edges <= p.serial_pass_threshold {
+        return 1;
+    }
+    if pass == 0 {
+        return full;
+    }
+    let gain = if p.width_gain > 0.0 { p.width_gain } else { 1.0 };
+    let unit = (p.serial_pass_threshold.max(1) as f64) * gain;
+    let demand = edges.max(vertices);
+    let mut w = ((demand as f64 / unit).ceil() as usize).clamp(1, full);
+    if let Some(busy) = prev_busy {
+        let top = busy.iter().copied().max().unwrap_or(0);
+        if top > 0 {
+            let active = busy.iter().filter(|&&b| b.saturating_mul(8) >= top).count();
+            w = w.min(active.max(1));
+        }
+    }
+    w
+}
+
 /// Emit the finished pass's `Counters` snapshot as a trace instant so a
-/// Perfetto timeline carries the per-pass small/large path split next to
-/// the `pass` span it belongs to (PR 7).
+/// Perfetto timeline carries the per-pass small/large path split — and,
+/// since PR 10, the width the pass ran at — next to the `pass` span it
+/// belongs to (PR 7).
 fn snapshot_pass_counters(pass: usize, stats: &PassStats) {
     trace::instant(
         "pass.counters",
         trace::Category::Counter,
         [
             pass as u64,
+            stats.effective_threads as u64,
             stats.counters.small_path_scans,
             stats.counters.large_path_scans,
-            stats.counters.table_ops,
         ],
     );
 }
@@ -616,6 +717,57 @@ mod tests {
         // outside passes).
         assert!(covered <= out.total_ns);
         assert!(covered * 10 >= out.total_ns * 5, "covered={covered} total={}", out.total_ns);
+    }
+
+    #[test]
+    fn first_pass_fraction_divides_by_total_wall_time() {
+        // Hand-built result with a measurable non-pass tail (setup +
+        // final renumber): the fraction is pass-0 time over *total*
+        // wall time, not over the pass-stats sum — 500/1000 here, not
+        // 500/700.
+        let result = LouvainResult {
+            total_ns: 1_000,
+            pass_stats: vec![
+                PassStats { move_ns: 300, agg_ns: 100, other_ns: 100, ..Default::default() },
+                PassStats { move_ns: 100, agg_ns: 50, other_ns: 50, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert!((result.first_pass_fraction() - 0.5).abs() < 1e-12);
+        // No passes → 0, and the max(1) guard keeps an empty result finite.
+        assert_eq!(LouvainResult::default().first_pass_fraction(), 0.0);
+    }
+
+    #[test]
+    fn choose_width_policy_shape() {
+        let p = LouvainParams {
+            adaptive_width: true,
+            threads: 8,
+            serial_pass_threshold: 1000,
+            width_gain: 1.0,
+            ..LouvainParams::default()
+        };
+        // Off → always full width.
+        let off = LouvainParams { adaptive_width: false, ..p.clone() };
+        assert_eq!(choose_width(&off, 3, 10, 10, None), 8);
+        // At or below the serial threshold → width 1, pass 0 included.
+        assert_eq!(choose_width(&p, 0, 500, 1000, None), 1);
+        assert_eq!(choose_width(&p, 2, 500, 900, None), 1);
+        // Pass 0 above the threshold → full width.
+        assert_eq!(choose_width(&p, 0, 500, 1001, None), 8);
+        // Later passes: linear in demand, clamped to [1, threads].
+        assert_eq!(choose_width(&p, 1, 100, 2500, None), 3);
+        assert_eq!(choose_width(&p, 1, 100, 1_000_000, None), 8);
+        // Vertex-bound demand counts too (init/renumber are O(|V'|)).
+        assert_eq!(choose_width(&p, 1, 4500, 1001, None), 5);
+        // width_gain scales the per-worker grant.
+        let costly = LouvainParams { width_gain: 2.0, ..p.clone() };
+        assert_eq!(choose_width(&costly, 1, 100, 2500, None), 2);
+        // Shrink-only refinement: capped at the previous pass's active
+        // workers (busy within 8× of the busiest)...
+        assert_eq!(choose_width(&p, 1, 100, 1_000_000, Some(&[800, 700, 90, 0])), 2);
+        // ...but an all-idle previous pass (serial fast path) is ignored.
+        assert_eq!(choose_width(&p, 1, 100, 1_000_000, Some(&[0, 0, 0, 0])), 8);
     }
 
     #[test]

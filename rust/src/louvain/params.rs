@@ -82,6 +82,23 @@ pub struct LouvainParams {
     /// `membership[neighbour]` in the scan loops.  0 disables; a no-op
     /// on targets without a prefetch intrinsic.
     pub prefetch_distance: usize,
+    /// Adaptive late-pass engine (PR 10): when true, each pass picks an
+    /// effective width ≤ `threads` from the pass workload (directed
+    /// edge slots vs `serial_pass_threshold` × `width_gain`), down to a
+    /// dispatch-free serial fast path.  Off by default — fixed-width
+    /// behaviour is bit-identical to earlier PRs, and adaptive runs are
+    /// bit-identical to fixed-width runs anyway (asserted in
+    /// `tests/late_pass.rs`); the knob only changes scheduling.
+    pub adaptive_width: bool,
+    /// Passes with at most this many directed edge slots run serially
+    /// on the calling thread (no team dispatch, no barrier, worker-0
+    /// scratch) when `adaptive_width` is on.
+    pub serial_pass_threshold: usize,
+    /// Directed edge slots each additional worker must pay for, in
+    /// units of `serial_pass_threshold`: the cost model grants
+    /// `ceil(edges / (serial_pass_threshold × width_gain))` workers.
+    /// Larger values shrink the team sooner.
+    pub width_gain: f64,
 }
 
 impl Default for LouvainParams {
@@ -103,6 +120,9 @@ impl Default for LouvainParams {
             small_degree: 16,
             hub_degree: 256,
             prefetch_distance: 8,
+            adaptive_width: false,
+            serial_pass_threshold: 8192,
+            width_gain: 1.0,
         }
     }
 }
@@ -148,6 +168,9 @@ mod tests {
         assert_eq!(p.small_degree, 16);
         assert_eq!(p.hub_degree, 256);
         assert_eq!(p.prefetch_distance, 8);
+        assert!(!p.adaptive_width);
+        assert_eq!(p.serial_pass_threshold, 8192);
+        assert_eq!(p.width_gain, 1.0);
     }
 
     #[test]

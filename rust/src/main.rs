@@ -70,6 +70,8 @@ USAGE: repro <subcommand> [--key value ...]
               [--schedule static|dynamic|guided|auto|degree-bucketed]
               [--chunk C] [--table map|close-kv|far-kv]
               [--small-degree D] [--hub-degree H] [--prefetch-distance P]
+            the adaptive late-pass engine (gve-louvain only):
+              [--adaptive-width] [--serial-pass-threshold N] [--width-gain G]
             and per-pass tracing (gve-louvain only):
               [--trace out.json]  write Chrome trace-event JSON (open in
                                   Perfetto) + print per-pass utilization

@@ -159,6 +159,12 @@ pub struct Team {
     /// Per-worker trace sinks (index 0 = worker tid 1), held strongly so
     /// a parked worker's recorded spans survive between trace sessions.
     sinks: Vec<Arc<TraceSink>>,
+    /// Cumulative per-member busy nanoseconds (index = member tid, the
+    /// caller is 0), cache-padded like the result slots.  Fed by two
+    /// clock reads per member per job; the adaptive late-pass engine
+    /// snapshots this around a pass and feeds the deltas to its width
+    /// cost model (PR 10).
+    busy_slots: Vec<BusySlot>,
 }
 
 impl Team {
@@ -191,7 +197,8 @@ impl Team {
                     .expect("spawn team worker")
             })
             .collect();
-        Self { shared, workers, threads, sinks }
+        let busy_slots = (0..threads).map(|_| BusySlot::default()).collect();
+        Self { shared, workers, threads, sinks, busy_slots }
     }
 
     /// This team's per-worker trace sinks (empty when `threads == 1`).
@@ -208,6 +215,17 @@ impl Team {
     /// team's whole life — the O(1)-spawn guarantee).
     pub fn spawned_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Snapshot of the cumulative per-member busy nanoseconds since
+    /// team creation (`len() == threads()`; index = member tid).
+    /// Monotone per slot — a caller diffs two snapshots to get one
+    /// job's or one pass's per-worker busy split.
+    pub fn worker_busy_ns(&self) -> Vec<u64> {
+        self.busy_slots
+            .iter()
+            .map(|s| s.0.load(std::sync::atomic::Ordering::Relaxed))
+            .collect()
     }
 
     /// Run `f(tid)` on members `0..participants`; caller participates
@@ -314,12 +332,15 @@ impl Team {
         let traced = trace::enabled();
         let job_id = if traced { trace::next_job_id() } else { 0 };
         // Live-registry dispatch accounting (PR 8): the gate is one
-        // relaxed load per *job*; when on, each member pays two clock
-        // reads per job (not per chunk) for the busy-ns counter.
+        // relaxed load per *job*.  Each member pays two clock reads per
+        // job (not per chunk) feeding the team's cumulative busy slots
+        // (the adaptive width model's input, PR 10) and, when the
+        // registry is on, the busy-ns counter.
         let metered = crate::obs::enabled();
         if metered {
             crate::obs::sites::team_jobs_dispatched().inc();
         }
+        let busy_slots = &self.busy_slots;
         let job = |tid: usize| {
             let _busy = if traced {
                 trace::span(
@@ -330,11 +351,13 @@ impl Team {
             } else {
                 None
             };
-            let t_member = if metered { Some(std::time::Instant::now()) } else { None };
+            let t_member = std::time::Instant::now();
             let mut ctx = init(tid);
             let (busy, local) = run_chunks_for_tid(&dealer, tid, opts.record, &mut ctx, &body);
-            if let Some(t0) = t_member {
-                crate::obs::sites::team_worker_busy_ns().add(t0.elapsed().as_nanos() as u64);
+            let elapsed = t_member.elapsed().as_nanos() as u64;
+            busy_slots[tid].0.fetch_add(elapsed, std::sync::atomic::Ordering::Relaxed);
+            if metered {
+                crate::obs::sites::team_worker_busy_ns().add(elapsed);
             }
             if opts.record {
                 // One uncontended lock per member per job (vs the
@@ -437,6 +460,11 @@ impl Drop for Team {
 #[repr(align(64))]
 #[derive(Default)]
 struct Slot(Mutex<SlotData>);
+
+/// Per-member cumulative busy-ns slot (PR 10), padded like [`Slot`].
+#[repr(align(64))]
+#[derive(Default)]
+struct BusySlot(std::sync::atomic::AtomicU64);
 
 #[derive(Default)]
 struct SlotData {
@@ -807,6 +835,29 @@ mod tests {
         let d = shared_team(3);
         assert_eq!(d.spawned_workers(), 2);
         let _ = a_ptr; // may or may not be reused by the allocator
+    }
+
+    #[test]
+    fn busy_slots_accumulate_for_participants_only() {
+        let team = Team::new(4);
+        assert_eq!(team.worker_busy_ns().len(), 4);
+        let before = team.worker_busy_ns();
+        for _ in 0..50 {
+            team.run(100_000, opts(2, Schedule::Static, 4096, false), |r| {
+                let mut acc = 0u64;
+                for i in r {
+                    acc = acc.wrapping_add(std::hint::black_box(i as u64));
+                }
+                std::hint::black_box(acc);
+            });
+        }
+        let after = team.worker_busy_ns();
+        // The caller (tid 0) did real work across 50 jobs; slots are
+        // monotone; non-participants (tid >= width 2) never ran.
+        assert!(after[0] > before[0], "caller slot must advance");
+        assert!(after.iter().zip(&before).all(|(a, b)| a >= b));
+        assert_eq!(after[2], before[2]);
+        assert_eq!(after[3], before[3]);
     }
 
     #[test]

@@ -15,8 +15,8 @@ use std::fmt::Write as _;
 /// instrumentation sites.
 pub fn arg_names(name: &str) -> [&'static str; 4] {
     match name {
-        "pass" => ["pass", "vertices", "edges", ""],
-        "pass.counters" => ["pass", "small_path_scans", "large_path_scans", "table_ops"],
+        "pass" => ["pass", "vertices", "edges", "width"],
+        "pass.counters" => ["pass", "width", "small_path_scans", "large_path_scans"],
         "move" => ["pass", "iterations", "moves", ""],
         "move.iter" => ["iter", "processed", "moves", "pruned"],
         "move.iter.counters" => ["iter", "small_path_scans", "large_path_scans", "table_ops"],

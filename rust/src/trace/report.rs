@@ -104,7 +104,8 @@ fn pct(num: u64, den: u64) -> String {
     }
 }
 
-/// Aligned per-pass table: wall time, parallelism efficiency, small-path
+/// Aligned per-pass table: wall time, effective width (the adaptive
+/// engine's per-pass choice, PR 10), parallelism efficiency, small-path
 /// fraction (from the per-pass `Counters` snapshot in `PassStats`), and
 /// the low/mid/high bucket time split when degree-bucketed dealing ran.
 pub fn utilization_table(result: &LouvainResult, trace: &Trace, threads: usize) -> Table {
@@ -112,7 +113,7 @@ pub fn utilization_table(result: &LouvainResult, trace: &Trace, threads: usize) 
     let mut t = Table::new(
         "per-pass utilization",
         &[
-            "pass", "|V'|", "iters", "wall", "eff%", "small%", "lo%", "mid%", "hi%",
+            "pass", "|V'|", "iters", "w", "wall", "eff%", "small%", "lo%", "mid%", "hi%",
         ],
     );
     for (i, ps) in result.pass_stats.iter().enumerate() {
@@ -127,6 +128,7 @@ pub fn utilization_table(result: &LouvainResult, trace: &Trace, threads: usize) 
             i.to_string(),
             ps.vertices.to_string(),
             ps.iterations.to_string(),
+            ps.effective_threads.to_string(),
             fmt_ns(if u.wall_ns > 0 {
                 u.wall_ns
             } else {

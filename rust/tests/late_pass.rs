@@ -1,0 +1,231 @@
+//! Integration tests for the adaptive late-pass engine (PR 10
+//! acceptance criteria):
+//!
+//! * adaptive width selection never changes results: adaptive-on runs
+//!   are bit-exact (membership and modularity `to_bits`) versus
+//!   fixed-width runs across every `GraphFamily` — at one thread, and
+//!   at four threads when every pass resolves to the serial fast path
+//!   (the one multi-thread configuration where both runs execute every
+//!   pass at the same width; asynchronous local-moving at width > 1 is
+//!   nondeterministic by design, so cross-width comparisons are a
+//!   quality bound, not a bit bound — see `louvain/README.md`);
+//! * the `serial_pass_threshold` boundary is deterministic: a pass at
+//!   exactly the threshold runs serially, one directed edge above it
+//!   runs at full width;
+//! * degree-bucketed dealing of the aggregation offsets/scatter/compact
+//!   loops (through the pass's vertex `ScanOrder`) is bit-identical to
+//!   flat dynamic dealing, at one thread and several;
+//! * a traced adaptive run whose passes all take the serial fast path
+//!   dispatches **zero** team jobs inside pass windows, while a
+//!   fixed-width control dispatches plenty.
+//!
+//! The tracing enabled flag is process-global and `cargo test` runs
+//! tests on multiple threads, so every test here serializes through
+//! [`session_lock`] — including the untraced ones, which would
+//! otherwise record team jobs into a concurrently-active session.
+
+use gve_louvain::graph::generators::{generate, GraphFamily};
+use gve_louvain::graph::Csr;
+use gve_louvain::louvain::aggregation::{aggregate_csr, aggregate_csr_into, AggScratch};
+use gve_louvain::louvain::gve::GveLouvain;
+use gve_louvain::louvain::hashtable::TablePool;
+use gve_louvain::louvain::params::{LouvainParams, TableKind};
+use gve_louvain::parallel::schedule::{ScanOrder, Schedule};
+use gve_louvain::parallel::team::{Exec, Team};
+use gve_louvain::trace::TraceSession;
+use std::sync::{Mutex, MutexGuard};
+
+fn session_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[test]
+fn fixed_width_runs_record_configured_width_per_pass() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 10, 3);
+    let out = GveLouvain::new(LouvainParams::with_threads(2)).run(&g);
+    assert!(!out.pass_stats.is_empty());
+    for (i, ps) in out.pass_stats.iter().enumerate() {
+        assert_eq!(ps.effective_threads, 2, "pass {i}: fixed-width run must record threads");
+    }
+}
+
+#[test]
+fn adaptive_matches_fixed_bit_exactly_single_thread() {
+    let _lock = session_lock();
+    // At one thread the adaptive engine routes every pass through the
+    // serial fast path (inline scoped executor) while the fixed run
+    // dispatches the width-1 team — the two dealings are pinned
+    // bit-identical, so full runs must agree bit-for-bit everywhere.
+    for f in GraphFamily::ALL {
+        let g = generate(f, 9, 7);
+        let fixed = GveLouvain::new(LouvainParams { threads: 1, ..Default::default() }).run(&g);
+        let adaptive = GveLouvain::new(LouvainParams {
+            threads: 1,
+            adaptive_width: true,
+            ..Default::default()
+        })
+        .run(&g);
+        assert_eq!(fixed.membership, adaptive.membership, "{f:?}");
+        assert_eq!(fixed.modularity.to_bits(), adaptive.modularity.to_bits(), "{f:?}");
+        assert_eq!(fixed.passes, adaptive.passes, "{f:?}");
+        for ps in &adaptive.pass_stats {
+            assert_eq!(ps.effective_threads, 1, "{f:?}");
+        }
+    }
+}
+
+#[test]
+fn all_serial_adaptive_at_four_threads_matches_fixed_single_thread() {
+    let _lock = session_lock();
+    // serial_pass_threshold = MAX forces the serial fast path on every
+    // pass of a 4-thread run: each pass then executes at width 1, the
+    // one multi-thread configuration that must be bit-exact against a
+    // plain single-thread run (the final renumber runs at full width in
+    // one and width 1 in the other, and renumbering is deterministic at
+    // any width).
+    for f in GraphFamily::ALL {
+        let g = generate(f, 9, 11);
+        let fixed = GveLouvain::new(LouvainParams { threads: 1, ..Default::default() }).run(&g);
+        let adaptive = GveLouvain::new(LouvainParams {
+            threads: 4,
+            adaptive_width: true,
+            serial_pass_threshold: usize::MAX,
+            ..Default::default()
+        })
+        .run(&g);
+        assert_eq!(fixed.membership, adaptive.membership, "{f:?}");
+        assert_eq!(fixed.modularity.to_bits(), adaptive.modularity.to_bits(), "{f:?}");
+        assert_eq!(fixed.passes, adaptive.passes, "{f:?}");
+        for (i, ps) in adaptive.pass_stats.iter().enumerate() {
+            assert_eq!(ps.effective_threads, 1, "{f:?} pass {i} escaped the serial fast path");
+        }
+    }
+}
+
+#[test]
+fn serial_threshold_boundary_is_deterministic() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 10, 13);
+    let edges0 = g.num_edges();
+    assert!(edges0 > 1);
+    // Exactly at the threshold: pass 0 runs serially.
+    let at = GveLouvain::new(LouvainParams {
+        threads: 4,
+        adaptive_width: true,
+        serial_pass_threshold: edges0,
+        ..Default::default()
+    })
+    .run(&g);
+    assert_eq!(at.pass_stats[0].effective_threads, 1);
+    // One directed edge below it: pass 0 runs at full width.
+    let above = GveLouvain::new(LouvainParams {
+        threads: 4,
+        adaptive_width: true,
+        serial_pass_threshold: edges0 - 1,
+        ..Default::default()
+    })
+    .run(&g);
+    assert_eq!(above.pass_stats[0].effective_threads, 4);
+}
+
+#[test]
+fn bucketed_aggregation_with_vertex_order_matches_dynamic_exactly() {
+    let _lock = session_lock();
+    // The PR 10 extension: the aggregation offsets scatters are dealt
+    // through the pass's vertex ScanOrder and the compact/sort loops
+    // through the fill's community order.  All of them must produce a
+    // bit-identical supergraph versus flat dynamic dealing, at one
+    // thread and several.
+    let g = generate(GraphFamily::Web, 10, 43);
+    let n = g.num_vertices();
+    let memb: Vec<u32> = (0..n).map(|v| (v % 137) as u32).collect();
+    for threads in [1usize, 4] {
+        let pool = TablePool::new(TableKind::FarKv, 137, threads);
+        let base = aggregate_csr(
+            &g,
+            &memb,
+            137,
+            &pool,
+            &LouvainParams { threads, schedule: Schedule::Dynamic, ..Default::default() },
+        );
+        let p = LouvainParams { threads, schedule: Schedule::DegreeBucketed, ..Default::default() };
+        let mut order = ScanOrder::default();
+        order.build(n, p.small_degree, p.hub_degree, |v| g.degree(v));
+        let team = Team::new(threads);
+        let mut scratch = AggScratch::new();
+        let mut out = Csr::default();
+        let info = aggregate_csr_into(
+            &g,
+            &memb,
+            137,
+            &pool,
+            &p,
+            Some(&order),
+            Exec::team(&team),
+            &mut scratch,
+            &mut out,
+        );
+        assert_eq!(base.graph, out, "threads={threads}");
+        assert_eq!(base.counters.edges_scanned_agg, info.counters.edges_scanned_agg);
+    }
+}
+
+#[test]
+fn serial_fast_path_dispatches_no_team_jobs_inside_passes() {
+    let _lock = session_lock();
+    let g = generate(GraphFamily::Web, 10, 17);
+
+    // Count team.job spans that *start inside* a pass window — the
+    // team still legitimately runs outside passes (workspace prepare,
+    // the final full-width renumber).
+    let jobs_in_passes = |trace: &gve_louvain::trace::Trace| {
+        let windows: Vec<(u64, u64)> = trace
+            .spans("pass")
+            .map(|p| (p.start_ns, p.start_ns + p.dur_ns))
+            .collect();
+        trace
+            .spans("team.job")
+            .filter(|j| windows.iter().any(|&(lo, hi)| j.start_ns >= lo && j.start_ns < hi))
+            .count()
+    };
+
+    // All-serial adaptive run: no dispatch, no barrier, no team.job.
+    let session = TraceSession::start();
+    let out = GveLouvain::new(LouvainParams {
+        threads: 4,
+        adaptive_width: true,
+        serial_pass_threshold: usize::MAX,
+        ..Default::default()
+    })
+    .run(&g);
+    let trace = session.finish();
+    assert!(out.passes > 0);
+    assert_eq!(trace.count("pass"), out.passes);
+    assert_eq!(
+        jobs_in_passes(&trace),
+        0,
+        "serial fast path must not dispatch the team inside a pass"
+    );
+    // The pass span and the counters instant both carry the width.
+    for p in trace.spans("pass") {
+        assert_eq!(p.args[3], 1, "pass {} span width", p.args[0]);
+    }
+    for c in trace.events.iter().filter(|e| e.name == "pass.counters") {
+        assert_eq!(c.args[1], 1, "pass {} counters width", c.args[0]);
+    }
+
+    // Fixed-width control at the same thread count: passes dispatch.
+    let session = TraceSession::start();
+    let out = GveLouvain::new(LouvainParams::with_threads(4)).run(&g);
+    let trace = session.finish();
+    assert!(out.passes > 0);
+    assert!(jobs_in_passes(&trace) > 0, "fixed-width control must dispatch team jobs");
+    for p in trace.spans("pass") {
+        assert_eq!(p.args[3], 4, "pass {} span width", p.args[0]);
+    }
+}

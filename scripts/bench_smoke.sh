@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Bench smoke runner: emits BENCH_PR9.json with GVE-Louvain edges/sec
+# Bench smoke runner: emits BENCH_PR10.json with GVE-Louvain edges/sec
 # for every planted GraphFamily at 1 and 4 threads (median of
 # GVE_BENCH_REPEATS, default 3; GVE_BENCH_SCALE shifts graph sizes),
 # the PR-2 dynamic scenario (per-seeding-strategy throughput over a
@@ -15,12 +15,15 @@
 # on the same cell: measured overhead %, contract < 1%), and the PR-9
 # server scenario (the dynamic timeline streamed through a live
 # loopback LouvainServer as binary Ops frames vs the in-process
-# replay: ops/sec per path + the wire's wall-time overhead).
+# replay: ops/sec per path + the wire's wall-time overhead), and the
+# PR-10 late_pass scenario (the adaptive late-pass engine on vs off on
+# the web family: per-pass effective widths chosen by the cost model +
+# the count of team dispatches inside pass windows from a traced run).
 #
 # Usage:
-#   scripts/bench_smoke.sh                 # writes BENCH_PR9.json
+#   scripts/bench_smoke.sh                 # writes BENCH_PR10.json
 #   scripts/bench_smoke.sh out.json        # custom output path
-#   scripts/bench_smoke.sh out.json --baseline BENCH_PR9.json
+#   scripts/bench_smoke.sh out.json --baseline BENCH_PR10.json
 #   scripts/bench_smoke.sh out.json --baseline b.json --noise-pct 15
 #   scripts/bench_smoke.sh out.json --trace slowest.json
 #
@@ -35,13 +38,14 @@
 # Producing a baseline (same runner, same machine): commits before
 # PR 1 carry no Cargo manifests and are not buildable; PR 1's
 # yardstick was BENCH_PR1.json, PR 2's BENCH_PR2.json, PRs 3-5's
-# BENCH_PR3.json, PR 6's BENCH_PR6.json, PR 7's BENCH_PR7.json and
-# PR 8's BENCH_PR8.json (the static "results" array here stays
-# schema-compatible with all of them, so any of those files also works
-# as --baseline input for its sections). From PR 4 on:
+# BENCH_PR3.json, PR 6's BENCH_PR6.json, PR 7's BENCH_PR7.json,
+# PR 8's BENCH_PR8.json and PR 9's BENCH_PR9.json (the static
+# "results" array here stays schema-compatible with all of them, so
+# any of those files also works as --baseline input for its
+# sections). From PR 4 on:
 #   uncommitted changes:  git stash && scripts/bench_smoke.sh base.json \
 #                           && git stash pop \
-#                           && scripts/bench_smoke.sh BENCH_PR9.json --baseline base.json
+#                           && scripts/bench_smoke.sh BENCH_PR10.json --baseline base.json
 #   committed baseline:   git worktree add /tmp/bb <rev>
 #                         (cd /tmp/bb && scripts/bench_smoke.sh /tmp/base.json)
 #                         git worktree remove /tmp/bb
@@ -49,11 +53,13 @@
 # should beat full per batch/epoch, in "scan_engine" hybrid=true
 # should cut table_ops with small_fraction > 0.5 on the web family,
 # "trace"/"metrics" overhead_pct should stay in the low single
-# digits / under 1% respectively, and in "server" the wire path should
+# digits / under 1% respectively, in "server" the wire path should
 # land within a small factor of direct — the detection work dominates
-# the framing at smoke scales.
+# the framing at smoke scales — and in "late_pass" the adaptive cells
+# should show pass_widths shrinking toward 1 on the late passes with
+# team_jobs_in_passes below the fixed-width cells'.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-OUT="${1:-BENCH_PR9.json}"
+OUT="${1:-BENCH_PR10.json}"
 if [ $# -gt 0 ]; then shift; fi
 cargo run --release --manifest-path rust/Cargo.toml --bin bench_smoke -- "$OUT" "$@"
